@@ -1,0 +1,71 @@
+"""Paper Fig. 2: sample-wise convergence — Adam vs 1-bit Adam vs 0/1 Adam,
+same data order, n=4 simulated workers, tiny-GPT2 LM on the structured
+synthetic stream. The claim under test: 0/1 Adam matches the sample-wise
+convergence of the baselines while communicating a fraction of the bits.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.core import OptimizerConfig, schedules as S
+from repro.data import DataConfig, SyntheticLM
+from repro.train import Trainer, TrainerConfig
+
+STEPS = 120
+WORKERS = 4
+BATCH = 8
+SEQ = 32
+
+
+def run_one(optimizer: str):
+    cfg = get("gpt2").smoke
+    lr = S.LinearWarmupExpDecay(peak_lr=2e-3, warmup_steps=20,
+                                decay=0.97, decay_period=20)
+    ocfg = OptimizerConfig(
+        name=optimizer, lr=lr,
+        var_policy=S.AdaptiveFreezePolicy(kappa=4),
+        sync_policy=S.LrProportionalSyncPolicy(
+            warmup_steps=30, double_every=40, max_interval=4),
+        onebit_warmup=30)
+    tr = Trainer(cfg, ocfg, n_workers=WORKERS)
+    params, state = tr.sim_init(jax.random.PRNGKey(0))
+    fn = tr.sim_step_fn()
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=SEQ,
+                                  global_batch=BATCH, seed=17))
+    losses = []
+    for step in range(STEPS):
+        batch = data.batch(step)
+        params, state, met = fn(params, state, batch)
+        losses.append(float(np.asarray(met["loss"]).reshape(-1)[0]))
+    return losses
+
+
+def main():
+    t0 = time.time()
+    curves = {}
+    for o in ("adam", "one_bit_adam", "zero_one_adam"):
+        curves[o] = run_one(o)
+        tail = np.mean(curves[o][-10:])
+        print(f"# {o}: start {curves[o][0]:.3f} -> "
+              f"final(avg last 10) {tail:.3f}")
+    print("step,adam,one_bit_adam,zero_one_adam")
+    for i in range(0, STEPS, 10):
+        print(f"{i},{curves['adam'][i]:.4f},"
+              f"{curves['one_bit_adam'][i]:.4f},"
+              f"{curves['zero_one_adam'][i]:.4f}")
+    a = np.mean(curves["adam"][-10:])
+    z = np.mean(curves["zero_one_adam"][-10:])
+    gap = z - a
+    print(f"# 0/1 Adam final-loss gap vs Adam: {gap:+.4f} nats "
+          f"(paper claim: same sample-wise convergence)")
+    print(f"# elapsed {time.time()-t0:.1f}s")
+    return [("convergence_fig2", 0.0, f"final_gap={gap:.4f}")]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Paper Fig. 4 (+ Fig. 5 ablation): bits/parameter and communication
+rounds over a full training run, per optimizer, from the actual schedule
+machinery + per-leaf comm layouts (no hand-waved formulas).
+
+Reproduces the headline claims: 0/1 Adam cuts data volume by ~87% and
+communication rounds by ~54% vs 1-bit Adam on the BERT-Large recipe.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.core import OptimizerConfig, comm_accounting, make_optimizer
+from repro.core import schedules as S
+from repro.models.layers import abstract_params, param_specs
+from repro.models import transformer as T
+
+
+def schedule_trace(opt_cfg, total_steps):
+    """(sync_steps, var_steps) boolean masks over a training run — pure
+    numpy re-simulation of the jnp policy state machines."""
+    sync, var = [], []
+    sp = opt_cfg.sync_policy
+    vp = opt_cfg.var_policy
+    s_state = tuple(int(np.asarray(x)) for x in sp.init())
+    v_state = vp.init()
+    v_next, v_j, v_stop = 0, 0, False
+    nxt = 0
+    for t in range(total_steps):
+        # sync policy interval (EveryStep == 1)
+        iv = (int(np.asarray(sp.interval(jnp.int32(t))))
+              if hasattr(sp, "interval") else 1)
+        fire_s = t >= nxt
+        if fire_s:
+            nxt = t + iv
+        sync.append(fire_s)
+        # var policy (AdaptiveFreeze with stop rule)
+        v_stop = v_stop or iv > 1
+        fire_v = (t == v_next) and not v_stop
+        if fire_v:
+            gap = 2 ** min(v_j // vp.kappa, 30)
+            v_next = t + gap
+            v_j += 1
+        var.append(fire_v)
+    return np.asarray(sync), np.asarray(var)
+
+
+def run(arch="bert-large", total_steps=100_000, warmup_frac=0.125,
+        double_frac=0.32):
+    cfg = get(arch).config
+    tmpl = T.model_template(cfg)
+    shapes = abstract_params(tmpl)
+    specs = param_specs(tmpl)
+    rows = []
+    d = None
+    for name in ("adam", "one_bit_adam", "zero_one_adam",
+                 "zero_one_adam_no_skip"):
+        oname = name.replace("_no_skip", "")
+        sync_pol = (S.EveryStepSyncPolicy() if "no_skip" in name or
+                    oname != "zero_one_adam"
+                    else S.LrProportionalSyncPolicy(
+                        warmup_steps=int(warmup_frac * total_steps),
+                        double_every=int(double_frac * total_steps),
+                        max_interval=16))
+        ocfg = OptimizerConfig(
+            name=oname,
+            var_policy=S.AdaptiveFreezePolicy(kappa=16),
+            sync_policy=sync_pol,
+            onebit_warmup=int(0.16 * total_steps))
+        opt = make_optimizer(ocfg, shapes, specs=specs, n_workers=16)
+        acct = comm_accounting(opt)
+        d = acct["dp_params"]
+        comp_one_way = acct["compressed_bytes_per_sync"] / 2  # send side
+        full_one_way = acct["fullprec_bytes_per_round"] / 2
+
+        if oname == "adam":
+            bits = 8 * full_one_way * total_steps / (d * total_steps)
+            rounds = total_steps
+        elif oname == "one_bit_adam":
+            warm = int(0.16 * total_steps)
+            vol = full_one_way * warm + comp_one_way * (total_steps - warm)
+            bits = 8 * vol / (d * total_steps)
+            rounds = total_steps
+        else:
+            if "no_skip" in name:
+                sync = np.ones(total_steps, bool)
+                _, var = schedule_trace(ocfg, total_steps)
+            else:
+                sync, var = schedule_trace(ocfg, total_steps)
+            vol = comp_one_way * sync.sum() + full_one_way * var.sum()
+            bits = 8 * vol / (d * total_steps)
+            rounds = int(sync.sum() + var.sum())
+        rows.append((name, bits, rounds))
+    return rows, d
+
+
+def main():
+    t0 = time.time()
+    results = []
+    best_vol = best_rnd = 0.0
+    recipes = [
+        # (label, arch, steps, lr-warmup frac, lr half-life frac)
+        ("bert-large-100k", "bert-large", 100_000, 0.125, 0.32),
+        ("gpt2-300k", "gpt2", 300_000, 0.01, 0.12),
+    ]
+    for label, arch, steps, wf, df in recipes:
+        rows, d = run(arch, total_steps=steps, warmup_frac=wf,
+                      double_frac=df)
+        base = dict((n, (b, r)) for n, b, r in rows)
+        b1 = base["one_bit_adam"]
+        print(f"# Fig.4 analogue — {label}, {d/1e6:.0f}M params, "
+              f"16 workers")
+        print("optimizer,bits_per_param_per_step,comm_rounds,"
+              "volume_vs_1bitAdam,rounds_vs_1bitAdam")
+        for n, b, r in rows:
+            print(f"{n},{b:.4f},{r},{b/b1[0]:.3f},{r/b1[1]:.3f}")
+        zo = base["zero_one_adam"]
+        vol_red = 1 - zo[0] / b1[0]
+        rnd_red = 1 - zo[1] / b1[1]
+        best_vol, best_rnd = max(best_vol, vol_red), max(best_rnd, rnd_red)
+        print(f"# {label}: 0/1 vs 1-bit Adam: volume -{vol_red:.1%}, "
+              f"rounds -{rnd_red:.1%}")
+        results.append((f"data_volume_{label}", 0.0,
+                        f"vol_red={vol_red:.3f};rounds_red={rnd_red:.3f}"))
+    print(f"# ACROSS RECIPES: up to {best_vol:.0%} volume reduction "
+          f"(paper: up to 87%), up to {best_rnd:.0%} fewer rounds "
+          f"(paper: up to 54%)")
+    print(f"# elapsed {time.time()-t0:.1f}s")
+    return results
+
+
+if __name__ == "__main__":
+    main()

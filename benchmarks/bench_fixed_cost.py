@@ -1,0 +1,53 @@
+"""Paper appendix Table 3 analogue: per-round cost decomposition.
+
+Measures (on this host) the CPU-side cost of the compression pipeline per
+round and scales the paper's measured fixed costs; reports the
+compute/communication/fixed breakdown per optimizer round.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import hw
+from repro.core import compressor as C
+
+
+def main():
+    rows = []
+    # compression cost for a BERT-Large-sized flat leaf per worker
+    d = 340_000_000 // 16  # per-worker shard of the full model, one chunk
+    lo = C.make_layout((d,), None, 16)
+    z = jnp.zeros(lo.view_shape, jnp.float32)
+    mask = C.pad_mask(lo)
+
+    @jax.jit
+    def compress(z):
+        return C.ef_compress(z, lo, "tensor", mask)
+
+    out = compress(z)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = compress(z)
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("ef_compress_bertlarge_shard", us, f"elems={d}"))
+    print(f"ef_compress_bertlarge_shard,{us:.0f},elems={d}")
+
+    print("# Table 3 analogue — modeled per-round breakdown, BERT-Large")
+    print("gpus,compute_ms,comm_ms_ethernet_1bit,fixed_ms(paper)")
+    for n in (16, 32, 64, 128):
+        comp = hw.PAPER_COMPUTE_MS["bert-large"][n]
+        fixed = hw.PAPER_FIXED_MS["bert-large"][n]
+        vol = 340e6 / 8  # 1 bit/param one-way
+        comm = vol / hw.ETHERNET_BW * 1e3
+        print(f"{n},{comp},{comm:.0f},{fixed}")
+        rows.append((f"fixed_cost_{n}gpu", 0.0,
+                     f"compute={comp}ms;fixed={fixed}ms"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Kernel microbenchmarks (interpret-mode timings are NOT TPU performance —
+they validate plumbing; derived column reports bytes touched per call)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def main():
+    rows = []
+    R, C = 64, 4096
+    key = jax.random.PRNGKey(0)
+    z = jax.random.normal(key, (R, C))
+    e = jnp.zeros((R, C))
+    us, out = _time(ops.ef_compress, z, e)
+    rows.append(("kernel_ef_compress_64x4096", us,
+                 f"bytes={R*C*4*3 + R*C//8}"))
+    # correctness vs oracle (also asserted in tests)
+    p2, s2, e2 = ref.ef_compress_ref(z, e)
+    assert bool((out[0] == p2).all())
+    us, _ = _time(ops.decompress, out[0], out[1])
+    rows.append(("kernel_decompress_64x4096", us, f"bytes={R*C*4 + R*C//8}"))
+    g = jax.random.normal(key, (R, C))
+    m = jnp.zeros_like(g)
+    u = jnp.zeros_like(g)
+    v = jnp.ones_like(g)
+    us, _ = _time(lambda *a: ops.fused_local_step(*a, 0.01), g, m, u, v)
+    rows.append(("kernel_fused_local_step_64x4096", us,
+                 f"bytes={R*C*4*7}"))
+    # jnp reference pipeline for comparison
+    us, _ = _time(jax.jit(lambda z, e: ref.ef_compress_ref(z, e)), z, e)
+    rows.append(("jnp_ef_compress_ref_64x4096", us, "oracle"))
+    for r in rows:
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Hardware constants for the roofline + throughput models."""
+
+# TPU v5e target (roofline terms)
+TPU_PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+TPU_HBM_BW = 819e9               # bytes/s per chip
+TPU_ICI_BW = 50e9                # bytes/s per link
+
+# The paper's clusters (Fig. 3 reproduction)
+V100_FP16_FLOPS = 112e12
+ETHERNET_BW = 2.7e9 / 8          # 2.7 Gb/s effective -> bytes/s
+INFINIBAND_BW = 100e9 / 8 * 0.9  # ~100 Gb/s EDR, 90% efficiency
+ETHERNET_LATENCY = 50e-6         # per collective round (alpha)
+INFINIBAND_LATENCY = 5e-6
+
+# paper Table 3: measured per-step compute (ms) on V100s, by cluster size
+PAPER_COMPUTE_MS = {
+    # task: {gpus: ms}
+    "bert-base": {16: 941, 32: 490, 64: 263, 128: 162},
+    "bert-large": {16: 1840, 32: 970, 64: 640, 128: 332},
+    "imagenet": {16: 73, 32: 68, 64: 44, 128: 51},
+}
+PAPER_FIXED_MS = {  # "Others" row: init + compression fixed cost
+    "bert-base": {16: 153, 32: 250, 64: 397, 128: 658},
+    "bert-large": {16: 340, 32: 510, 64: 590, 128: 931},
+    "imagenet": {16: 8, 32: 6, 64: 21, 128: 19},
+}

@@ -1,0 +1,61 @@
+"""Benchmark aggregator: one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark, then the
+suite summary. Individual benches are importable and runnable standalone:
+
+    python -m benchmarks.bench_data_volume     # Fig. 4 + Fig. 5
+    python -m benchmarks.bench_throughput      # Fig. 3
+    python -m benchmarks.bench_convergence     # Fig. 2
+    python -m benchmarks.bench_quality         # Tables 1-2
+    python -m benchmarks.bench_fixed_cost      # appendix Table 3
+    python -m benchmarks.bench_kernels         # Pallas kernel microbench
+    python -m benchmarks.roofline              # deliverable (g)
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_convergence, bench_data_volume,
+                            bench_fixed_cost, bench_kernels, bench_quality,
+                            bench_throughput)
+    suites = [
+        ("fig4_data_volume", bench_data_volume.main),
+        ("fig3_throughput", bench_throughput.main),
+        ("fig2_convergence", bench_convergence.main),
+        ("tables12_quality", bench_quality.main),
+        ("table3_fixed_cost", bench_fixed_cost.main),
+        ("kernels", bench_kernels.main),
+    ]
+    if os.path.exists("results/dryrun.jsonl"):
+        from benchmarks import roofline
+        suites.append(("roofline", roofline.main))
+
+    all_rows = []
+    failures = 0
+    for name, fn in suites:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            rows = fn() or []
+            all_rows.extend(rows)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+        print(f"===== {name} done in {time.time()-t0:.1f}s =====")
+
+    print("\nname,us_per_call,derived")
+    for n, us, d in all_rows:
+        print(f"{n},{us:.1f},{d}")
+    if failures:
+        print(f"\n{failures} benchmark suites FAILED", file=sys.stderr)
+        sys.exit(1)
+    print(f"\nAll {len(suites)} benchmark suites completed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Fig. 2 + Fig. 4 in miniature: Adam vs 1-bit Adam vs 0/1 Adam on
+identical data — sample-wise convergence parity + communication volume.
+
+    PYTHONPATH=src python examples/compare_optimizers.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.core import OptimizerConfig, comm_accounting, schedules as S
+from repro.data import DataConfig, SyntheticLM
+from repro.train import Trainer
+
+cfg = get("gpt2").smoke
+STEPS = 60
+
+def run(name):
+    opt_cfg = OptimizerConfig(
+        name=name,
+        lr=S.LinearWarmupExpDecay(peak_lr=2e-3, warmup_steps=10,
+                                  decay=0.97, decay_period=20),
+        var_policy=S.AdaptiveFreezePolicy(kappa=4),
+        sync_policy=S.LrProportionalSyncPolicy(
+            warmup_steps=15, double_every=20, max_interval=4),
+        onebit_warmup=15)
+    tr = Trainer(cfg, opt_cfg, n_workers=4)
+    params, state = tr.sim_init(jax.random.PRNGKey(0))
+    fn = tr.sim_step_fn()
+    data = SyntheticLM(DataConfig(vocab=64, seq_len=32, global_batch=8))
+    acct = comm_accounting(tr.opt)
+    losses, bytes_sent = [], 0.0
+    for t in range(STEPS):
+        params, state, met = fn(params, state, data.batch(t))
+        losses.append(float(np.asarray(met["loss"])[0]))
+        if name == "adam":
+            bytes_sent += acct["fullprec_bytes_per_round"] / 2
+        elif name == "one_bit_adam":
+            w = bool(np.asarray(met["var_round"])[0])
+            bytes_sent += (acct["fullprec_bytes_per_round"] if w
+                           else acct["compressed_bytes_per_sync"]) / 2
+        else:
+            if bool(np.asarray(met["synced"])[0]):
+                bytes_sent += acct["compressed_bytes_per_sync"] / 2
+            if bool(np.asarray(met["var_round"])[0]):
+                bytes_sent += acct["fullprec_bytes_per_round"] / 2
+    return losses, bytes_sent, acct["dp_params"]
+
+print(f"{'optimizer':16s} {'loss@0':>8s} {'loss@end':>9s} "
+      f"{'MB sent/worker':>15s} {'bits/param/step':>16s}")
+for name in ("adam", "one_bit_adam", "zero_one_adam"):
+    losses, b, d = run(name)
+    print(f"{name:16s} {losses[0]:8.4f} {np.mean(losses[-5:]):9.4f} "
+          f"{b/2**20:15.2f} {8*b/d/STEPS:16.3f}")
+print("\nsame convergence, a fraction of the bits — the paper's claim.")

@@ -1,0 +1,41 @@
+"""Quickstart: train a tiny LM with 0/1 Adam on 4 simulated workers.
+
+The full paper machinery runs here — adaptive variance freezing (T_v),
+learning-rate-proportional local steps (T_u), error-feedback 1-bit
+compressed sync — just at CPU scale.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.core import OptimizerConfig, comm_accounting, schedules as S
+from repro.data import DataConfig, SyntheticLM
+from repro.train import Trainer
+
+cfg = get("gpt2").smoke
+opt_cfg = OptimizerConfig(
+    name="zero_one_adam",
+    lr=S.LinearWarmupExpDecay(peak_lr=2e-3, warmup_steps=10,
+                              decay=0.97, decay_period=20),
+    var_policy=S.AdaptiveFreezePolicy(kappa=4),
+    sync_policy=S.LrProportionalSyncPolicy(warmup_steps=10, double_every=20,
+                                           max_interval=4),
+)
+trainer = Trainer(cfg, opt_cfg, n_workers=4)
+acct = comm_accounting(trainer.opt)
+print(f"model={cfg.name}  DP params={acct['dp_params']/1e6:.2f}M  "
+      f"compressed sync: {acct['bits_per_param_sync']/2:.2f} bits/param "
+      f"one-way (vs 16 for bf16 AllReduce)")
+
+params, state = trainer.sim_init(jax.random.PRNGKey(0))
+step = trainer.sim_step_fn()
+data = SyntheticLM(DataConfig(vocab=64, seq_len=32, global_batch=8))
+for t in range(40):
+    params, state, met = step(params, state, data.batch(t))
+    if t % 5 == 0:
+        print(f"step {t:3d}  loss {float(np.asarray(met['loss'])[0]):.4f}  "
+              f"synced={bool(np.asarray(met['synced'])[0])}  "
+              f"var_refresh={bool(np.asarray(met['var_round'])[0])}")
+print("done — loss decreasing under 1-bit compressed local-step training")

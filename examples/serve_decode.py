@@ -1,0 +1,40 @@
+"""Batched serving: prefill a prompt batch, then decode tokens step by step
+with the KV cache (the decode_32k path at CPU scale).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.models import transformer as T
+from repro.models.layers import init_params
+from repro.serve import Server
+
+cfg = get("chatglm3-6b").smoke
+B, PROMPT, GEN, MAXSEQ = 4, 12, 20, 64
+
+params = init_params(T.model_template(cfg), jax.random.PRNGKey(0))
+srv = Server(cfg, batch=B, max_seq=MAXSEQ, cache_dtype=jnp.float32)
+prefill = srv.prefill_fn()
+decode = srv.decode_fn()
+
+prompt = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 0, cfg.vocab)
+cache = T.init_cache(cfg, B, MAXSEQ, dtype=jnp.float32)
+logits, cache = prefill(params, {"tokens": prompt}, cache)
+tok = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1)[:, None]
+
+out = [tok]
+t0 = time.time()
+for i in range(GEN):
+    logits, cache = decode(params, cache, tok, jnp.int32(PROMPT + i))
+    tok = jnp.argmax(logits[:, 0, :cfg.vocab], axis=-1)[:, None]
+    out.append(tok)
+dt = time.time() - t0
+toks = np.concatenate([np.asarray(t) for t in out], axis=1)
+print(f"prompt shape {prompt.shape} -> generated {GEN} tokens/seq")
+print(f"decode throughput: {B*GEN/dt:.1f} tok/s (CPU, interpret-grade)")
+print("generated ids (batch 0):", toks[0].tolist())

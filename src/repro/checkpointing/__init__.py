@@ -1,0 +1,1 @@
+from repro.checkpointing import io

@@ -1,0 +1,1 @@
+from repro.configs.base import ALL_SHAPES, ASSIGNED, ArchSpec, get, list_archs

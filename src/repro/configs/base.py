@@ -1,0 +1,63 @@
+"""Architecture registry: one module per assigned architecture.
+
+Every entry carries the FULL config (dry-run only — never materialized on
+CPU), a reduced SMOKE config of the same family (2 layers, d_model ≤ 512,
+≤ 4 experts) exercised by tests/test_arch_smoke.py, and the input-shape
+eligibility with skip justifications (see DESIGN §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Tuple
+
+from repro.models.config import ModelConfig
+
+ALL_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    config: ModelConfig
+    smoke: ModelConfig
+    shapes: Tuple[str, ...]
+    skip_notes: str = ""
+
+
+_REGISTRY: Dict[str, ArchSpec] = {}
+
+_ARCH_MODULES = [
+    "whisper_large_v3", "chatglm3_6b", "qwen2_vl_2b",
+    "llama4_scout_17b_a16e", "gemma3_12b", "mamba2_2p7b", "granite_3_8b",
+    "deepseek_v2_236b", "zamba2_1p2b", "phi4_mini_3p8b",
+    "bert_base", "bert_large", "gpt2",
+]
+
+ASSIGNED = [
+    "whisper-large-v3", "chatglm3-6b", "qwen2-vl-2b",
+    "llama4-scout-17b-a16e", "gemma3-12b", "mamba2-2.7b", "granite-3-8b",
+    "deepseek-v2-236b", "zamba2-1.2b", "phi4-mini-3.8b",
+]
+
+
+def register(name: str, spec: ArchSpec):
+    _REGISTRY[name] = spec
+
+
+def _load():
+    if _REGISTRY:
+        return
+    for m in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+
+
+def get(name: str) -> ArchSpec:
+    _load()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs():
+    _load()
+    return sorted(_REGISTRY)

@@ -1,0 +1,30 @@
+"""BERT-Base — the paper's own pre-training benchmark [Devlin et al. 2018].
+
+12 layers, d_model=768, 12 heads, d_ff=3072, vocab=30522 — bidirectional
+encoder trained with masked-LM loss (loss_mask in the batch).
+"""
+from repro.configs import base
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="bert-base", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv=12, d_ff=3072,
+    vocab=30522, head_dim=64, causal=False,
+    rope="learned", mlp_type="gelu", norm_type="layernorm",
+    attn_bias=True, max_seq=4096,  # train_4k shape
+    citation="arXiv:1810.04805",
+)
+
+SMOKE = ModelConfig(
+    name="bert-smoke", family="dense",
+    n_layers=2, d_model=128, n_heads=4, n_kv=4, d_ff=256, vocab=512,
+    head_dim=32, causal=False, rope="learned", mlp_type="gelu",
+    norm_type="layernorm", attn_bias=True, max_seq=128,
+    citation="arXiv:1810.04805",
+)
+
+base.register("bert-base", base.ArchSpec(
+    config=FULL, smoke=SMOKE, shapes=("train_4k",),
+    skip_notes="paper's own workload; encoder-only -> no decode shapes; "
+               "trained at its native 128/512 seq in benchmarks.",
+))

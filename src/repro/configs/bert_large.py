@@ -1,0 +1,28 @@
+"""BERT-Large — the paper's own pre-training benchmark [Devlin et al. 2018].
+
+24 layers, d_model=1024, 16 heads, d_ff=4096, vocab=30522.
+"""
+from repro.configs import base
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="bert-large", family="dense",
+    n_layers=24, d_model=1024, n_heads=16, n_kv=16, d_ff=4096,
+    vocab=30522, head_dim=64, causal=False,
+    rope="learned", mlp_type="gelu", norm_type="layernorm",
+    attn_bias=True, max_seq=4096,  # train_4k shape
+    citation="arXiv:1810.04805",
+)
+
+SMOKE = ModelConfig(
+    name="bert-large-smoke", family="dense",
+    n_layers=2, d_model=128, n_heads=4, n_kv=4, d_ff=256, vocab=512,
+    head_dim=32, causal=False, rope="learned", mlp_type="gelu",
+    norm_type="layernorm", attn_bias=True, max_seq=128,
+    citation="arXiv:1810.04805",
+)
+
+base.register("bert-large", base.ArchSpec(
+    config=FULL, smoke=SMOKE, shapes=("train_4k",),
+    skip_notes="paper's own workload; encoder-only.",
+))

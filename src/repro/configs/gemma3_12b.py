@@ -1,0 +1,33 @@
+"""gemma3-12b [dense] — hf:google/gemma-3-1b-pt family card (12B variant).
+
+48 layers, d_model=3840, 16 heads GQA kv=8 with head_dim=256, d_ff=15360,
+vocab=262144, tied embeddings, 5:1 local:global attention (sliding window
+1024; every 6th layer global), 128k context. Single rope_theta used for
+both bands (model card uses 10k local / 1M global; recorded simplification).
+long_500k RUNS: the sliding-window layers are sub-quadratic and the 8
+global layers decode one token in O(S) against a sequence-sharded cache.
+"""
+from repro.configs import base
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="gemma3-12b", family="dense",
+    n_layers=48, d_model=3840, n_heads=16, n_kv=8, d_ff=15360,
+    vocab=262144, head_dim=256,
+    sliding_window=1024, global_every=6, rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    mlp_type="swiglu", norm_type="rmsnorm", max_seq=131072, remat=True,
+    citation="hf:google/gemma-3-1b-pt",
+)
+
+SMOKE = ModelConfig(
+    name="gemma3-smoke", family="dense",
+    n_layers=6, d_model=128, n_heads=4, n_kv=2, d_ff=256, vocab=512,
+    head_dim=32, sliding_window=8, global_every=6, tie_embeddings=True,
+    max_seq=128, citation="hf:google/gemma-3-1b-pt",
+)
+
+base.register("gemma3-12b", base.ArchSpec(
+    config=FULL, smoke=SMOKE,
+    shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+))

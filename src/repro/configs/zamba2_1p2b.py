@@ -1,0 +1,35 @@
+"""zamba2-1.2b [hybrid] — arXiv:2411.15242 (Zyphra).
+
+38 Mamba2 layers (d_model=2048, ssm_state=64, d_inner=4096, 64 heads of
+dim 64) with a SHARED attention+MLP block (32 heads MHA kv=32, d_ff=8192)
+applied every 6 layers — the same weights fire at each application, each
+with its own KV cache slot. (The model card's per-application LoRA deltas
+and embedding-concat input are recorded simplifications.) long_500k RUNS:
+SSM decode is O(1) and the 6 shared-attention applications decode one
+token in O(S) against sequence-sharded caches.
+"""
+from repro.configs import base
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv=32, d_ff=8192,
+    vocab=32000, head_dim=64,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_groups=1,
+    ssm_chunk=256, conv_kernel=4, attn_every=6,
+    norm_type="rmsnorm", max_seq=524288, remat=True,
+    citation="arXiv:2411.15242",
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-smoke", family="hybrid",
+    n_layers=4, d_model=128, n_heads=4, n_kv=4, d_ff=256, vocab=512,
+    head_dim=32, ssm_state=16, ssm_head_dim=32, ssm_expand=2,
+    ssm_chunk=8, conv_kernel=4, attn_every=2, max_seq=128,
+    citation="arXiv:2411.15242",
+)
+
+base.register("zamba2-1.2b", base.ArchSpec(
+    config=FULL, smoke=SMOKE,
+    shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+))

@@ -1,0 +1,20 @@
+"""The paper's primary contribution: 0/1 Adam and its communication substrate.
+
+Public surface:
+  - make_optimizer / OptimizerConfig        (api.py)
+  - Comm / sim_comm / mesh_comm             (comm.py)
+  - schedules: T_v / T_u policies + lr      (schedules.py)
+  - onebit_allreduce_view (Algorithm 2)     (onebit_allreduce.py)
+  - 1-bit EF compressor + comm-view layouts (compressor.py)
+"""
+from repro.core.api import OptimizerConfig, make_optimizer, comm_accounting
+from repro.core.comm import Comm, mesh_comm, sim_comm, run_simulated
+from repro.core import schedules
+from repro.core import compressor
+from repro.core import onebit_allreduce
+
+__all__ = [
+    "OptimizerConfig", "make_optimizer", "comm_accounting",
+    "Comm", "mesh_comm", "sim_comm", "run_simulated",
+    "schedules", "compressor", "onebit_allreduce",
+]

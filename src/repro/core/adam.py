@@ -1,0 +1,82 @@
+"""Baseline distributed Adam (full-precision AllReduce every step).
+
+Standard Adam update without bias correction (the paper's Eq. 3 convention,
+shared by all three optimizers here so comparisons are step-for-step clean).
+
+All optimizers operate over flattened leaf lists (treedef captured at
+construction) so that heterogeneous per-leaf auxiliary state (layouts, error
+feedback, DP masks) never has to align as a pytree.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api as _api
+from repro.core.comm import Comm
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: list
+    v: list
+
+
+class Adam:
+    def __init__(self, cfg, param_shapes, specs, dp_mask, n_workers,
+                 model_axis_sizes=None):
+        self.cfg = cfg
+        self.n = n_workers
+        self.model_axes = tuple((model_axis_sizes or {}).keys())
+        leaves, self.treedef = jax.tree.flatten(param_shapes)
+        self.specs = self.treedef.flatten_up_to(specs)
+        self.dp_mask = self.treedef.flatten_up_to(dp_mask)
+        self.layouts = [  # kept for comm accounting parity
+            _api.C.make_layout(l.shape, s, n_workers)
+            for l, s in zip(leaves, self.specs)]
+        self.vspecs = [_api.C.view_spec_entries(lo, sp)
+                       for lo, sp in zip(self.layouts, self.specs)]
+
+    def flat(self, tree):
+        return self.treedef.flatten_up_to(tree)
+
+    def init(self, params) -> AdamState:
+        ps = self.flat(params)
+        sd = self.cfg.state_dtype
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         m=[jnp.zeros(p.shape, sd) for p in ps],
+                         v=[jnp.zeros(p.shape, sd) for p in ps])
+
+    def step(self, comm: Comm, params, grads, state: AdamState,
+             worker_index=None):
+        cfg = self.cfg
+        t = state.step
+        lr = cfg.lr(t).astype(jnp.float32)
+        from repro.core import compressor as C
+        from repro.core import onebit_allreduce as AR
+        xs, gs = self.flat(params), self.flat(grads)
+        new_x, new_m, new_v = [], [], []
+        for i, (x, g, m, v, dp, lo) in enumerate(
+                zip(xs, gs, state.m, state.v, self.dp_mask, self.layouts)):
+            g = g.astype(jnp.float32)
+            if dp:
+                gv = C.to_view(g, lo)
+                gv = AR.fullprec_allreduce_view(comm, gv, cfg.comm_dtype,
+                                                vspec=self.vspecs[i])
+                g = C.from_view(gv.astype(jnp.float32), lo)
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            nm = cfg.beta1 * m32 + (1 - cfg.beta1) * g
+            nv = cfg.beta2 * v32 + (1 - cfg.beta2) * g * g
+            delta = lr * nm / jnp.sqrt(v32 + cfg.eps)
+            if cfg.weight_decay:
+                delta = delta + lr * cfg.weight_decay * x.astype(jnp.float32)
+            new_x.append((x.astype(jnp.float32) - delta).astype(x.dtype))
+            new_m.append(nm.astype(m.dtype))
+            new_v.append(nv.astype(v.dtype))
+        metrics = {"lr": lr, "synced": jnp.asarray(True),
+                   "var_round": jnp.asarray(True),
+                   "interval": jnp.ones((), jnp.int32)}
+        return (jax.tree.unflatten(self.treedef, new_x),
+                AdamState(step=t + 1, m=new_m, v=new_v), metrics)

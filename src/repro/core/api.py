@@ -1,0 +1,116 @@
+"""Optimizer factory + shared plumbing.
+
+All optimizers in this package share one interface::
+
+    opt = make_optimizer(cfg, param_shapes, specs=..., dp_mask=..., n_workers=n)
+    state = opt.init(params)                       # or jax.eval_shape(opt.init, ...)
+    params', state', metrics = opt.step(comm, params, grads, state)
+
+``step`` is written *per worker*: inside a partial-manual ``shard_map`` the
+worker axes are the manual mesh axes and ``comm`` wraps real collectives;
+under ``jax.vmap(axis_name=...)`` the same code runs n simulated workers on
+one device (how the tests exercise the algorithms).
+
+``dp_mask`` marks which leaves are data-parallel replicated (True, default):
+those participate in the paper's compressed sync + variance AllReduce.
+Leaves marked False (e.g. expert-parallel MoE experts, which exist exactly
+once across the worker axis and therefore have no DP gradient exchange to
+compress) are updated with plain local Adam; their gradients are pre-scaled
+by 1/n to match the global-mean-loss convention (see train/step.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressor as C
+from repro.core import schedules as S
+from repro.core.comm import Comm
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "zero_one_adam"         # adam | one_bit_adam | zero_one_adam
+    lr: Callable = S.ConstantLr(1e-3)
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    # 0/1 Adam policies
+    var_policy: Any = S.AdaptiveFreezePolicy(kappa=16)
+    sync_policy: Any = S.LrProportionalSyncPolicy(
+        warmup_steps=12500, double_every=32678, max_interval=16)
+    # 1-bit Adam full-precision stage length
+    onebit_warmup: int = 16000
+    # compression
+    scale_mode: C.ScaleMode = "tensor"   # paper-faithful; "row" = optimized
+    quantize: bool = True                # False -> exact chunked allreduce
+    store_anchor: bool = True            # True: keep x_{t'} copy -> bitwise
+                                         # worker consensus at syncs. False:
+                                         # recover the anchor from u (saves a
+                                         # params copy; workers agree only up
+                                         # to f32 rounding, a ~1e-6 random
+                                         # walk per sync).
+    comm_dtype: Any = jnp.bfloat16       # wire dtype for full-precision rounds
+    state_dtype: Any = jnp.float32
+    use_pallas: bool = False             # route EF-compress through kernels/
+
+
+def tree_layouts(shapes, specs, n: int):
+    """Per-leaf comm layouts. ``shapes`` is a tree of arrays or ShapeDtypeStructs."""
+    def mk(x, spec):
+        return C.make_layout(x.shape, spec, n)
+    return jax.tree.map(mk, shapes, specs,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def fill_like(tree, value):
+    return jax.tree.map(lambda _: value, tree)
+
+
+def make_optimizer(cfg: OptimizerConfig, param_shapes, *, specs=None,
+                   dp_mask=None, n_workers: int, model_axis_sizes=None):
+    from repro.core import adam, one_bit_adam, zero_one_adam
+    if specs is None:
+        specs = fill_like(param_shapes, None)
+    if dp_mask is None:
+        dp_mask = fill_like(param_shapes, True)
+    ctors = {
+        "adam": adam.Adam,
+        "one_bit_adam": one_bit_adam.OneBitAdam,
+        "zero_one_adam": zero_one_adam.ZeroOneAdam,
+    }
+    if cfg.name not in ctors:
+        raise ValueError(f"unknown optimizer {cfg.name!r}; "
+                         f"choose from {sorted(ctors)}")
+    return ctors[cfg.name](cfg, param_shapes, specs, dp_mask, n_workers,
+                           model_axis_sizes)
+
+
+# ---------------------------------------------------------------------------
+# Static communication accounting (feeds the Fig. 3/4 benchmarks)
+# ---------------------------------------------------------------------------
+
+def comm_accounting(opt) -> Dict[str, float]:
+    """Static bytes-per-round numbers for the optimizer's parameter tree."""
+    layouts = jax.tree.leaves(opt.layouts)
+    masks = jax.tree.leaves(opt.dp_mask)
+    total_params = 0
+    compressed = 0
+    for lo, dp in zip(layouts, masks):
+        if not dp:
+            continue
+        import numpy as np
+        total_params += int(np.prod(lo.shape)) if lo.shape else 1
+        compressed += C.compressed_bytes(lo, opt.cfg.scale_mode)
+    wire = jnp.dtype(opt.cfg.comm_dtype).itemsize
+    full = 2 * total_params * wire  # ring allreduce moves ~2x payload
+    return {
+        "dp_params": float(total_params),
+        "compressed_bytes_per_sync": float(compressed),
+        "fullprec_bytes_per_round": float(full),
+        "bits_per_param_sync": 8.0 * compressed / max(total_params, 1),
+    }

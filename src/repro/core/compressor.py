@@ -1,0 +1,395 @@
+"""Error-feedback 1-bit compression (paper Eq. 4 + Algorithm 2 building blocks).
+
+The compressor operates on a *comm view* of each parameter leaf:
+
+    natural leaf (.., A, ..)  --pad/transpose/reshape-->  view (n, A_pad/n, *rest)
+
+where ``n`` is the worker count and the leading axis enumerates the chunks of
+the chunked AllReduce (worker *j* is the "server" for chunk *j*). The view
+transform is chosen per-leaf at init time (:func:`make_layout`) so that:
+
+* the chunk-split axis is never a tensor-parallel ('model') sharded axis —
+  every op below is local to a chip except the worker-axis collectives
+  themselves;
+* sign bits are packed along the last axis of the view, which is always a
+  multiple of 8 elements per model shard.
+
+Compression follows the paper: ``C[a] = (‖a‖₁/d) · sign(a)`` with error
+feedback. ``scale_mode`` controls the granularity of the magnitude:
+
+* ``"tensor"`` — one scale per leaf (paper-faithful, Eq. 4);
+* ``"chunk"``  — one scale per worker chunk (what DeepSpeed's chunked NCCL
+  backend effectively does);
+* ``"row"``    — one scale per view row (beyond-paper refinement; strictly
+  tighter error feedback at negligible extra traffic).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ScaleMode = str  # "tensor" | "chunk" | "row"
+
+
+# ---------------------------------------------------------------------------
+# Leaf layouts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LeafLayout:
+    """Static description of how one leaf maps to its comm view."""
+
+    shape: Tuple[int, ...]        # natural (unpadded) leaf shape
+    n: int                        # worker count (number of chunks)
+    flatten: bool                 # True -> treat leaf as 1-D of prod(shape)
+    split_axis: int               # axis chunked across workers (after flatten)
+    padded: int                   # split axis size after padding
+    view_shape: Tuple[int, ...]   # (n, padded//n, *rest)
+    rest_factor: int = 1          # global/local element ratio when the leaf
+                                  # is tensor-parallel sharded and the layout
+                                  # was built on the model-LOCAL shard
+
+    @property
+    def pad(self) -> int:
+        base = int(np.prod(self.shape)) if self.flatten else self.shape[self.split_axis]
+        return self.padded - base
+
+    @property
+    def chunk_shape(self) -> Tuple[int, ...]:
+        return self.view_shape[1:]
+
+    @property
+    def pack_count(self) -> int:
+        """Number of elements packed along the last view axis."""
+        return self.view_shape[-1]
+
+
+def _is_sharded(spec, axis: int) -> bool:
+    if spec is None:
+        return False
+    entries = tuple(spec)
+    if axis >= len(entries):
+        return False
+    return entries[axis] is not None
+
+
+def spec_model_factor(spec, axis_sizes) -> int:
+    """Product of mesh-axis sizes referenced by a PartitionSpec."""
+    if spec is None or not axis_sizes:
+        return 1
+    f = 1
+    for e in tuple(spec):
+        if e is None:
+            continue
+        for name in (e if isinstance(e, tuple) else (e,)):
+            f *= axis_sizes.get(name, 1)
+    return f
+
+
+def make_layout(shape: Sequence[int], spec, n: int,
+                rest_factor: int = 1,
+                force_flatten: bool = False) -> LeafLayout:
+    """Choose the comm view for a leaf with the given model-sharding spec.
+
+    ``spec`` is a ``PartitionSpec`` (or None) describing tensor-parallel
+    sharding only; the worker axis is implicit.
+
+    ``force_flatten`` is set when the optimizer runs in the fully-manual
+    domain (nested shard_map over 'model'): leaf shapes are then
+    tensor-parallel-LOCAL shards, so the uniform flat view is always valid —
+    there is no GSPMD resharding to avoid.
+    """
+    shape = tuple(int(s) for s in shape)
+    replicated = spec is None or all(e is None for e in tuple(spec))
+    if len(shape) == 0:
+        padded = _round_up(1, n * 8)
+        return LeafLayout(shape=(), n=n, flatten=True, split_axis=0,
+                          padded=padded, view_shape=(n, padded // n),
+                          rest_factor=1)
+    if replicated or force_flatten:
+        total = int(np.prod(shape))
+        padded = _round_up(total, n * 8)
+        return LeafLayout(shape=shape, n=n, flatten=True, split_axis=0,
+                          padded=padded, view_shape=(n, padded // n),
+                          rest_factor=rest_factor if not replicated else 1)
+    # Sharded leaf under GSPMD-auto: split along the largest unsharded axis.
+    candidates = [a for a in range(len(shape)) if not _is_sharded(spec, a)]
+    if not candidates:
+        raise ValueError(
+            f"leaf {shape} with spec {spec} has no replicated axis to chunk over")
+    split_axis = max(candidates, key=lambda a: shape[a])
+    rest = [shape[a] for a in range(len(shape)) if a != split_axis]
+    if rest:
+        if rest[-1] % 8 != 0:
+            raise ValueError(
+                f"leaf {shape} spec {spec}: last view dim {rest[-1]} not a "
+                f"multiple of 8; cannot bit-pack without resharding")
+        padded = _round_up(shape[split_axis], n)
+    else:
+        padded = _round_up(shape[split_axis], n * 8)
+    view_shape = (n, padded // n, *rest)
+    return LeafLayout(shape=shape, n=n, flatten=False, split_axis=split_axis,
+                      padded=padded, view_shape=view_shape,
+                      rest_factor=rest_factor)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def to_view(x: jnp.ndarray, layout: LeafLayout) -> jnp.ndarray:
+    """Natural leaf -> comm view (n, padded//n, *rest). Purely local ops."""
+    if layout.flatten:
+        flat = x.reshape(-1)
+        if layout.pad:
+            flat = jnp.pad(flat, (0, layout.pad))
+        return flat.reshape(layout.view_shape)
+    if layout.pad:
+        pads = [(0, 0)] * x.ndim
+        pads[layout.split_axis] = (0, layout.pad)
+        x = jnp.pad(x, pads)
+    x = jnp.moveaxis(x, layout.split_axis, 0)
+    return x.reshape(layout.view_shape)
+
+
+def from_view(v: jnp.ndarray, layout: LeafLayout) -> jnp.ndarray:
+    """Comm view -> natural leaf shape (drops padding)."""
+    if layout.flatten:
+        flat = v.reshape(-1)
+        total = int(np.prod(layout.shape)) if layout.shape else 1
+        flat = flat[:total]
+        return flat.reshape(layout.shape)
+    rest = [layout.shape[a] for a in range(len(layout.shape))
+            if a != layout.split_axis]
+    x = v.reshape((layout.padded, *rest))
+    x = jnp.moveaxis(x, 0, layout.split_axis)
+    if layout.pad:
+        sl = [slice(None)] * x.ndim
+        sl[layout.split_axis] = slice(0, layout.shape[layout.split_axis])
+        x = x[tuple(sl)]
+    return x
+
+
+def pad_mask(layout: LeafLayout, dtype=jnp.float32) -> Optional[jnp.ndarray]:
+    """Mask over the view that is 0 at padded positions, or None if no pad.
+
+    Broadcastable against the view: shape (n, padded//n) + (1,)*len(rest).
+    """
+    if layout.pad == 0:
+        return None
+    a = np.arange(layout.padded).reshape(layout.view_shape[0], layout.view_shape[1])
+    base = (int(np.prod(layout.shape)) if layout.flatten
+            else layout.shape[layout.split_axis])
+    m = (a < base).astype(np.float32)
+    m = m.reshape(m.shape + (1,) * (len(layout.view_shape) - 2))
+    return jnp.asarray(m, dtype=dtype)
+
+
+def ambient_auto_mesh():
+    """(axis->size) for GSPMD-*auto* axes of the ambient mesh, or None.
+
+    Inside a partial-manual shard_map body the abstract mesh reports the
+    manual worker axes as Manual — constraints must only mention Auto axes.
+    """
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and am.axis_names:
+            n2t = dict(zip(am.axis_names, am.axis_types))
+            return {a: int(am.shape[a]) for a in am.axis_names
+                    if "Auto" in str(n2t[a])}
+    except Exception:
+        pass
+    try:
+        from jax.interpreters.pxla import thread_resources
+        m = thread_resources.env.physical_mesh
+        if not m.empty:
+            return {a: int(s) for a, s in zip(m.axis_names, m.devices.shape)}
+    except Exception:
+        pass
+    return None
+
+
+def constrain(x, entries) -> jnp.ndarray:
+    """with_sharding_constraint that degrades to a no-op off-mesh.
+
+    Keeps the optimizer's comm pipeline (views, packed bits, chunk buffers)
+    sharded over the tensor-parallel axis — without these GSPMD loses the
+    last-dim sharding across packbits/collective boundaries and re-gathers
+    full views over 'model' (observed: 18 GiB all-gathers per leaf).
+    """
+    if entries is None:
+        return x
+    auto = ambient_auto_mesh()
+    if not auto:
+        return x
+    from jax.sharding import PartitionSpec as P
+    ents = tuple(entries)[:x.ndim]
+    ents = ents + (None,) * (x.ndim - len(ents))
+    ok = []
+    for dim, name in zip(x.shape, ents):
+        if name is None:
+            ok.append(None)
+            continue
+        names = name if isinstance(name, tuple) else (name,)
+        if all(n in auto for n in names):
+            size = 1
+            for n in names:
+                size *= auto[n]
+            ok.append(name if dim % size == 0 else None)
+        else:
+            ok.append(None)
+    if all(e is None for e in ok):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*ok))
+    except Exception:
+        return x
+
+
+def view_spec_entries(layout: LeafLayout, spec) -> Tuple:
+    """PartitionSpec entries (model axes only) for the comm-view shape.
+
+    * GSPMD-auto structured views keep the original non-split-axis entries
+      (the split axis is unsharded): view (n, A/n, *rest).
+    * Fully-manual flattened views of a tensor-parallel leaf
+      (rest_factor > 1): the flat dim is declared sharded over the leaf's
+      model axes — each shard stores its own flat segment.
+    * Replicated flattened leaves: replicated.
+    """
+    if layout.flatten:
+        if layout.rest_factor > 1 and spec is not None:
+            names = []
+            for e in tuple(spec):
+                if e is None:
+                    continue
+                names.extend(e if isinstance(e, tuple) else (e,))
+            if names:
+                ax = names[0] if len(names) == 1 else tuple(names)
+                return (None, ax)
+        return (None,) * len(layout.view_shape)
+    entries = tuple(spec) if spec is not None else ()
+    entries = entries + (None,) * (len(layout.shape) - len(entries))
+    rest = tuple(e for a, e in enumerate(entries) if a != layout.split_axis)
+    return (None, None, *rest)
+
+
+def chunk_spec_entries(layout: LeafLayout, spec) -> Tuple:
+    """PartitionSpec entries for the server-chunk shape (A/n, *rest)."""
+    return view_spec_entries(layout, spec)[1:]
+
+
+def true_counts(layout: LeafLayout) -> Tuple[float, np.ndarray]:
+    """(#real elements per leaf, #real elements per chunk row array (n, A/n))."""
+    rest = int(np.prod(layout.view_shape[2:])) if len(layout.view_shape) > 2 else 1
+    a = np.arange(layout.padded)
+    base = (int(np.prod(layout.shape)) if layout.flatten
+            else layout.shape[layout.split_axis])
+    rows = (a < base).astype(np.float64).reshape(layout.view_shape[0],
+                                                 layout.view_shape[1])
+    per_chunk = rows.sum(axis=1) * rest          # (n,)
+    total = float(per_chunk.sum())
+    return total, per_chunk
+
+
+# ---------------------------------------------------------------------------
+# Sign packing
+# ---------------------------------------------------------------------------
+
+def pack_signs(v: jnp.ndarray) -> jnp.ndarray:
+    """Pack sign bits (>= 0) along the last axis; last dim must be %8==0."""
+    bits = (v >= 0).astype(jnp.uint8)
+    return jnp.packbits(bits, axis=-1, bitorder="big")
+
+
+def unpack_signs(p: jnp.ndarray, count: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Unpack to ±1 values of the given last-axis length."""
+    bits = jnp.unpackbits(p, axis=-1, count=count, bitorder="big")
+    return bits.astype(dtype) * 2.0 - 1.0
+
+
+# ---------------------------------------------------------------------------
+# 1-bit compression with error feedback
+# ---------------------------------------------------------------------------
+
+def _psum_model(x, model_axes):
+    if not model_axes:
+        return x
+    return jax.lax.psum(x, model_axes if len(model_axes) > 1
+                        else model_axes[0])
+
+
+def _scales(z: jnp.ndarray, layout: LeafLayout, mode: ScaleMode,
+            mask: Optional[jnp.ndarray], model_axes=()) -> jnp.ndarray:
+    """L1-mean magnitudes at the requested granularity (pad-exact).
+
+    When the layout was built on a tensor-parallel-local shard
+    (``rest_factor > 1``) the local sums are psum'd over the model axes and
+    the denominators use the GLOBAL element counts so every shard agrees on
+    the same scale (fully-manual optimizer region).
+    """
+    az = jnp.abs(z)
+    if mask is not None:
+        az = az * mask
+    total, per_chunk = true_counts(layout)
+    rf = layout.rest_factor
+    if mode == "tensor":
+        s = _psum_model(az.sum(), model_axes) / (total * rf)
+        return s.reshape((1,) * z.ndim)
+    if mode == "chunk":
+        axes = tuple(range(1, z.ndim))
+        cnt = jnp.asarray(np.maximum(per_chunk * rf, 1.0), dtype=z.dtype)
+        s = _psum_model(az.sum(axis=axes), model_axes) / cnt
+        return s.reshape((z.shape[0],) + (1,) * (z.ndim - 1))
+    if mode == "row":
+        axes = tuple(range(2, z.ndim))
+        rest = (int(np.prod(z.shape[2:])) if z.ndim > 2 else 1) * rf
+        if z.ndim > 2:
+            s = _psum_model(az.sum(axis=axes), model_axes) / rest
+        else:
+            # (n, A/n): row scale degenerates to |value|; fall back to chunk
+            return _scales(z, layout, "chunk", mask, model_axes)
+        return s.reshape(z.shape[:2] + (1,) * (z.ndim - 2))
+    raise ValueError(f"unknown scale mode {mode!r}")
+
+
+def ef_compress(z: jnp.ndarray, layout: LeafLayout, mode: ScaleMode,
+                mask: Optional[jnp.ndarray], model_axes=()):
+    """One error-feedback compression pass over a comm view.
+
+    Returns (packed uint8, scales, residual error). ``z`` already includes the
+    incoming error (caller adds it): this computes ``ẑ = C[z]``, ``err = z−ẑ``.
+    """
+    scales = _scales(z, layout, mode, mask, model_axes)
+    packed = pack_signs(z)
+    signs = jnp.where(z >= 0, 1.0, -1.0).astype(z.dtype)
+    zhat = signs * scales.astype(z.dtype)
+    err = z - zhat
+    if mask is not None:
+        err = err * mask.astype(err.dtype)
+    return packed, scales, err
+
+
+def decompress(packed: jnp.ndarray, scales: jnp.ndarray, count: int,
+               dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of the quantizer: scale · sign."""
+    signs = unpack_signs(packed, count, dtype)
+    return signs * scales.astype(dtype)
+
+
+def compressed_bytes(layout: LeafLayout, mode: ScaleMode) -> int:
+    """Bytes per worker sent on one sync (a2a payload + gathered result)."""
+    chunk_elems = int(np.prod(layout.chunk_shape))
+    packed = layout.n * (chunk_elems // 8)  # full packed view, bytes
+    if mode == "tensor":
+        nscale = 1
+    elif mode == "chunk":
+        nscale = layout.n
+    else:
+        nscale = layout.n * layout.view_shape[1]
+    # scatter phase sends (n-1)/n of packed view; gather receives same again.
+    return 2 * packed + 4 * nscale * 2

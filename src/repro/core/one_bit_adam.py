@@ -1,0 +1,138 @@
+"""1-bit Adam baseline (Tang et al. 2021) = paper Algorithm 4 with
+``T_v = {0..T0-1}``: a full-precision stage that pre-conditions the variance,
+then a compression stage with frozen variance and error-feedback 1-bit
+AllReduce of the gradients.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressor as C
+from repro.core import onebit_allreduce as AR
+from repro.core.comm import Comm
+
+
+class OneBitAdamState(NamedTuple):
+    step: jnp.ndarray
+    m: list          # view shapes
+    v: list          # view shapes
+    err_w: list      # view shapes (None for non-DP leaves)
+    err_s: list      # chunk shapes (None for non-DP leaves)
+
+
+class OneBitAdam:
+    def __init__(self, cfg, param_shapes, specs, dp_mask, n_workers,
+                 model_axis_sizes=None):
+        self.cfg = cfg
+        self.n = n_workers
+        self.model_axes = tuple((model_axis_sizes or {}).keys())
+        leaves, self.treedef = jax.tree.flatten(param_shapes)
+        self.specs = self.treedef.flatten_up_to(specs)
+        self.dp_mask = self.treedef.flatten_up_to(dp_mask)
+        self.layouts = [
+            C.make_layout(l.shape, s, n_workers,
+                          rest_factor=C.spec_model_factor(
+                              s, model_axis_sizes or {}),
+                          force_flatten=bool(model_axis_sizes))
+            for l, s in zip(leaves, self.specs)]
+        self.vspecs = [C.view_spec_entries(lo, sp)
+                       for lo, sp in zip(self.layouts, self.specs)]
+        self.ar_cfg = AR.OneBitConfig(scale_mode=cfg.scale_mode,
+                                      quantize=cfg.quantize,
+                                      model_axes=self.model_axes)
+
+    def flat(self, tree):
+        return self.treedef.flatten_up_to(tree)
+
+    def init(self, params) -> OneBitAdamState:
+        ps = self.flat(params)
+        sd = self.cfg.state_dtype
+
+        def zst(p, lo, dp):
+            return jnp.zeros(lo.view_shape if dp else p.shape, sd)
+
+        return OneBitAdamState(
+            step=jnp.zeros((), jnp.int32),
+            m=[zst(p, lo, dp) for p, lo, dp in
+               zip(ps, self.layouts, self.dp_mask)],
+            v=[zst(p, lo, dp) for p, lo, dp in
+               zip(ps, self.layouts, self.dp_mask)],
+            err_w=[jnp.zeros(lo.view_shape, sd) if dp else None
+                   for lo, dp in zip(self.layouts, self.dp_mask)],
+            err_s=[jnp.zeros(lo.chunk_shape, sd) if dp else None
+                   for lo, dp in zip(self.layouts, self.dp_mask)],
+        )
+
+    def step(self, comm: Comm, params, grads, state: OneBitAdamState,
+             worker_index=None):
+        cfg = self.cfg
+        t = state.step
+        lr = cfg.lr(t).astype(jnp.float32)
+        warm = t < cfg.onebit_warmup
+
+        xs, gs = self.flat(params), self.flat(grads)
+        gv = [C.constrain(C.to_view(g.astype(jnp.float32), lo), vs) if dp
+              else g.astype(jnp.float32)
+              for g, lo, dp, vs in zip(gs, self.layouts, self.dp_mask,
+                                       self.vspecs)]
+
+        dp_idx = [i for i, dp in enumerate(self.dp_mask) if dp]
+
+        def full_branch(op):
+            gs_dp, ew, es = op
+            out = [AR.fullprec_allreduce_view(comm, g, cfg.comm_dtype,
+                                              vspec=self.vspecs[i])
+                   for g, i in zip(gs_dp, dp_idx)]
+            return out, ew, es
+
+        def onebit_branch(op):
+            gs_dp, ew, es = op
+            outs, news_w, news_s = [], [], []
+            for g, w, s, i in zip(gs_dp, ew, es, dp_idx):
+                lo = self.layouts[i]
+                o, ef = AR.onebit_allreduce_view(
+                    comm, g, AR.EFState(w, s), lo, self.ar_cfg,
+                    vspec=self.vspecs[i], worker_index=worker_index)
+                outs.append(o.astype(jnp.float32))
+                news_w.append(ef.err_worker)
+                news_s.append(ef.err_server)
+            return outs, news_w, news_s
+
+        op = ([gv[i] for i in dp_idx],
+              [state.err_w[i] for i in dp_idx],
+              [state.err_s[i] for i in dp_idx])
+        agg_dp, new_ew_dp, new_es_dp = jax.lax.cond(
+            warm, full_branch, onebit_branch, op)
+
+        gbar = list(gv)
+        new_ew, new_es = list(state.err_w), list(state.err_s)
+        for k, i in enumerate(dp_idx):
+            gbar[i] = agg_dp[k]
+            new_ew[i] = new_ew_dp[k]
+            new_es[i] = new_es_dp[k]
+
+        new_x, new_m, new_v = [], [], []
+        for x, g, m, v, lo, dp in zip(xs, gbar, state.m, state.v,
+                                      self.layouts, self.dp_mask):
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            nm = cfg.beta1 * m32 + (1 - cfg.beta1) * g
+            if dp:
+                nv = jnp.where(warm,
+                               cfg.beta2 * v32 + (1 - cfg.beta2) * g * g, v32)
+            else:  # local leaves: plain Adam, v every step
+                nv = cfg.beta2 * v32 + (1 - cfg.beta2) * g * g
+            delta = lr * nm / jnp.sqrt(v32 + cfg.eps)
+            if dp:
+                delta = C.from_view(delta, lo)
+            new_x.append((x.astype(jnp.float32) - delta).astype(x.dtype))
+            new_m.append(nm.astype(m.dtype))
+            new_v.append(nv.astype(v.dtype))
+
+        metrics = {"lr": lr, "synced": jnp.asarray(True), "var_round": warm,
+                   "interval": jnp.ones((), jnp.int32)}
+        return (jax.tree.unflatten(self.treedef, new_x),
+                OneBitAdamState(step=t + 1, m=new_m, v=new_v,
+                                err_w=new_ew, err_s=new_es), metrics)

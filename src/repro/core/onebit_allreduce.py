@@ -1,0 +1,169 @@
+"""Error-feedback 1-bit AllReduce (paper Algorithm 2), TPU-native.
+
+DeepSpeed implements Algorithm 2 as a custom two-phase NCCL/Gloo collective.
+The TPU-idiomatic equivalent used here is a chunked scatter-reduce /
+all-gather over the mesh worker axes, exchanging *bit-packed uint8* tensors:
+
+  worker side   z = u + δ_w ;  (packed, scales, δ_w') = EF-compress(z)
+  scatter       all_to_all of packed chunks (+ scales): worker j receives
+                every worker's chunk j            — "send to server"
+  server side   avg = mean_i scale_i·sign_i ;  y = avg + δ_s ;
+                (packed', scale', δ_s') = EF-compress(y)
+  gather        all_gather of the compressed chunk results — "broadcast"
+
+Per-worker traffic is ≈ d/8 + d/8 bytes versus 4·d for a bf16 ring
+AllReduce: the 32× volume reduction of the paper, visible verbatim in the
+lowered HLO as uint8 collectives (this is what the roofline's collective
+term reads).
+
+All chunk bookkeeping is static (see ``compressor.make_layout``); every op
+other than the two collectives is chip-local.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressor as C
+from repro.core.comm import Comm
+
+
+class EFState(NamedTuple):
+    """Per-leaf error-feedback state (worker error + this worker's server
+    error chunk)."""
+
+    err_worker: jnp.ndarray   # view shape (n, A/n, *rest)
+    err_server: jnp.ndarray   # chunk shape (A/n, *rest)
+
+
+def init_ef_state(layout: C.LeafLayout, dtype=jnp.float32) -> EFState:
+    return EFState(
+        err_worker=jnp.zeros(layout.view_shape, dtype),
+        err_server=jnp.zeros(layout.chunk_shape, dtype),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class OneBitConfig:
+    scale_mode: C.ScaleMode = "tensor"   # paper-faithful default
+    compute_dtype: jnp.dtype = jnp.float32
+    quantize: bool = True                # False -> exact chunked mean
+                                         # (identity compressor; tests/ablation)
+    model_axes: tuple = ()               # manual tensor-parallel axes when the
+                                         # optimizer runs fully-manual (scales
+                                         # psum over these)
+
+
+def onebit_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
+                          layout: C.LeafLayout, cfg: OneBitConfig,
+                          vspec=None, worker_index=None):
+    """Algorithm 2 over one leaf's comm view. Returns (mean estimate, EFState).
+
+    ``z_view``: this worker's buffer in view shape (n, A/n, *rest).
+    ``vspec``: tensor-parallel PartitionSpec entries of the view — threaded
+    through every shape-changing op so the compressed pipeline stays
+    model-sharded (see compressor.constrain).
+    The returned value estimates ``mean_i z_view^{(i)}`` in view shape.
+    """
+    cst = lambda x: C.constrain(x, vspec)
+    if not cfg.quantize:
+        # Identity compressor: the exact same collective schedule exchanging
+        # uncompressed values. Used for the degenerate-equivalence tests and
+        # the "no compression" ablation.
+        recv = cst(comm.all_to_all(z_view, split_axis=0, concat_axis=0))
+        avg = recv.mean(axis=0)
+        out = cst(comm.all_gather(avg[None], axis=0, tiled=True))
+        return out.astype(cfg.compute_dtype), ef
+
+    mask = C.pad_mask(layout, dtype=z_view.dtype)
+    # --- worker side -------------------------------------------------------
+    zw = cst(z_view + ef.err_worker.astype(z_view.dtype))
+    packed, scales, err_w = C.ef_compress(zw, layout, cfg.scale_mode, mask,
+                                          cfg.model_axes)
+    packed, err_w = cst(packed), cst(err_w)
+
+    # --- scatter: worker j collects chunk j from everyone ------------------
+    # packed: (n, A/n, ..., C/8) uint8 -> rows become sender index.
+    recv = cst(comm.all_to_all(packed, split_axis=0, concat_axis=0))
+    # scales need the same routing; broadcast "tensor" scales to chunk rows
+    # first so each receiver gets the proper per-sender magnitude.
+    bscales = jnp.broadcast_to(
+        scales, (layout.n,) + scales.shape[1:]).astype(jnp.float32)
+    rscales = comm.all_to_all(bscales, split_axis=0, concat_axis=0)
+
+    # --- server side (this worker serves its chunk) -------------------------
+    vals = cst(C.unpack_signs(recv, layout.pack_count, cfg.compute_dtype))
+    vals = vals * rscales.astype(cfg.compute_dtype)
+    avg = vals.mean(axis=0)                                   # (A/n, *rest)
+    y = avg + ef.err_server.astype(cfg.compute_dtype)
+    # Server-side compression shares the leaf layout but acts on one chunk;
+    # reuse the chunk-level granularity of the configured mode.
+    y_exp = cst(y[None])                                      # (1, A/n, *rest)
+    widx = comm.index() if worker_index is None else worker_index
+    s_mask = None if mask is None else mask[widx][None]
+    packed_s, scales_s, err_s = _server_compress(
+        y_exp, layout, cfg.scale_mode, s_mask, cfg.model_axes)
+    packed_s = cst(packed_s)
+    err_s = cst(err_s)[0]
+
+    # --- gather: broadcast compressed chunk results -------------------------
+    gpacked = cst(comm.all_gather(packed_s, axis=0, tiled=True))
+    gscales = comm.all_gather(
+        scales_s.astype(jnp.float32), axis=0, tiled=True)
+    out = cst(C.unpack_signs(gpacked, layout.pack_count, cfg.compute_dtype))
+    out = out * gscales.astype(cfg.compute_dtype)
+    return out, EFState(err_worker=err_w.astype(ef.err_worker.dtype),
+                        err_server=err_s.astype(ef.err_server.dtype))
+
+
+def _server_compress(y, layout, mode, mask, model_axes=()):
+    """EF-compress one server chunk (leading dim 1)."""
+    from repro.core.compressor import _psum_model
+    az = jnp.abs(y)
+    if mask is not None:
+        az = az * mask
+    rest = layout.rest_factor
+    for s in y.shape[2:]:
+        rest *= s
+    if mode == "row":
+        axes = tuple(range(2, y.ndim))
+        cnt = max(rest, 1)
+        s = (_psum_model(az.sum(axis=axes), model_axes) / cnt
+             if y.ndim > 2 else az)
+        scales = s.reshape(y.shape[:2] + (1,) * (y.ndim - 2))
+    else:  # tensor / chunk -> one scale for this chunk
+        denom = (az.size * layout.rest_factor if mask is None
+                 else jnp.maximum(mask.sum() * rest, 1.0))
+        denom = jnp.asarray(denom, y.dtype)
+        scales = (_psum_model(az.sum(), model_axes)
+                  / denom).reshape((1,) * y.ndim)
+    packed = C.pack_signs(y)
+    signs = jnp.where(y >= 0, 1.0, -1.0).astype(y.dtype)
+    err = y - signs * scales.astype(y.dtype)
+    if mask is not None:
+        err = err * mask.astype(err.dtype)
+    return packed, scales, err
+
+
+def fullprec_allreduce_view(comm: Comm, z_view: jnp.ndarray,
+                            comm_dtype=jnp.bfloat16,
+                            vspec=None) -> jnp.ndarray:
+    """Full-precision mean over workers (used on T_v steps) at the wire
+    dtype, as the paper does with fp16 training.
+
+    Implemented as the chunked scatter-mean/all-gather (reduce-scatter +
+    all-gather decomposition of a ring AllReduce: identical per-device
+    traffic, ~2·d bytes). Besides matching the 1-bit path's transport, this
+    sidesteps an XLA CPU-backend crash on bf16 ``all-reduce`` inside
+    partial-manual shard_map (bf16 a2a/all-gather are fine; TPU unaffected).
+    """
+    acc = z_view.dtype
+    cst = lambda x: C.constrain(x, vspec)
+    zc = cst(z_view.astype(comm_dtype))
+    recv = cst(comm.all_to_all(zc, split_axis=0, concat_axis=0))
+    avg = recv.astype(jnp.float32).mean(axis=0).astype(comm_dtype)
+    out = cst(comm.all_gather(avg[None], axis=0, tiled=True))
+    return out.astype(acc)

@@ -1,0 +1,179 @@
+"""Step-index policies T_v (variance freezing) and T_u (local steps).
+
+Both policies are expressed as small carried-state machines over jnp scalars
+so the entire training step stays jit-compiled with no host round-trips.
+
+Paper policies (§6):
+
+* **T_v (adaptive variance freezing)** — the j-th and (j+1)-th variance
+  updates are ``2^{floor(j/κ)}`` steps apart (κ=16). Additionally, variance
+  updates stop permanently once the local-step interval exceeds 1 ("we
+  additionally stop updating variance when t_{j+1} − t_j > 1").
+* **T_u (learning-rate-proportional local steps)** — sync every step during
+  lr warmup; afterwards the sync interval doubles every ``double_every``
+  steps (tracking the lr half-life), clipped at ``max_interval`` (H=16).
+
+Baseline policies: ``every step`` (original Adam / ablations) and
+``first T0 steps`` (the 1-bit Adam two-stage split, Algorithm 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _i32(x):
+    return jnp.asarray(x, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Variance-update policies (T_v)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveFreezePolicy:
+    """Paper's exponentially-spaced T_v: k_{j+1} - k_j = 2^{floor(j/kappa)}."""
+
+    kappa: int = 16
+    max_interval_pow: int = 30  # safety clamp on the exponent
+
+    def init(self):
+        # (next update step, j = number of updates done, stopped flag)
+        return (_i32(0), _i32(0), jnp.asarray(False))
+
+    def step(self, state, t, local_interval):
+        nxt, j, stopped = state
+        stopped = jnp.logical_or(stopped, local_interval > 1)
+        fire = jnp.logical_and(t == nxt, jnp.logical_not(stopped))
+        expo = jnp.minimum(j // self.kappa, self.max_interval_pow)
+        gap = jnp.left_shift(_i32(1), expo.astype(jnp.int32))
+        nxt = jnp.where(fire, t + gap, nxt)
+        j = jnp.where(fire, j + 1, j)
+        return fire, (nxt, j, stopped)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedWarmupPolicy:
+    """T_v = {0, ..., T0-1}: 1-bit Adam's full-precision stage (Alg. 4)."""
+
+    t0: int
+
+    def init(self):
+        return ()
+
+    def step(self, state, t, local_interval):
+        del local_interval
+        return t < self.t0, state
+
+
+@dataclasses.dataclass(frozen=True)
+class EveryStepVariancePolicy:
+    """T_v = all steps: original Adam behaviour."""
+
+    def init(self):
+        return ()
+
+    def step(self, state, t, local_interval):
+        del local_interval
+        return jnp.asarray(True), state
+
+
+# ---------------------------------------------------------------------------
+# Sync (local step) policies (T_u)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LrProportionalSyncPolicy:
+    """Interval 1 through warmup, then doubling every ``double_every`` steps.
+
+    interval(t) = 1                                   if t < warmup
+                = min(2^{floor((t-warmup)/double_every)}, max_interval)
+
+    The sync fires when ``t`` reaches the scheduled next sync step; the next
+    sync is then ``interval(t)`` steps away.
+    """
+
+    warmup_steps: int
+    double_every: int
+    max_interval: int = 16
+
+    def interval(self, t):
+        past = jnp.maximum(t - self.warmup_steps, 0)
+        expo = jnp.minimum(past // self.double_every, 30)
+        iv = jnp.left_shift(_i32(1), expo.astype(jnp.int32))
+        iv = jnp.minimum(iv, self.max_interval)
+        return jnp.where(t < self.warmup_steps, _i32(1), iv)
+
+    def init(self):
+        return (_i32(0),)  # next sync step
+
+    def step(self, state, t):
+        (nxt,) = state
+        fire = t >= nxt
+        nxt = jnp.where(fire, t + self.interval(t), nxt)
+        return fire, (nxt,), self.interval(t)
+
+
+@dataclasses.dataclass(frozen=True)
+class EveryStepSyncPolicy:
+    """T_u = all steps (no communication skipping; Fig. 5 ablation)."""
+
+    def init(self):
+        return ()
+
+    def step(self, state, t):
+        return jnp.asarray(True), state, _i32(1)
+
+
+# ---------------------------------------------------------------------------
+# Learning-rate schedules (training substrate)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LinearWarmupExpDecay:
+    """The paper's BERT schedule: linear warmup, then ×decay every period."""
+
+    peak_lr: float
+    warmup_steps: int
+    decay: float = 0.99
+    decay_period: int = 520
+
+    def __call__(self, t):
+        t = jnp.asarray(t, jnp.float32)
+        w = jnp.maximum(self.warmup_steps, 1)
+        warm = self.peak_lr * (t + 1) / w
+        k = jnp.floor(jnp.maximum(t - self.warmup_steps, 0) / self.decay_period)
+        decayed = self.peak_lr * jnp.power(self.decay, k)
+        return jnp.where(t < self.warmup_steps, warm, decayed)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearWarmupCosine:
+    """The paper's GPT-2 schedule: linear warmup + single-cycle cosine."""
+
+    peak_lr: float
+    warmup_steps: int
+    total_steps: int
+    min_lr: float = 1e-5
+
+    def __call__(self, t):
+        t = jnp.asarray(t, jnp.float32)
+        w = jnp.maximum(self.warmup_steps, 1)
+        warm = self.peak_lr * (t + 1) / w
+        frac = jnp.clip((t - self.warmup_steps) /
+                        jnp.maximum(self.total_steps - self.warmup_steps, 1),
+                        0.0, 1.0)
+        cos = self.min_lr + 0.5 * (self.peak_lr - self.min_lr) * (
+            1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(t < self.warmup_steps, warm, cos)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantLr:
+    lr: float
+
+    def __call__(self, t):
+        return jnp.full((), self.lr, jnp.float32)

@@ -1,0 +1,252 @@
+"""0/1 Adam (paper Algorithm 1) — the paper's primary contribution.
+
+Per step t (per worker i, with v frozen between refreshes):
+
+    m_{t+½} = β₁ m_t + (1−β₁) g_t                      (local)
+    x_{t+½} = x_t − γ_t · m_{t+½} / √(v_t+ε)           (local)
+    u_{t+½} = u_t + γ_t · m_{t+½}                      (local)
+    if t ∈ T_u:   ū = 1bit-AllReduce(u_{t+½})          (Algorithm 2)
+                  m_{t+1} = ū / Σ_{h=t'+1}^t γ_h        (momentum approx)
+                  x_{t+1} = x_{t'} − ū / √(v_t+ε)       (sync to mean)
+                  u_{t+1} = 0 ; t' = t
+    if t ∈ T_v:   ḡ = AllReduce(g_t) ;  v_{t+1} = β₂ v_t + (1−β₂) ḡ²
+
+Indexing note: Algorithm 1 as printed writes ``m_t`` on lines 4–5 and
+``Σ_{h=t'}`` on line 8; the appendix analysis (Lemma 8 accumulates momenta
+over steps k+1..t and divides by t−k) and the requirement that
+``T_u = every step`` + lossless compression recover *distributed Adam
+exactly* pin down the intended indexing used here: the freshly-updated
+momentum enters x and u, and the denominator sums γ over the steps since
+(exclusive) the last sync. Under that convention the degenerate-config
+equivalence with Adam is exact — asserted in tests/test_optimizers.py.
+
+Implementation notes:
+
+* **Anchor handling.** Line 9 needs x_{t'}. Default (``store_anchor=True``)
+  keeps the synced copy so workers agree bitwise after every sync. The
+  memory-optimized mode exploits the schedule guarantee that v is frozen
+  whenever the sync interval exceeds 1 (the paper's own policy), so
+  ``x_{t+½} = x_{t'} − u_{t+½}/√(v+ε)`` holds exactly and
+  ``x_{t+1} = x_{t+½} + (u_{t+½} − ū)/√(v+ε)`` recovers the sync without a
+  second parameter copy, at the cost of ~1e-6 rounding drift per sync.
+* All optimizer state except the parameters lives in *comm view* shape
+  (see compressor.py), so elementwise math and the sync path share layout
+  and nothing ever reshards across the tensor-parallel axis.
+* Leaves with ``dp_mask=False`` (expert-parallel params that exist once per
+  worker axis) run plain local Adam — they have no DP gradient exchange for
+  the paper's technique to compress (see DESIGN §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressor as C
+from repro.core import onebit_allreduce as AR
+from repro.core.comm import Comm
+
+
+class ZeroOneAdamState(NamedTuple):
+    step: jnp.ndarray
+    gamma_acc: jnp.ndarray       # Σ γ_h since last sync (inclusive scheme)
+    sync_pstate: tuple           # T_u policy carried state
+    var_pstate: tuple            # T_v policy carried state
+    m: list                      # view shapes
+    v: list                      # view shapes (replicated-consistent)
+    u: list                      # view shapes (None for non-DP leaves)
+    err_w: list                  # view shapes (None for non-DP leaves)
+    err_s: list                  # chunk shapes (None for non-DP leaves)
+    anchor: list                 # x_{t'} copies (None unless store_anchor)
+
+
+class ZeroOneAdam:
+    def __init__(self, cfg, param_shapes, specs, dp_mask, n_workers,
+                 model_axis_sizes=None):
+        self.cfg = cfg
+        self.n = n_workers
+        self.model_axes = tuple((model_axis_sizes or {}).keys())
+        leaves, self.treedef = jax.tree.flatten(param_shapes)
+        self.specs = self.treedef.flatten_up_to(specs)
+        self.dp_mask = self.treedef.flatten_up_to(dp_mask)
+        self.layouts = [
+            C.make_layout(l.shape, s, n_workers,
+                          rest_factor=C.spec_model_factor(
+                              s, model_axis_sizes or {}),
+                          force_flatten=bool(model_axis_sizes))
+            for l, s in zip(leaves, self.specs)]
+        self.vspecs = [C.view_spec_entries(lo, sp)
+                       for lo, sp in zip(self.layouts, self.specs)]
+        self.ar_cfg = AR.OneBitConfig(scale_mode=cfg.scale_mode,
+                                      quantize=cfg.quantize,
+                                      model_axes=self.model_axes)
+
+    def flat(self, tree):
+        return self.treedef.flatten_up_to(tree)
+
+    def init(self, params) -> ZeroOneAdamState:
+        """DP leaves store state in comm-view shape; expert-parallel
+        (dp=False) leaves store natural-shape state so their sharding
+        matches the parameter's (worker axes on the expert dim)."""
+        sd = self.cfg.state_dtype
+        los, dps = self.layouts, self.dp_mask
+        ps = self.flat(params)
+
+        def zst(p, lo, dp):
+            return jnp.zeros(lo.view_shape if dp else p.shape, sd)
+
+        return ZeroOneAdamState(
+            step=jnp.zeros((), jnp.int32),
+            gamma_acc=jnp.zeros((), jnp.float32),
+            sync_pstate=self.cfg.sync_policy.init(),
+            var_pstate=self.cfg.var_policy.init(),
+            m=[zst(p, lo, dp) for p, lo, dp in zip(ps, los, dps)],
+            v=[zst(p, lo, dp) for p, lo, dp in zip(ps, los, dps)],
+            u=[jnp.zeros(lo.view_shape, sd) if dp else None
+               for lo, dp in zip(los, dps)],
+            err_w=[jnp.zeros(lo.view_shape, sd) if dp else None
+                   for lo, dp in zip(los, dps)],
+            err_s=[jnp.zeros(lo.chunk_shape, sd) if dp else None
+                   for lo, dp in zip(los, dps)],
+            anchor=[(p * 1.0).astype(p.dtype)
+                    if (dp and self.cfg.store_anchor) else None
+                    for p, dp in zip(ps, dps)],
+        )
+
+    def step(self, comm: Comm, params, grads, state: ZeroOneAdamState,
+             worker_index=None):
+        cfg = self.cfg
+        t = state.step
+        lr = cfg.lr(t).astype(jnp.float32)
+
+        do_sync, sync_ps, interval = cfg.sync_policy.step(state.sync_pstate, t)
+        do_var, var_ps = cfg.var_policy.step(state.var_pstate, t, interval)
+
+        los, dps = self.layouts, self.dp_mask
+        xs, gs = self.flat(params), self.flat(grads)
+        gv = [C.constrain(C.to_view(g.astype(jnp.float32), lo), vs) if dp
+              else g.astype(jnp.float32)
+              for g, lo, dp, vs in zip(gs, los, dps, self.vspecs)]
+        gamma_total = state.gamma_acc + lr     # Σ γ over [t', t] inclusive
+
+        # --- local half-step for every leaf --------------------------------
+        x_half, m_half, u_half, denoms = [], [], [], []
+        for x, g, m, v, u, lo, dp in zip(xs, gv, state.m, state.v, state.u,
+                                         los, dps):
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            denom = jnp.sqrt(v32 + cfg.eps)
+            mh = cfg.beta1 * m32 + (1 - cfg.beta1) * g
+            delta = lr * mh / denom
+            if not dp:
+                delta_nat = delta  # natural shape already
+            else:
+                delta_nat = C.from_view(delta, lo)
+            x_half.append((x.astype(jnp.float32) - delta_nat).astype(x.dtype))
+            m_half.append(mh)
+            u_half.append((u.astype(jnp.float32) + lr * mh) if dp else None)
+            denoms.append(denom)
+
+        dp_idx = [i for i, dp in enumerate(dps) if dp]
+
+        # --- T_u branch: 1-bit sync of the accumulated buffer --------------
+        use_anchor = cfg.store_anchor
+
+        def sync_branch(op):
+            xh, mh, uh, ew, es, anc = op
+            nx, nm, nu, nw, ns = list(xh), list(mh), [None] * len(uh), \
+                list(ew), list(es)
+            na = list(anc)
+            for k, i in enumerate(dp_idx):
+                lo = self.layouts[i]
+                ubar, ef = AR.onebit_allreduce_view(
+                    comm, uh[k], AR.EFState(ew[k], es[k]), lo, self.ar_cfg,
+                    vspec=self.vspecs[i], worker_index=worker_index)
+                ubar = ubar.astype(jnp.float32)
+                nm[k] = ubar / gamma_total
+                if use_anchor:
+                    # x_{t+1} = x_{t'} - ū/√(v+ε): bitwise identical on all
+                    # workers (ū and the anchor are replicated).
+                    nx[k] = (anc[k].astype(jnp.float32)
+                             - C.from_view(ubar / denoms[i], lo)
+                             ).astype(xh[k].dtype)
+                    na[k] = nx[k]
+                else:
+                    corr = (uh[k] - ubar) / denoms[i]
+                    nx[k] = (xh[k].astype(jnp.float32)
+                             + C.from_view(corr, lo)).astype(xh[k].dtype)
+                nu[k] = jnp.zeros_like(uh[k])
+                nw[k], ns[k] = ef.err_worker, ef.err_server
+            return nx, nm, nu, nw, ns, na
+
+        def local_branch(op):
+            xh, mh, uh, ew, es, anc = op
+            return (list(xh), list(mh), list(uh), list(ew), list(es),
+                    list(anc))
+
+        op = ([x_half[i] for i in dp_idx],
+              [m_half[i] for i in dp_idx],
+              [u_half[i] for i in dp_idx],
+              [state.err_w[i] for i in dp_idx],
+              [state.err_s[i] for i in dp_idx],
+              [state.anchor[i] for i in dp_idx])
+        sx, sm, su, sw, ss, sa = jax.lax.cond(do_sync, sync_branch,
+                                              local_branch, op)
+
+        new_x, new_m = list(x_half), list(m_half)
+        new_u = list(u_half)
+        new_ew, new_es = list(state.err_w), list(state.err_s)
+        new_anchor = list(state.anchor)
+        for k, i in enumerate(dp_idx):
+            new_x[i], new_m[i], new_u[i] = sx[k], sm[k], su[k]
+            new_ew[i], new_es[i] = sw[k], ss[k]
+            new_anchor[i] = sa[k]
+
+        # --- T_v branch: full-precision variance refresh --------------------
+        def var_branch(op):
+            vs = op
+            out = []
+            for k, i in enumerate(dp_idx):
+                gbar = AR.fullprec_allreduce_view(comm, gv[i],
+                                                  cfg.comm_dtype,
+                                                  vspec=self.vspecs[i])
+                out.append(cfg.beta2 * vs[k].astype(jnp.float32)
+                           + (1 - cfg.beta2) * gbar * gbar)
+            return out
+
+        def keep_branch(op):
+            return [v.astype(jnp.float32) for v in op]
+
+        v_dp = jax.lax.cond(do_var, var_branch, keep_branch,
+                            [state.v[i] for i in dp_idx])
+
+        new_v = list(state.v)
+        for k, i in enumerate(dp_idx):
+            new_v[i] = v_dp[k].astype(state.v[i].dtype)
+
+        # --- non-DP leaves: plain local Adam (v every step) -----------------
+        for i, dp in enumerate(dps):
+            if dp:
+                continue
+            v32 = state.v[i].astype(jnp.float32)
+            new_v[i] = (cfg.beta2 * v32
+                        + (1 - cfg.beta2) * gv[i] * gv[i]).astype(
+                            state.v[i].dtype)
+
+        new_gamma = jnp.where(do_sync, 0.0, gamma_total)
+        sd = cfg.state_dtype
+        new_state = ZeroOneAdamState(
+            step=t + 1,
+            gamma_acc=new_gamma,
+            sync_pstate=sync_ps,
+            var_pstate=var_ps,
+            m=[m.astype(sd) for m in new_m],
+            v=new_v,
+            u=[u.astype(sd) if u is not None else None for u in new_u],
+            err_w=[w.astype(sd) if w is not None else None for w in new_ew],
+            err_s=[s.astype(sd) if s is not None else None for s in new_es],
+            anchor=new_anchor,
+        )
+        metrics = {"lr": lr, "synced": do_sync, "var_round": do_var,
+                   "interval": interval}
+        return jax.tree.unflatten(self.treedef, new_x), new_state, metrics

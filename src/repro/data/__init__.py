@@ -1,0 +1,1 @@
+from repro.data.synthetic import DataConfig, SyntheticLM, SyntheticClassify, worker_shard

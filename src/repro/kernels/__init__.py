@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (optimizer side):
+fused error-feedback 1-bit compress/decompress + fused 0/1 Adam local step.
+Validated with interpret=True against ref.py oracles on CPU.
+"""
+from repro.kernels import ops, ref

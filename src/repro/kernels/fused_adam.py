@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused 0/1 Adam local half-step.
+
+Fuses the per-step elementwise chain (Algorithm 1 lines 3-5):
+
+    m' = β₁·m + (1−β₁)·g
+    Δ  = γ·m' / sqrt(v + ε)        (applied to x outside, natural shape)
+    u' = u + γ·m'
+
+into one VMEM pass: 4 reads + 3 writes instead of ~10 memory sweeps as
+separate XLA ops — the optimizer becomes strictly HBM-bandwidth-bound at
+~7 bytes/param/step.
+
+Operands are 2-D tiles of the comm view; scalars (γ, β₁) arrive as (1, 1)
+operands so one compiled kernel serves every step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_kernel(g_ref, m_ref, u_ref, v_ref, lr_ref, b1_ref,
+                  m_out, u_out, delta_out, *, eps):
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    lr = lr_ref[0, 0].astype(jnp.float32)
+    b1 = b1_ref[0, 0].astype(jnp.float32)
+    mh = b1 * m + (1.0 - b1) * g
+    delta = lr * mh * jax.lax.rsqrt(v + eps)
+    m_out[...] = mh.astype(m_out.dtype)
+    u_out[...] = (u + lr * mh).astype(u_out.dtype)
+    delta_out[...] = delta.astype(delta_out.dtype)
+
+
+def fused_local_step(g, m, u, v, lr, beta1, *, eps=1e-8,
+                     block=(8, 1024), interpret: bool = True):
+    """One fused 0/1 Adam local step over (R, C) views.
+
+    Returns (m', u', delta). ``lr`` traced scalar; β₁ static-ish scalar.
+    """
+    R, C = g.shape
+    br, bc = min(block[0], R), min(block[1], C)
+    assert R % br == 0 and C % bc == 0, (g.shape, block)
+    grid = (R // br, C // bc)
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    b1_arr = jnp.asarray(beta1, jnp.float32).reshape(1, 1)
+    tile = lambda: pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    scal = lambda: pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    import functools
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, eps=eps),
+        grid=grid,
+        in_specs=[tile(), tile(), tile(), tile(), scal(), scal()],
+        out_specs=[tile(), tile(), tile()],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), m.dtype),
+            jax.ShapeDtypeStruct((R, C), u.dtype),
+            jax.ShapeDtypeStruct((R, C), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, m, u, v, lr_arr, b1_arr)

@@ -1,0 +1,47 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernels execute in Python via
+the Pallas interpreter for correctness validation); on TPU the same calls
+compile to fused Mosaic kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_adam as _fa
+from repro.kernels import onebit as _ob
+
+
+def _interpret_default():
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def ef_compress(z, err, block_rows: int = 8, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _ob.ef_compress(z, err, block_rows=block_rows,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret",
+                                             "dtype"))
+def decompress(packed, scales, block_rows: int = 8,
+               interpret: bool | None = None, dtype=jnp.float32):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _ob.decompress(packed, scales, block_rows=block_rows,
+                          interpret=interpret, dtype=dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("beta1", "eps", "block",
+                                             "interpret"))
+def fused_local_step(g, m, u, v, lr, beta1: float = 0.9, eps: float = 1e-8,
+                     block=(8, 1024), interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _fa.fused_local_step(g, m, u, v, lr, beta1, eps=eps, block=block,
+                                interpret=interpret)

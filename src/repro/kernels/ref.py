@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_compress_ref(z, err):
+    """(R, C) -> (packed u8 (R, C//8), scales f32 (R,), err_out)."""
+    zw = z.astype(jnp.float32) + err.astype(jnp.float32)
+    s = jnp.abs(zw).mean(axis=1)
+    bits = zw >= 0
+    packed = jnp.packbits(bits.astype(jnp.uint8), axis=-1, bitorder="big")
+    zhat = jnp.where(bits, s[:, None], -s[:, None])
+    return packed, s, (zw - zhat).astype(err.dtype)
+
+
+def decompress_ref(packed, scales, dtype=jnp.float32):
+    bits = jnp.unpackbits(packed, axis=-1, bitorder="big")
+    vals = bits.astype(jnp.float32) * 2.0 - 1.0
+    return (vals * scales[:, None].astype(jnp.float32)).astype(dtype)
+
+
+def fused_local_step_ref(g, m, u, v, lr, beta1, eps=1e-8):
+    g32, m32 = g.astype(jnp.float32), m.astype(jnp.float32)
+    u32, v32 = u.astype(jnp.float32), v.astype(jnp.float32)
+    mh = beta1 * m32 + (1.0 - beta1) * g32
+    delta = lr * mh / jnp.sqrt(v32 + eps)
+    return mh.astype(m.dtype), (u32 + lr * mh).astype(u.dtype), delta

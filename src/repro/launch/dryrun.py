@@ -1,0 +1,328 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede every other import (jax locks the device
+# count at first initialization).
+
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh)
+combination lowers and compiles, and extract the roofline inputs.
+
+For each combination this lowers + compiles the real jitted program
+(train_step under partial-manual shard_map, or the serving prefill/decode
+step), prints ``memory_analysis()`` / ``cost_analysis()``, parses the
+optimized HLO for collective traffic, and (optionally) appends a JSON
+record consumed by benchmarks/roofline.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch chatglm3-6b --shape train_4k
+  python -m repro.launch.dryrun --all --json results/dryrun.jsonl
+  python -m repro.launch.dryrun --arch gemma3-12b --shape long_500k --multi-pod
+"""
+import argparse
+import dataclasses
+import gc
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_SHAPES, ASSIGNED, get, list_archs
+from repro.core import OptimizerConfig, schedules as S
+from repro.launch import shapes as SH
+from repro.launch.mesh import make_production_mesh, worker_axes
+from repro.models import transformer as T
+from repro.serve import Server
+from repro.train import Trainer, TrainerConfig
+
+BYTES = {"f32": 4, "bf16": 2, "f16": 2, "u8": 1, "s8": 1, "u32": 4,
+         "s32": 4, "f64": 8, "s64": 8, "u64": 8, "pred": 1, "s16": 2,
+         "u16": 2}
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+
+def _computation_blocks(hlo_text: str):
+    """Split an HLO module into named computation blocks."""
+    blocks = {}
+    cur, buf = None, []
+    hdr = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(")
+    for line in hlo_text.splitlines():
+        m = hdr.match(line)
+        if m and line.rstrip().endswith("{") and "->" in line:
+            if cur is not None:
+                blocks[cur] = buf
+            cur, buf = m.group(1), []
+            continue
+        if line.startswith("}"):
+            if cur is not None:
+                blocks[cur] = buf
+            cur, buf = None, []
+            continue
+        if cur is not None:
+            buf.append(line)
+    return blocks
+
+
+def _loop_multipliers(hlo_text: str, blocks):
+    """body-computation -> trip count (XLA cost analysis counts while-loop
+    bodies once; scans over layers/microbatches must be scaled)."""
+    mult = {}
+    cond_body = []
+    for line in hlo_text.splitlines():
+        m = re.search(r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*"
+                      r"body=%?([\w\.\-]+)", line)
+        if m:
+            cond_body.append((m.group(1), m.group(2)))
+    for cond, body in cond_body:
+        trip = 1
+        for line in blocks.get(cond, []):
+            for c in re.findall(r"constant\((\d+)\)", line):
+                trip = max(trip, int(c))
+        mult[body] = trip
+    return mult
+
+
+def _block_parents(hlo_text: str, blocks):
+    """computation -> list of computations that call it (while/call/cond)."""
+    parents = {}
+    ref_re = re.compile(
+        r"(?:body=|condition=|to_apply=|calls=|branch_computations=\{|"
+        r"true_computation=|false_computation=)%?([\w\.\-]+)")
+    extra_re = re.compile(r"branch_computations=\{([^}]*)\}")
+    for name, lines in blocks.items():
+        for line in lines:
+            for ref in ref_re.findall(line):
+                parents.setdefault(ref, []).append(name)
+            for grp in extra_re.findall(line):
+                for ref in re.findall(r"%?([\w\.\-]+)", grp):
+                    parents.setdefault(ref, []).append(name)
+    return parents
+
+
+def collective_bytes(hlo_text: str):
+    """Per-device collective traffic from optimized (SPMD-partitioned) HLO.
+
+    Shapes in the partitioned module are per-device. Ring all-reduce moves
+    ~2x the payload; the other collectives ~1x of the result shape.
+    Ops inside while-loop bodies (lax.scan over layers / microbatches) are
+    scaled by the loop trip count — XLA's own cost analysis counts loop
+    bodies once, which would understate scanned-model traffic ~L-fold.
+    """
+    blocks = _computation_blocks(hlo_text)
+    loop_mult = _loop_multipliers(hlo_text, blocks)
+    parents = _block_parents(hlo_text, blocks)
+
+    def total_mult(comp, depth=0):
+        if depth > 8:
+            return 1
+        m = loop_mult.get(comp, 1)
+        ps = parents.get(comp, [])
+        if not ps:
+            return m
+        return m * max(total_mult(p, depth + 1) for p in ps)
+
+    out = {k: 0.0 for k in _COLL}
+    counts = {k: 0 for k in _COLL}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    op_re = re.compile(
+        r"=\s+(\(?[\w\[\],\s{}/#]*?\)?)\s+"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)(-start|-done)?\(")
+    for comp, lines in blocks.items():
+        scale = total_mult(comp)
+        for line in lines:
+            m = op_re.search(line)
+            if not m:
+                continue
+            op = m.group(2)
+            if m.group(3) == "-done":
+                continue  # counted at -start
+            nbytes = 0.0
+            for dt, dims in shape_re.findall(m.group(1)):
+                if dt not in BYTES:
+                    continue
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                nbytes += n * BYTES[dt]
+            mult = 2.0 if op == "all-reduce" else 1.0
+            out[op] += nbytes * mult * scale
+            counts[op] += scale
+    return out, counts
+
+
+def default_opt_cfg(optimizer: str = "zero_one_adam", scale_mode="tensor"):
+    return OptimizerConfig(
+        name=optimizer,
+        lr=S.LinearWarmupExpDecay(peak_lr=4e-4, warmup_steps=12500),
+        var_policy=S.AdaptiveFreezePolicy(kappa=16),
+        sync_policy=S.LrProportionalSyncPolicy(
+            warmup_steps=12500, double_every=32678, max_interval=16),
+        onebit_warmup=16000,
+        scale_mode=scale_mode,
+        state_dtype=jnp.bfloat16,   # production state dtype (fp16 in paper)
+        comm_dtype=jnp.bfloat16,
+    )
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            optimizer: str = "zero_one_adam", scale_mode: str = "tensor",
+            micro_override=None, window_cache: bool = False,
+            mesh_shape=None, verbose: bool = True):
+    spec = get(arch)
+    shape = SH.SHAPES[shape_name]
+    if shape_name not in spec.shapes:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "note": spec.skip_notes}
+    if mesh_shape is not None:  # perf-iteration override (same chip count)
+        dp, tp = mesh_shape
+        mesh = jax.make_mesh((dp, tp), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    W = worker_axes(mesh)
+    cfg = dataclasses.replace(spec.config, param_dtype=jnp.bfloat16,
+                              compute_dtype=jnp.bfloat16,
+                              window_cache=window_cache)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        n_workers = 1
+        for a in W:
+            n_workers *= mesh.shape[a]
+        b_local = shape.global_batch // n_workers
+        micro = micro_override or max(1, b_local // 2)
+        tr = Trainer(cfg, default_opt_cfg(optimizer, scale_mode), mesh=mesh,
+                     trainer_cfg=TrainerConfig(micro_batches=micro,
+                                               worker_axes=W))
+        fn, _ = tr.mesh_step_fn()
+        params, state, batch = tr.abstract_inputs(
+            shape.global_batch, shape.seq,
+            extra_fn=lambda B, s, c: SH.batch_extras(c, B, s))
+        lowered = fn.lower(params, state, batch)
+    else:
+        srv = Server(cfg, mesh=mesh, worker_axes=W,
+                     batch=shape.global_batch, max_seq=shape.seq)
+        params = srv.abstract_params()
+        cache = srv.abstract_cache()
+        if shape.kind == "prefill":
+            batch = SH.prefill_input_specs(cfg, shape)
+            lowered = srv.prefill_fn().lower(params, batch, cache)
+        else:
+            d = SH.decode_input_specs(cfg, shape)
+            if cfg.enc_layers:
+                lowered = srv.decode_fn().lower(
+                    params, cache, d["tokens"], d["pos"], d["enc_out"])
+            else:
+                lowered = srv.decode_fn().lower(
+                    params, cache, d["tokens"], d["pos"])
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll, coll_counts = collective_bytes(compiled.as_text())
+
+    rec = {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "mesh": (f"{mesh_shape[0]}x{mesh_shape[1]}" if mesh_shape
+                 else ("2x16x16" if multi_pod else "16x16")),
+        "optimizer": optimizer if shape.kind == "train" else None,
+        "scale_mode": scale_mode if shape.kind == "train" else None,
+        "micro": micro_override, "window_cache": window_cache,
+        "kind": shape.kind,
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll,
+        "collective_counts": coll_counts,
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "params": get(arch).config.param_count(),
+        "active_params": get(arch).config.active_param_count(),
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} [{rec['mesh']}] "
+              f"{'opt=' + optimizer if shape.kind == 'train' else shape.kind}")
+        print(f"   memory_analysis: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"out={mem.output_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB (per device)")
+        print(f"   cost_analysis: flops={rec['flops_per_device']:.3e} "
+              f"bytes={rec['bytes_per_device']:.3e} (per device)")
+        tot_coll = sum(coll.values())
+        print(f"   collectives: {tot_coll/2**20:.1f}MiB/device "
+              f"{ {k: round(v/2**20, 2) for k, v in coll.items() if v} }")
+        print(f"   lower {t_lower:.1f}s compile {t_compile:.1f}s")
+    del lowered, compiled
+    gc.collect()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--optimizer", default="zero_one_adam",
+                    choices=["adam", "one_bit_adam", "zero_one_adam"])
+    ap.add_argument("--scale-mode", default="tensor",
+                    choices=["tensor", "chunk", "row"])
+    ap.add_argument("--micro", type=int, default=None)
+    ap.add_argument("--window-cache", action="store_true")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="DPxTP override, e.g. 32x8 (perf iterations)")
+    ap.add_argument("--json", default=None,
+                    help="append JSONL records here")
+    args = ap.parse_args()
+
+    combos = []
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = list(ALL_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    ok = skipped = failed = 0
+    for a, s, mp in combos:
+        try:
+            ms = (tuple(int(x) for x in args.mesh_shape.split("x"))
+                  if args.mesh_shape else None)
+            rec = run_one(a, s, multi_pod=mp, optimizer=args.optimizer,
+                          scale_mode=args.scale_mode,
+                          micro_override=args.micro,
+                          window_cache=args.window_cache,
+                          mesh_shape=ms)
+        except Exception as e:  # noqa: BLE001 — report, keep going
+            rec = {"arch": a, "shape": s,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "failed", "error": f"{type(e).__name__}: {e}"}
+            print(f"== {a} x {s} FAILED: {rec['error'][:500]}")
+        if rec["status"] == "ok":
+            ok += 1
+        elif rec["status"] == "skipped":
+            skipped += 1
+            print(f"== {a} x {s} skipped ({rec['note'][:60]}...)")
+        else:
+            failed += 1
+        if args.json:
+            with open(args.json, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+        gc.collect()
+    print(f"\nDRY-RUN SUMMARY: ok={ok} skipped={skipped} failed={failed}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

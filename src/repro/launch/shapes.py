@@ -1,0 +1,77 @@
+"""Assigned input shapes + abstract input specs (ShapeDtypeStruct only).
+
+``input_specs`` is the single source of the dry-run inputs: weak-type
+correct, shardable, and never allocated. Modality frontends are stubs —
+the audio/VLM entries provide precomputed frame/patch embeddings of the
+right shape (the one sanctioned carve-out).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def batch_extras(cfg: ModelConfig, B: int, S: int, dtype=jnp.bfloat16):
+    """Stub-frontend inputs (audio frames / vision patch embeddings)."""
+    extra = {}
+    if cfg.enc_layers:
+        extra["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_frames, cfg.d_model), dtype)
+    if cfg.vision_tokens:
+        extra["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.d_model), dtype)
+    return extra
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                      dtype=jnp.bfloat16):
+    B, S = shape.global_batch, shape.seq
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    batch.update(batch_extras(cfg, B, S, dtype))
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                        dtype=jnp.bfloat16):
+    B, S = shape.global_batch, shape.seq
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    batch.update(batch_extras(cfg, B, S, dtype))
+    if cfg.enc_layers:
+        # decoder-serving consumes precomputed encoder states
+        batch["enc_out"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_frames, cfg.d_model), dtype)
+        del batch["frames"]
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                       dtype=jnp.bfloat16):
+    B = shape.global_batch
+    d = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+         "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.enc_layers:
+        d["enc_out"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_frames, cfg.d_model), dtype)
+    return d

@@ -1,0 +1,145 @@
+"""Training driver CLI.
+
+Single-host modes (this container): ``--mode single`` (one worker) or
+``--mode sim --workers N`` (N simulated paper-workers via vmap — the real
+0/1 Adam communication semantics at algorithm level). On a TPU fleet the
+same Trainer builds the mesh-mode step (``--mode mesh``) where workers are
+data-parallel groups of the production mesh.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch gpt2 --smoke \\
+      --optimizer zero_one_adam --steps 50 --batch 8 --seq 64 --mode sim \\
+      --workers 4
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpointing import io as ckpt_io
+from repro.configs import get
+from repro.core import OptimizerConfig, comm_accounting, schedules as S
+from repro.data import DataConfig, SyntheticLM
+from repro.train import Trainer, TrainerConfig
+
+
+def build_opt_cfg(args) -> OptimizerConfig:
+    lr = S.LinearWarmupExpDecay(peak_lr=args.lr,
+                                warmup_steps=args.lr_warmup,
+                                decay=0.99, decay_period=max(args.steps // 20,
+                                                             1))
+    return OptimizerConfig(
+        name=args.optimizer, lr=lr,
+        var_policy=S.AdaptiveFreezePolicy(kappa=args.kappa),
+        sync_policy=S.LrProportionalSyncPolicy(
+            warmup_steps=args.sync_warmup, double_every=args.double_every,
+            max_interval=args.max_interval),
+        onebit_warmup=args.onebit_warmup,
+        scale_mode=args.scale_mode)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-friendly)")
+    ap.add_argument("--optimizer", default="zero_one_adam",
+                    choices=["adam", "one_bit_adam", "zero_one_adam"])
+    ap.add_argument("--mode", default="single",
+                    choices=["single", "sim", "mesh"])
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--lr-warmup", type=int, default=20)
+    ap.add_argument("--kappa", type=int, default=4)
+    ap.add_argument("--sync-warmup", type=int, default=20)
+    ap.add_argument("--double-every", type=int, default=50)
+    ap.add_argument("--max-interval", type=int, default=16)
+    ap.add_argument("--onebit-warmup", type=int, default=20)
+    ap.add_argument("--scale-mode", default="tensor",
+                    choices=["tensor", "chunk", "row"])
+    ap.add_argument("--micro-batches", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    spec = get(args.arch)
+    cfg = spec.smoke if args.smoke else spec.config
+    opt_cfg = build_opt_cfg(args)
+
+    if args.mode == "mesh":
+        from repro.launch.mesh import make_production_mesh, worker_axes
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        tr = Trainer(cfg, opt_cfg, mesh=mesh, trainer_cfg=TrainerConfig(
+            micro_batches=args.micro_batches, worker_axes=worker_axes(mesh)))
+        raise SystemExit("mesh mode requires a real TPU fleet; use "
+                         "launch/dryrun.py for the compile-only proof")
+
+    n = args.workers if args.mode == "sim" else 1
+    tr = Trainer(cfg, opt_cfg, n_workers=n, trainer_cfg=TrainerConfig(
+        micro_batches=args.micro_batches))
+    acct = comm_accounting(tr.opt)
+    print(f"arch={cfg.name} params(dp)={acct['dp_params']/1e6:.2f}M "
+          f"bits/param/sync={acct['bits_per_param_sync']:.3f} "
+          f"workers={n} optimizer={args.optimizer}")
+
+    if args.mode == "sim":
+        params, state = tr.sim_init(jax.random.PRNGKey(args.seed))
+        step_fn = tr.sim_step_fn()
+    else:
+        params, state = tr.single_init(jax.random.PRNGKey(args.seed))
+        step_fn = tr.single_step_fn()
+
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                  global_batch=args.batch, seed=args.seed))
+
+    t0 = time.time()
+    comp_bytes = 0.0
+    rounds = 0
+    for step in range(args.steps):
+        batch = data.batch(step)
+        if cfg.enc_layers:
+            batch["frames"] = jnp.zeros((args.batch, cfg.enc_frames,
+                                         cfg.d_model))
+        if cfg.vision_tokens:
+            batch["vision_embeds"] = jnp.zeros(
+                (args.batch, cfg.vision_tokens, cfg.d_model))
+        if not cfg.causal:
+            batch["loss_mask"] = jnp.ones((args.batch, args.seq))
+        params, state, met = step_fn(params, state, batch)
+        synced = bool(np.asarray(met["synced"]).reshape(-1)[0])
+        var_r = bool(np.asarray(met["var_round"]).reshape(-1)[0])
+        if synced:
+            comp_bytes += acct["compressed_bytes_per_sync"]
+            rounds += 1
+        if var_r:
+            comp_bytes += acct["fullprec_bytes_per_round"]
+            rounds += 1
+        if step % args.log_every == 0 or step == args.steps - 1:
+            loss = float(np.asarray(met["loss"]).reshape(-1)[0])
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"lr {float(np.asarray(met['lr']).reshape(-1)[0]):.2e} "
+                  f"sync={synced} var={var_r} "
+                  f"[{time.time()-t0:.1f}s]")
+
+    bits_pp = 8 * comp_bytes / max(acct["dp_params"], 1) / max(args.steps, 1)
+    print(f"DONE: {args.steps} steps, {rounds} comm rounds, "
+          f"avg {bits_pp:.3f} bits/param/step "
+          f"({time.time()-t0:.1f}s)")
+    if args.save:
+        ckpt_io.save(args.save, {"params": params, "state": state},
+                     step=args.steps, meta={"arch": cfg.name})
+        print(f"saved checkpoint to {args.save}")
+
+
+if __name__ == "__main__":
+    main()

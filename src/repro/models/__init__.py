@@ -1,0 +1,12 @@
+"""Model substrate: composable transformer/SSM/MoE definitions in pure JAX.
+
+The modality frontends for the audio/VLM architectures are stubs per the
+assignment: ``input_specs`` provides precomputed frame/patch embeddings of
+the right shape (see launch/dryrun.py); the language/decoder backbone that
+consumes them is fully implemented here.
+"""
+from repro.models.config import ModelConfig
+from repro.models import transformer
+from repro.models import layers
+
+__all__ = ["ModelConfig", "transformer", "layers"]

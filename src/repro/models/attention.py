@@ -1,0 +1,335 @@
+"""Attention substrate: GQA, MLA (DeepSeek-V2), sliding-window, cross-attn,
+blockwise (flash-style) execution for long sequences, and KV-cache decode.
+
+Layout conventions: activations (B, S, D); per-head tensors (B, S, H, hd);
+KV caches (B, S_max, K, hd). Head axes are tensor-parallel sharded when they
+divide the TP degree (see layers.model_dim_spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rope as R
+from repro.models.layers import PD, maybe_shard, model_dim_spec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Templates
+# ---------------------------------------------------------------------------
+
+def gqa_template(d, n_heads, n_kv, head_dim, bias=False, stack=None):
+    hs = model_dim_spec(n_heads * head_dim)
+    ks = model_dim_spec(n_kv * head_dim)
+
+    def st(shape, spec):
+        if stack is None:
+            return PD(shape, spec=spec)
+        return PD((stack, *shape), spec=(None, *spec))
+
+    t = {
+        "wq": st((d, n_heads * head_dim), (None, hs)),
+        "wk": st((d, n_kv * head_dim), (None, ks)),
+        "wv": st((d, n_kv * head_dim), (None, ks)),
+        "wo": st((n_heads * head_dim, d), (hs, None)),
+    }
+    if bias:
+        t["bq"] = st((n_heads * head_dim,), (hs,))
+        t["bk"] = st((n_kv * head_dim,), (ks,))
+        t["bv"] = st((n_kv * head_dim,), (ks,))
+        for k in ("bq", "bk", "bv"):
+            t[k] = dataclasses.replace(t[k], init="zeros")
+    return t
+
+
+def mla_template(d, n_heads, kv_lora, qk_nope, qk_rope, v_dim, stack=None):
+    hq = model_dim_spec(n_heads * (qk_nope + qk_rope))
+    hu = model_dim_spec(n_heads * qk_nope)
+    hv = model_dim_spec(n_heads * v_dim)
+
+    def st(shape, spec):
+        if stack is None:
+            return PD(shape, spec=spec)
+        return PD((stack, *shape), spec=(None, *spec))
+
+    return {
+        "wq": st((d, n_heads * (qk_nope + qk_rope)), (None, hq)),
+        "w_dkv": st((d, kv_lora + qk_rope), (None, None)),
+        "kv_norm": st((kv_lora,), (None,)),
+        "w_uk": st((kv_lora, n_heads * qk_nope), (None, hu)),
+        "w_uv": st((kv_lora, n_heads * v_dim), (None, hv)),
+        "wo": st((n_heads * v_dim, d), (hv, None)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Masks & core attention
+# ---------------------------------------------------------------------------
+
+_PAD_SENTINEL = 2 ** 29  # k positions >= this are padding (blockwise tails)
+
+
+def _mask_bias(q_pos, k_pos, kind: str, window: int = 0, kv_len=None):
+    """Additive mask (…, Sq, Sk). kind: causal|sliding|bidir|decode."""
+    valid = (k_pos < _PAD_SENTINEL)[..., None, :]
+    if kind == "bidir":
+        ok = jnp.broadcast_to(valid,
+                              (q_pos.shape[-1], k_pos.shape[-1]))
+        return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+    rel = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.logical_and(rel >= 0, valid)
+    if kind == "sliding" and window:
+        ok = jnp.logical_and(ok, rel < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def dot_attn(q, k, v, bias):
+    """q (B,Sq,H,hd), k (B,Sk,K,hd), v (B,Sk,K,dv), bias (B?,Sq,Sk)."""
+    B, Sq, H, hd = q.shape
+    K, dv = k.shape[2], v.shape[3]
+    g = H // K
+    qg = q.reshape(B, Sq, K, g, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    s = s / jnp.sqrt(hd).astype(jnp.float32)
+    s = s + bias[..., None, None, :, :] if bias.ndim == 3 else s + bias
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return o.reshape(B, Sq, H, dv)
+
+
+def blockwise_attn(q, k, v, q_pos, k_pos, kind, window=0, bq=512, bk=1024):
+    """Flash-style attention in pure JAX: outer map over query blocks, inner
+    scan over KV blocks with an online softmax. Memory is O(bq·bk) per step
+    regardless of sequence length — this is the memory-bounded execution path
+    for prefill_32k / long_500k. (A Pallas port would fuse this on TPU; the
+    paper's contribution is optimizer-side so we keep attention pure JAX.)
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K, dv = k.shape[1], k.shape[2], v.shape[3]
+    g = H // K
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    nq, nk = -(-Sq // bq), -(-Sk // bk)
+    # pad to block multiples
+    qp = jnp.pad(q, ((0, 0), (0, nq * bq - Sq), (0, 0), (0, 0)))
+    qposp = jnp.pad(q_pos, (0, nq * bq - Sq), constant_values=-1)
+    kp = jnp.pad(k, ((0, 0), (0, nk * bk - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * bk - Sk), (0, 0), (0, 0)))
+    kposp = jnp.pad(k_pos, (0, nk * bk - Sk), constant_values=2**29)
+    scale = 1.0 / jnp.sqrt(hd)
+
+    kb = kp.reshape(B, nk, bk, K, hd)
+    vb = vp.reshape(B, nk, bk, K, dv)
+    kposb = kposp.reshape(nk, bk)
+
+    def one_qblock(args):
+        qi, qpos_i = args                      # (B,bq,H,hd), (bq,)
+        qg = qi.reshape(B, bq, K, g, hd)
+
+        def inner(carry, blk):
+            acc, mx, den = carry
+            kj, vj, kpos_j = blk
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kj).astype(jnp.float32)
+            s = s * scale
+            bias = _mask_bias(qpos_i, kpos_j, kind, window)
+            s = s + bias[None, None, None]
+            new_mx = jnp.maximum(mx, s.max(axis=-1))
+            p = jnp.exp(s - new_mx[..., None])
+            corr = jnp.exp(mx - new_mx)
+            den = den * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vj.dtype), vj)
+            acc = acc * corr[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+            return (acc, new_mx, den), None
+
+        acc0 = jnp.zeros((B, K, g, bq, dv), jnp.float32)
+        mx0 = jnp.full((B, K, g, bq), NEG_INF, jnp.float32)
+        den0 = jnp.zeros((B, K, g, bq), jnp.float32)
+        (acc, mx, den), _ = jax.lax.scan(
+            inner, (acc0, mx0, den0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kposb))
+        o = acc / jnp.maximum(den[..., None], 1e-30)
+        o = jnp.moveaxis(o, 3, 1).reshape(B, bq, K * g, dv)  # (B,bq,H,dv)
+        return o.astype(q.dtype)
+
+    qblocks = jnp.moveaxis(qp.reshape(B, nq, bq, H, hd), 1, 0)
+    qposblocks = qposp.reshape(nq, bq)
+    out = jax.lax.map(one_qblock, (qblocks, qposblocks))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * bq, H, dv)
+    return out[:, :Sq]
+
+
+def decode_attn(q, k_cache, v_cache, pos, kind="causal", window=0,
+                ring=False):
+    """Single-token decode against a (B, S, K, hd) cache. O(S) per token.
+
+    ``ring=True``: the cache is a ring buffer of size S == window holding
+    the last S positions (keys already rotary-encoded at their absolute
+    positions, so slot order is irrelevant); a slot is valid once written.
+    """
+    B, _, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    kpos = jnp.arange(S, dtype=jnp.int32)
+    if ring:
+        ok = jnp.logical_or(kpos <= pos, pos >= S)
+    else:
+        ok = kpos <= pos
+        if kind == "sliding" and window:
+            ok = jnp.logical_and(ok, kpos > pos - window)
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)  # (S,)
+    g = H // K
+    qg = q.reshape(B, 1, K, g, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache).astype(jnp.float32)
+    s = s / jnp.sqrt(hd) + bias[None, None, None, None, :]
+    w = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v_cache)
+    return o.reshape(B, 1, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA block forward
+# ---------------------------------------------------------------------------
+
+def gqa_forward(p, cfg, x, positions, *, kind="causal", window=0,
+                cache=None, cache_pos=None, kv_override=None,
+                use_blockwise=False):
+    """Full GQA attention. Returns (out, new_cache_kv or None).
+
+    cache: optional dict {"k","v"} (B, Smax, K, hd); cache_pos: scalar write
+    position (decode) or 0 (prefill fills [0, S)).
+    kv_override: (k, v) computed elsewhere (cross-attention).
+    """
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, H, hd)
+    if kv_override is None:
+        k = x @ p["wk"]
+        v = x @ p["wv"]
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        k = k.reshape(B, S, K, hd)
+        v = v.reshape(B, S, K, hd)
+        if cfg.rope != "none":
+            sections = cfg.mrope_sections if cfg.rope == "mrope" else None
+            frac = cfg.rope_fraction
+            q = R.apply_rope(q, positions, cfg.rope_theta, frac, sections)
+            k = R.apply_rope(k, positions, cfg.rope_theta, frac, sections)
+    else:
+        k, v = kv_override
+        if cfg.rope != "none" and kv_override is None:
+            pass
+
+    q = maybe_shard(q, None, None, "model", None)
+    new_kv = None
+    if cache is not None:
+        if S == 1 and cache_pos is not None:
+            ring = cache["k"].shape[1] == window and window > 0 \
+                and kind == "sliding"
+            wpos = cache_pos % window if ring else cache_pos
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, wpos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, wpos, 0, 0))
+            o = decode_attn(q, ck, cv, cache_pos, kind, window, ring=ring)
+            new_kv = {"k": ck, "v": cv}
+            return o.reshape(B, S, H * hd) @ p["wo"], new_kv
+        # prefill: write [0, S)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        new_kv = {"k": ck, "v": cv}
+
+    qpos = positions[0] if positions.ndim == 3 else positions
+    qpos0 = qpos[0] if qpos.ndim == 2 else qpos
+    kpos0 = qpos0  # self-attention
+    if kv_override is not None:
+        kpos0 = jnp.arange(k.shape[1], dtype=jnp.int32)
+        kind = "bidir"
+    if use_blockwise:
+        o = blockwise_attn(q, k, v, qpos0, kpos0, kind, window)
+    else:
+        bias = _mask_bias(qpos0, kpos0, kind, window)
+        o = dot_attn(q, k, v, bias)
+    o = maybe_shard(o, None, None, "model", None)
+    out = o.reshape(B, S, H * hd) @ p["wo"]
+    return out, new_kv
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) forward
+# ---------------------------------------------------------------------------
+
+def mla_forward(p, cfg, x, positions, *, cache=None, cache_pos=None,
+                use_blockwise=False):
+    """Multi-head Latent Attention. Cache holds the *compressed* KV:
+    {"ckv": (B, Smax, r), "kr": (B, Smax, dr)} — the MLA memory win.
+    Decode uses the absorbed-matmul form (scores in latent space).
+    """
+    from repro.models.layers import rms_norm
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv, r = (cfg.mla_qk_nope, cfg.mla_qk_rope, cfg.mla_v_dim,
+                     cfg.kv_lora_rank)
+    q = (x @ p["wq"]).reshape(B, S, H, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    dkv = x @ p["w_dkv"]
+    ckv, kr = dkv[..., :r], dkv[..., r:]
+    ckv = rms_norm(ckv, p["kv_norm"])
+    qr = R.apply_rope(qr, positions, cfg.rope_theta)
+    kr = R.apply_rope(kr[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    scale = 1.0 / jnp.sqrt(dn + dr)
+
+    if cache is not None and S == 1 and cache_pos is not None:
+        cc = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_pos, 0))
+        ckr = jax.lax.dynamic_update_slice(
+            cache["kr"], kr.astype(cache["kr"].dtype), (0, cache_pos, 0))
+        # absorbed decode: q_lat = qn @ w_uk  (per head)
+        wuk = p["w_uk"].reshape(r, H, dn)
+        qlat = jnp.einsum("bqhd,rhd->bqhr", qn, wuk)       # (B,1,H,r)
+        s = (jnp.einsum("bqhr,bsr->bhqs", qlat, cc)
+             + jnp.einsum("bqhd,bsd->bhqs", qr, ckr)).astype(jnp.float32)
+        s = s * scale
+        kpos = jnp.arange(cc.shape[1], dtype=jnp.int32)
+        bias = jnp.where(kpos <= cache_pos, 0.0, NEG_INF)
+        s = s + bias[None, None, None, :]
+        w = jax.nn.softmax(s, axis=-1).astype(cc.dtype)
+        ctx = jnp.einsum("bhqs,bsr->bqhr", w, cc)          # latent context
+        wuv = p["w_uv"].reshape(r, H, dv)
+        o = jnp.einsum("bqhr,rhd->bqhd", ctx, wuv)
+        out = o.reshape(B, 1, H * dv) @ p["wo"]
+        return out, {"ckv": cc, "kr": ckr}
+
+    new_cache = None
+    if cache is not None:  # prefill
+        cc = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0))
+        ckr = jax.lax.dynamic_update_slice(
+            cache["kr"], kr.astype(cache["kr"].dtype), (0, 0, 0))
+        new_cache = {"ckv": cc, "kr": ckr}
+
+    # train / prefill: expand the latent to per-head K and V
+    kn = jnp.einsum("bsr,rhd->bshd", ckv, p["w_uk"].reshape(r, H, dn))
+    v = jnp.einsum("bsr,rhd->bshd", ckv, p["w_uv"].reshape(r, H, dv))
+    k = jnp.concatenate([kn, jnp.broadcast_to(kr[:, :, None, :],
+                                              (B, S, H, dr))], axis=-1)
+    qfull = jnp.concatenate([qn, qr], axis=-1)
+    qpos = positions[0] if positions.ndim == 3 else positions
+    qpos0 = qpos[0] if qpos.ndim == 2 else qpos
+    if use_blockwise:
+        o = blockwise_attn(qfull, k, v, qpos0, qpos0, "causal")
+    else:
+        bias = _mask_bias(qpos0, qpos0, "causal")
+        o = dot_attn(qfull, k, v, bias)
+    out = o.reshape(B, S, H * dv) @ p["wo"]
+    return out, new_cache

@@ -1,0 +1,165 @@
+"""Unified model configuration driving every assigned architecture."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+
+    # attention
+    attn_type: str = "gqa"       # gqa | mla
+    attn_bias: bool = False
+    rope: str = "standard"       # none | standard | partial | mrope | learned
+    rope_fraction: float = 1.0
+    rope_theta: float = 10000.0
+    mrope_sections: Tuple[int, ...] = ()
+    sliding_window: int = 0      # >0 enables local attention
+    global_every: int = 0        # gemma3: every k-th layer is global
+    causal: bool = True          # False = bidirectional (BERT / encoders)
+
+    # MLA (DeepSeek-V2)
+    kv_lora_rank: int = 0
+    mla_qk_nope: int = 128
+    mla_qk_rope: int = 64
+    mla_v_dim: int = 128
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 1
+    n_shared_experts: int = 0
+    first_k_dense: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+
+    # SSM (Mamba2) / hybrid (Zamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_groups: int = 1
+    ssm_chunk: int = 256
+    conv_kernel: int = 4
+    attn_every: int = 0          # zamba2: shared attn block every k layers
+
+    # encoder-decoder (Whisper)
+    enc_layers: int = 0
+    enc_frames: int = 1500
+
+    # VLM stub (Qwen2-VL)
+    vision_tokens: int = 0
+    vision_grid_h: int = 32
+
+    # serving
+    window_cache: bool = False   # sliding-window layers keep only `window`
+                                 # KV slots (ring buffer); global layers a
+                                 # compact stack — beyond-paper §Perf item
+
+    # misc
+    mlp_type: str = "swiglu"     # swiglu | gelu
+    norm_type: str = "rmsnorm"   # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    max_seq: int = 8192
+    vocab_pad_multiple: int = 256
+    param_dtype: object = jnp.float32
+    compute_dtype: object = jnp.float32
+    remat: bool = False
+    blockwise_threshold: int = 8192   # use flash-style attn at/above this S
+    citation: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return ((self.vocab + m - 1) // m) * m
+
+    @property
+    def ssm_heads(self) -> int:
+        return (self.ssm_expand * self.d_model) // self.ssm_head_dim
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_global_layers(self) -> int:
+        if not self.global_every:
+            return 0
+        return self.n_layers // self.global_every
+
+    @property
+    def n_attn_apps(self) -> int:
+        """Hybrid: how many times the shared attention block fires."""
+        if not self.attn_every:
+            return 0
+        return self.n_layers // self.attn_every
+
+    def param_count(self) -> float:
+        """Approximate parameter count (for roofline MODEL_FLOPS)."""
+        d, L = self.d_model, self.n_layers
+        emb = self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        if self.family in ("ssm", "hybrid"):
+            din = self.d_inner
+            gn = self.ssm_groups * self.ssm_state
+            per = (2 * d * din + 2 * d * gn + d * self.ssm_heads
+                   + din * d + self.conv_kernel * (din + 2 * gn))
+            total += L * per
+            if self.attn_every:
+                hd = self.hd
+                total += (2 * d * self.n_heads * hd
+                          + 2 * d * self.n_kv * hd
+                          + 3 * d * self.d_ff)
+            return float(total)
+        hd = self.hd
+        if self.attn_type == "mla":
+            attn = (d * self.n_heads * (self.mla_qk_nope + self.mla_qk_rope)
+                    + d * (self.kv_lora_rank + self.mla_qk_rope)
+                    + self.kv_lora_rank * self.n_heads
+                    * (self.mla_qk_nope + self.mla_v_dim)
+                    + self.n_heads * self.mla_v_dim * d)
+        else:
+            attn = (d * self.n_heads * hd + 2 * d * self.n_kv * hd
+                    + self.n_heads * hd * d)
+        n_mlp = 3 if self.mlp_type == "swiglu" else 2
+        if self.n_experts:
+            ff = self.moe_d_ff or self.d_ff
+            dense_ff = n_mlp * d * self.d_ff
+            moe_ff = (self.n_experts * n_mlp * d * ff
+                      + self.n_shared_experts * n_mlp * d * ff
+                      + d * self.n_experts)
+            total += (self.first_k_dense * (attn + dense_ff)
+                      + (L - self.first_k_dense) * (attn + moe_ff))
+        else:
+            total += L * (attn + n_mlp * d * self.d_ff)
+        if self.enc_layers:
+            total += self.enc_layers * (attn + n_mlp * d * self.d_ff)
+            total += L * (attn + n_mlp * d * self.d_ff)  # cross attention ~attn
+        return float(total)
+
+    def active_param_count(self) -> float:
+        """Active params per token (MoE: only routed top-k experts count)."""
+        if not self.n_experts:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        n_mlp = 3 if self.mlp_type == "swiglu" else 2
+        ff = self.moe_d_ff or self.d_ff
+        full = self.param_count()
+        moe_all = (L - self.first_k_dense) * self.n_experts * n_mlp * d * ff
+        moe_active = (L - self.first_k_dense) * self.top_k * n_mlp * d * ff
+        return float(full - moe_all + moe_active)

@@ -1,0 +1,171 @@
+"""Parameter templates + elementary layers.
+
+Single-source-of-truth parameter definition: every module builds a *template*
+tree whose leaves are :class:`PD` (param descriptors). From one template we
+derive, with guaranteed structural agreement:
+
+  * ``init_params``   — materialized arrays (deterministic per-path keys),
+  * ``param_specs``   — tensor-parallel PartitionSpecs ('model' axis only;
+                        the worker axis is added by the trainer),
+  * ``dp_mask``       — which leaves are DP-replicated (False = expert-
+                        parallel leaves updated with local Adam),
+  * ``abstract``      — ShapeDtypeStructs for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class PD:
+    """Param descriptor: shape + init + sharding + DP membership."""
+
+    shape: Tuple[int, ...]
+    init: str = "normal"          # normal | zeros | ones | small
+    scale: float = 0.02
+    spec: Optional[tuple] = None  # entries over the 'model' axis or None
+    dp: bool = True
+    dtype: object = jnp.float32
+    ep_axis: Optional[int] = None  # expert-parallel axis (dp=False leaves):
+                                   # sharded over the worker axes by trainer
+
+
+def _materialize(path, pd: PD, key):
+    import zlib
+    k = jax.random.fold_in(key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
+    if pd.init == "zeros":
+        return jnp.zeros(pd.shape, pd.dtype)
+    if pd.init == "ones":
+        return jnp.ones(pd.shape, pd.dtype)
+    scale = pd.scale
+    if pd.init == "small":
+        scale = pd.scale * 0.1
+    return (jax.random.normal(k, pd.shape) * scale).astype(pd.dtype)
+
+
+def _path_str(path):
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def is_pd(x):
+    return isinstance(x, PD)
+
+
+def init_params(template, key, dtype=None):
+    def f(path, pd):
+        arr = _materialize(_path_str(path), pd, key)
+        return arr.astype(dtype) if dtype is not None else arr
+    return jax.tree_util.tree_map_with_path(f, template, is_leaf=is_pd)
+
+
+def param_specs(template):
+    return jax.tree.map(
+        lambda pd: P(*pd.spec) if pd.spec is not None else P(),
+        template, is_leaf=is_pd)
+
+
+def dp_mask(template):
+    return jax.tree.map(lambda pd: pd.dp, template, is_leaf=is_pd)
+
+
+def abstract_params(template, dtype=None):
+    return jax.tree.map(
+        lambda pd: jax.ShapeDtypeStruct(pd.shape, dtype or pd.dtype),
+        template, is_leaf=is_pd)
+
+
+def stack_template(tmpl, n: int):
+    """Prepend a layer-stacking axis to every PD in a template."""
+    def f(pd: PD) -> PD:
+        spec = pd.spec if pd.spec is not None else (None,) * len(pd.shape)
+        ep = None if pd.ep_axis is None else pd.ep_axis + 1
+        return dataclasses.replace(
+            pd, shape=(n, *pd.shape), spec=(None, *spec), ep_axis=ep)
+    return jax.tree.map(f, tmpl, is_leaf=is_pd)
+
+
+def maybe_shard(x, *spec):
+    """with_sharding_constraint that degrades gracefully off-mesh.
+
+    Only constrains over GSPMD-auto axes of the ambient mesh when the dims
+    divide; otherwise a no-op (CPU tests, simulation mode, manual axes).
+    """
+    from repro.core.compressor import constrain
+    return constrain(x, spec)
+
+
+def model_dim_spec(dim: int, mesh_axis: str = "model"):
+    """Helper used by templates: shard `dim` over 'model' iff divisible.
+
+    Divisibility is checked against the production TP degree (16); configs
+    that cannot divide simply replicate that axis.
+    """
+    return mesh_axis if dim % 16 == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# Elementary ops
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_template(cfg_norm: str, d: int):
+    if cfg_norm == "rmsnorm":
+        return {"scale": PD((d,), "zeros")}
+    return {"scale": PD((d,), "ones"), "bias": PD((d,), "zeros")}
+
+
+def apply_norm(p, x, cfg_norm: str):
+    if cfg_norm == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def mlp_template(d: int, ff: int, kind: str, layers_axis: Optional[int] = None):
+    """SwiGLU or GELU MLP params (optionally stacked over a layers axis)."""
+    def st(shape, spec):
+        if layers_axis is None:
+            return shape, spec
+        return (layers_axis, *shape), (None, *spec)
+    ffs = model_dim_spec(ff)
+    if kind == "swiglu":
+        s1, p1 = st((d, ff), (None, ffs))
+        s3, p3 = st((d, ff), (None, ffs))
+        s2, p2 = st((ff, d), (ffs, None))
+        return {"w_gate": PD(s1, spec=p1), "w_up": PD(s3, spec=p3),
+                "w_down": PD(s2, spec=p2)}
+    s1, p1 = st((d, ff), (None, ffs))
+    s2, p2 = st((ff, d), (ffs, None))
+    sb1, pb1 = st((ff,), (ffs,))
+    sb2, pb2 = st((d,), (None,))
+    return {"w_in": PD(s1, spec=p1), "b_in": PD(sb1, "zeros", spec=pb1),
+            "w_out": PD(s2, spec=p2), "b_out": PD(sb2, "zeros", spec=pb2)}
+
+
+def apply_mlp(p, x, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = maybe_shard(h, None, None, "model")
+        return h @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_in"] + p["b_in"])
+    h = maybe_shard(h, None, None, "model")
+    return h @ p["w_out"] + p["b_out"]

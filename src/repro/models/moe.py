@@ -1,0 +1,152 @@
+"""Mixture-of-Experts with expert parallelism over the worker axes.
+
+Experts are sharded across the data-parallel worker axes (``E`` divides the
+worker count; each worker group owns ``E/n`` experts, each expert's FFN
+additionally tensor-parallel over 'model'). Token dispatch uses a
+sort/scatter capacity router; the cross-worker exchange is a manual
+``all_to_all`` over the worker axes (the classic EP dispatch), which makes
+the MoE collective volume visible verbatim in the dry-run HLO.
+
+Because EP experts exist exactly once across the worker axis they have **no
+data-parallel gradient exchange**, so the paper's 0/1 Adam compression scopes
+to the dense/attention/embedding parameters (``dp=False`` on expert leaves;
+see DESIGN §Arch-applicability). The a2a transpose in backward automatically
+accumulates each expert's gradient contributions from every worker.
+
+With ``comm=None`` (single worker: CPU smoke tests, serving without EP) the
+same code runs with the a2a skipped — one code path everywhere.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PD, maybe_shard, model_dim_spec
+
+
+def moe_template(d, d_ff, n_experts, n_shared, ep_workers, stack=None):
+    """Expert + router params. ``ep_workers`` = worker-axis size the expert
+    dim is sharded over (1 = no EP; experts then DP-replicated and dp=True).
+    """
+    ffs = model_dim_spec(d_ff)
+    ep = ep_workers > 1
+    dp = not ep
+
+    def st(shape, spec):
+        if stack is None:
+            return shape, spec
+        return (stack, *shape), (None, *spec)
+
+    sg, pg = st((n_experts, d, d_ff), (None, None, ffs))
+    sd_, pd_ = st((n_experts, d_ff, d), (None, ffs, None))
+    e_ax = None if not ep else (0 if stack is None else 1)
+    t = {
+        "router": PD(st((d, n_experts), (None, None))[0],
+                     spec=st((d, n_experts), (None, None))[1]),
+        "w_gate": PD(sg, spec=pg, dp=dp, ep_axis=e_ax),
+        "w_up": PD(sg, spec=pg, dp=dp, ep_axis=e_ax),
+        "w_down": PD(sd_, spec=pd_, dp=dp, ep_axis=e_ax),
+    }
+    if n_shared:
+        ssg, spg = st((d, n_shared * d_ff), (None, ffs))
+        ssd, spd = st((n_shared * d_ff, d), (ffs, None))
+        t["shared_gate"] = PD(ssg, spec=spg)
+        t["shared_up"] = PD(ssg, spec=spg)
+        t["shared_down"] = PD(ssd, spec=spd)
+    return t
+
+
+def _dispatch_indices(eids, n_experts, capacity):
+    """Sort/scatter positions: for flat expert ids (T,), the slot each token
+    occupies within its expert's capacity buffer (slots >= capacity drop)."""
+    T = eids.shape[0]
+    order = jnp.argsort(eids, stable=True)
+    sorted_eids = eids[order]
+    # position within the run of equal expert ids
+    first = jnp.searchsorted(sorted_eids, sorted_eids, side="left")
+    pos_sorted = jnp.arange(T, dtype=jnp.int32) - first.astype(jnp.int32)
+    pos = jnp.zeros((T,), jnp.int32).at[order].set(pos_sorted)
+    return pos
+
+
+def moe_forward(p, x, *, top_k, n_experts, capacity_factor, comm=None,
+                router_noise=0.0, rng=None):
+    """x: (B, S, d) -> (out (B, S, d), aux_metrics dict).
+
+    comm: worker-axis Comm for EP dispatch (None = single worker).
+    """
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+    n_local = n_experts
+    n_workers = 1
+    if comm is not None:
+        n_workers = comm.size()
+
+    logits = (xf @ p["router"]).astype(jnp.float32)          # (T, E)
+    if router_noise and rng is not None:
+        logits = logits + router_noise * jax.random.normal(rng, logits.shape)
+    gates_full = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates_full, top_k)            # (T, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = gates_full.mean(axis=0)
+    ce = jnp.zeros((n_experts,), jnp.float32).at[topi.reshape(-1)].add(
+        1.0 / (T * top_k))
+    aux_loss = n_experts * jnp.sum(me * ce)
+
+    capacity = int(max(1, -(-int(capacity_factor * T * top_k) // n_experts)))
+
+    eids = topi.reshape(-1)                                   # (T*k,)
+    gvals = topv.reshape(-1)
+    slot = _dispatch_indices(eids, n_experts, capacity)
+    keep = slot < capacity
+    # scatter tokens into (E, C, d); dropped tokens routed out-of-bounds
+    drop_slot = jnp.where(keep, slot, capacity)
+    tok_idx = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+    buf = jnp.zeros((n_experts, capacity, d), x.dtype)
+    buf = buf.at[eids, drop_slot].set(xf[tok_idx], mode="drop")
+
+    if comm is not None and n_workers > 1:
+        # EP exchange: (E, C, d) -> (n, E_local, C, d) -> a2a -> local experts
+        e_local = n_experts // n_workers
+        sendbuf = buf.reshape(n_workers, e_local, capacity, d)
+        recvbuf = comm.all_to_all(sendbuf, split_axis=0, concat_axis=0)
+        # (n_senders, E_local, C, d) -> (E_local, n*C, d)
+        ein = jnp.moveaxis(recvbuf, 0, 1).reshape(
+            e_local, n_workers * capacity, d)
+    else:
+        ein = buf                                             # (E, C, d)
+
+    # expert FFN (w_*: (E_local, d, ff) leaves arrive worker-sharded)
+    h = jnp.einsum("ecd,edf->ecf", ein, p["w_gate"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", ein, p["w_up"])
+    h = maybe_shard(h, None, None, "model")
+    eout = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+    if comm is not None and n_workers > 1:
+        e_local = n_experts // n_workers
+        back = eout.reshape(e_local, n_workers, capacity, d)
+        back = jnp.moveaxis(back, 1, 0)                       # (n, E_l, C, d)
+        ret = comm.all_to_all(back, split_axis=0, concat_axis=0)
+        outbuf = ret.reshape(n_experts, capacity, d)
+    else:
+        outbuf = eout
+
+    # combine: gather each assignment's expert output, weight, sum over k
+    safe_slot = jnp.minimum(drop_slot, capacity - 1)
+    y = outbuf[eids, safe_slot]                               # (T*k, d)
+    y = y * (gvals * keep.astype(gvals.dtype))[:, None].astype(y.dtype)
+    out = jnp.zeros((T, d), y.dtype).at[tok_idx].add(y)
+
+    if "shared_gate" in p:
+        sh = jax.nn.silu(xf @ p["shared_gate"]) * (xf @ p["shared_up"])
+        sh = maybe_shard(sh, None, "model")
+        out = out + sh @ p["shared_down"]
+
+    metrics = {"aux_loss": aux_loss,
+               "dropped_frac": 1.0 - keep.mean()}
+    return out.reshape(B, S, d), metrics

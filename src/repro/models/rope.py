@@ -1,0 +1,90 @@
+"""Rotary position embeddings: standard, partial (ChatGLM), M-RoPE (Qwen2-VL).
+
+All variants operate on ``x: (B, S, H, D)`` with ``positions`` describing the
+token positions:
+
+* standard / partial: positions (B, S) int32
+* mrope: positions (3, B, S) int32 — temporal / height / width streams, with
+  head-dim frequency bands split by ``sections`` (Qwen2-VL §3.1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _freqs(dim: int, theta: float, dtype=jnp.float32):
+    # dim = number of rotated pairs
+    return 1.0 / (theta ** (jnp.arange(0, dim, dtype=dtype) / dim))
+
+
+def _rotate(x, cos, sin):
+    # x: (..., 2k) pairs interleaved as [x1, x2] halves
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x, positions, theta=10000.0, fraction=1.0, sections=None):
+    """Apply rotary embedding.
+
+    Args:
+      x: (B, S, H, D)
+      positions: (B, S) or (3, B, S) for mrope
+      fraction: fraction of head dim rotated (ChatGLM uses 0.5)
+      sections: m-rope head-dim band split (pairs per stream), e.g. (16,24,24)
+    """
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    inv = _freqs(half, theta)
+
+    if sections is not None:
+        # M-RoPE: frequency bands alternate between t/h/w position streams.
+        assert positions.ndim == 3, "mrope needs (3, B, S) positions"
+        assert sum(sections) == half, (sections, half)
+        band = jnp.concatenate([
+            jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+        # pos_per_band: (B, S, half)
+        pos = jnp.take(positions, band, axis=0)          # (half, B, S)
+        pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)
+        ang = pos * inv[None, None, :]
+    else:
+        if positions.ndim == 3:
+            positions = positions[0]
+        ang = positions.astype(jnp.float32)[..., None] * inv[None, None, :]
+
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)    # (B, S, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([_rotate(xr, cos, sin), xp], axis=-1)
+
+
+def text_positions(batch: int, seq: int, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    return jnp.broadcast_to(pos, (batch, seq))
+
+
+def mrope_positions(batch: int, seq: int, n_vision: int, grid_h: int,
+                    offset=0):
+    """Qwen2-VL style positions: a (t,h,w) grid for the vision prefix, then
+    sequential text positions for the remainder. ``offset`` supports decode.
+
+    Returns (3, B, S) int32.
+    """
+    idx = jnp.arange(seq, dtype=jnp.int32) + offset
+    is_vis = idx < n_vision
+    vis_idx = jnp.minimum(idx, max(n_vision - 1, 0))
+    h = vis_idx // max(grid_h, 1)
+    w = vis_idx % max(grid_h, 1)
+    # text positions continue after the max vision position
+    base = (n_vision + grid_h - 1) // max(grid_h, 1) if n_vision else 0
+    text = base + (idx - n_vision)
+    t = jnp.where(is_vis, 0, text)
+    hh = jnp.where(is_vis, h, text)
+    ww = jnp.where(is_vis, w, text)
+    pos = jnp.stack([t, hh, ww])                       # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq))

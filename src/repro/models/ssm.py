@@ -1,0 +1,213 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) layer.
+
+Train/prefill use the chunked SSD algorithm (quadratic within a chunk,
+linear across chunks); decode uses the O(1) recurrence with a constant-size
+state — this is the sub-quadratic path that makes long_500k decode feasible
+for the SSM/hybrid architectures.
+
+State layout: h (B, H, P, N) with H = heads, P = head dim, N = ssm state.
+Conv state: last K-1 raw channel inputs for each of the x/B/C streams.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PD, maybe_shard, model_dim_spec, rms_norm
+
+
+def ssm_template(d, d_inner, n_heads, head_dim, n_state, n_groups, conv_k,
+                 stack=None):
+    ins = model_dim_spec(d_inner)
+    gn = n_groups * n_state
+
+    def st(shape, spec):
+        if stack is None:
+            return PD(shape, spec=spec)
+        return PD((stack, *shape), spec=(None, *spec))
+
+    def stz(shape, spec, init="zeros"):
+        pd = st(shape, spec)
+        import dataclasses
+        return dataclasses.replace(pd, init=init)
+
+    return {
+        "w_z": st((d, d_inner), (None, ins)),
+        "w_x": st((d, d_inner), (None, ins)),
+        "w_B": st((d, gn), (None, None)),
+        "w_C": st((d, gn), (None, None)),
+        "w_dt": st((d, n_heads), (None, None)),
+        "conv_x": st((conv_k, d_inner), (None, ins)),
+        "conv_B": st((conv_k, gn), (None, None)),
+        "conv_C": st((conv_k, gn), (None, None)),
+        "A_log": stz((n_heads,), (None,), "zeros"),
+        "D": stz((n_heads,), (None,), "ones"),
+        "dt_bias": stz((n_heads,), (None,), "zeros"),
+        "norm": stz((d_inner,), (ins,), "zeros"),
+        "w_out": st((d_inner, d), (ins, None)),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv: x (B, L, C), w (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return out
+
+
+def _conv_step(x_t, conv_state, w):
+    """x_t (B, C); conv_state (B, K-1, C). Returns (y, new_state)."""
+    K = w.shape[0]
+    cat = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", cat, w)
+    return y, cat[:, 1:]
+
+
+def ssd_chunked(xh, dt, A, Bh, Ch, chunk, h0=None):
+    """Chunked SSD scan.
+
+    xh (B,L,H,P), dt (B,L,H), A (H,), Bh/Ch (B,L,H,N).
+    Returns (y (B,L,H,P), final state (B,H,P,N)).
+    """
+    B, L, H, P = xh.shape
+    N = Bh.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc, Q = L // chunk, chunk
+
+    dA = dt * A[None, None, :]                        # (B,L,H) negatives
+    dtx = xh * dt[..., None]                          # input scaled by dt
+    resh = lambda t: t.reshape(B, nc, Q, *t.shape[2:])
+    dA_c, dtx_c = resh(dA), resh(dtx)
+    B_c, C_c = resh(Bh), resh(Ch)
+
+    cs = jnp.cumsum(dA_c, axis=2)                     # (B,nc,Q,H)
+
+    # --- intra-chunk (diagonal blocks) ---------------------------------
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]    # (B,nc,Q,Q,H) i-j
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    G = jnp.einsum("bcqhn,bcshn->bcqsh", C_c, B_c)
+    M = G * Lmat
+    y_diag = jnp.einsum("bcqsh,bcshp->bcqhp", M, dtx_c)
+
+    # --- per-chunk input states ----------------------------------------
+    decay_states = jnp.exp(cs[:, :, -1:, :] - cs)        # (B,nc,Q,H)
+    states = jnp.einsum("bcshn,bcsh,bcshp->bchpn", B_c, decay_states, dtx_c)
+
+    # --- inter-chunk recurrence ----------------------------------------
+    chunk_decay = jnp.exp(cs[:, :, -1, :])               # (B,nc,H)
+
+    def scan_fn(h, inp):
+        st, cd = inp                                     # (B,H,P,N),(B,H)
+        h_out = h
+        h = h * cd[:, :, None, None] + st
+        return h, h_out
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    hT, h_prev = jax.lax.scan(
+        scan_fn, h0.astype(jnp.float32),
+        (jnp.moveaxis(states.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                  # (B,nc,H,P,N)
+
+    # --- off-diagonal contribution --------------------------------------
+    state_decay = jnp.exp(cs)                            # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", C_c,
+                       h_prev.astype(xh.dtype), state_decay)
+
+    y = (y_diag + y_off).reshape(B, L, H, P)
+    return y, hT
+
+
+def ssm_forward(p, cfg, x, *, state=None, decode=False):
+    """Mamba2 block. x (B, L, d). If decode, L == 1 and ``state`` is the
+    dict {"h", "conv_x", "conv_B", "conv_C"}; returns (out, new_state).
+    For train (state=None, decode=False) returns (out, None); for prefill
+    pass a zero state to receive the final state for the cache.
+    """
+    Bsz, L, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    G = cfg.ssm_groups
+    d_in = H * P
+
+    z = x @ p["w_z"]
+    xs = x @ p["w_x"]
+    Bp = x @ p["w_B"]
+    Cp = x @ p["w_C"]
+    dt = (x @ p["w_dt"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    new_state = None
+    if decode:
+        assert L == 1 and state is not None
+        cx, scx = _conv_step(xs[:, 0], state["conv_x"], p["conv_x"])
+        cB, scB = _conv_step(Bp[:, 0], state["conv_B"], p["conv_B"])
+        cC, scC = _conv_step(Cp[:, 0], state["conv_C"], p["conv_C"])
+        xs, Bp, Cp = (jax.nn.silu(cx)[:, None], jax.nn.silu(cB)[:, None],
+                      jax.nn.silu(cC)[:, None])
+        dts = jax.nn.softplus(dt[:, 0] + p["dt_bias"][None, :])   # (B,H)
+        xh = xs.reshape(Bsz, H, P)
+        Bh = _expand_groups(Bp.reshape(Bsz, 1, G, N), H)[:, 0]    # (B,H,N)
+        Ch = _expand_groups(Cp.reshape(Bsz, 1, G, N), H)[:, 0]
+        dAe = jnp.exp(dts * A[None, :])                           # (B,H)
+        h = state["h"].astype(jnp.float32)
+        h = (h * dAe[:, :, None, None]
+             + jnp.einsum("bhp,bhn,bh->bhpn", xh.astype(jnp.float32),
+                          Bh.astype(jnp.float32), dts))
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ch.astype(jnp.float32))
+        y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+        y = y.reshape(Bsz, 1, d_in).astype(x.dtype)
+        new_state = {"h": h.astype(state["h"].dtype), "conv_x": scx,
+                     "conv_B": scB, "conv_C": scC}
+    else:
+        xs = jax.nn.silu(_causal_conv(xs, p["conv_x"]))
+        Bp = jax.nn.silu(_causal_conv(Bp, p["conv_B"]))
+        Cp = jax.nn.silu(_causal_conv(Cp, p["conv_C"]))
+        dts = jax.nn.softplus(dt + p["dt_bias"][None, None, :])
+        xh = xs.reshape(Bsz, L, H, P)
+        Bh = _expand_groups(Bp.reshape(Bsz, L, G, N), H)
+        Ch = _expand_groups(Cp.reshape(Bsz, L, G, N), H)
+        h0 = state["h"].astype(jnp.float32) if state is not None else None
+        y, hT = ssd_chunked(xh.astype(jnp.float32), dts, A,
+                            Bh.astype(jnp.float32), Ch.astype(jnp.float32),
+                            cfg.ssm_chunk, h0)
+        y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh
+        y = y.reshape(Bsz, L, d_in).astype(x.dtype)
+        if state is not None:
+            K = p["conv_x"].shape[0]
+            new_state = {
+                "h": hT.astype(state["h"].dtype),
+                "conv_x": (x @ p["w_x"])[:, -(K - 1):, :],
+                "conv_B": (x @ p["w_B"])[:, -(K - 1):, :],
+                "conv_C": (x @ p["w_C"])[:, -(K - 1):, :],
+            }
+
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"])
+    y = maybe_shard(y, None, None, "model")
+    return y @ p["w_out"], new_state
+
+
+def _expand_groups(b, n_heads):
+    """(B, L, G, N) -> (B, L, H, N) by repeating groups."""
+    B, L, G, N = b.shape
+    rep = n_heads // G
+    return jnp.repeat(b, rep, axis=2)
+
+
+def init_ssm_state(cfg, batch, dtype=jnp.float32):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    G = cfg.ssm_groups
+    K = cfg.conv_kernel
+    d_in = H * P
+    return {
+        "h": jnp.zeros((batch, H, P, N), dtype),
+        "conv_x": jnp.zeros((batch, K - 1, d_in), dtype),
+        "conv_B": jnp.zeros((batch, K - 1, G * N), dtype),
+        "conv_C": jnp.zeros((batch, K - 1, G * N), dtype),
+    }

@@ -1,0 +1,596 @@
+"""Model assembly: every assigned architecture composes from this module.
+
+Entry points:
+  model_template(cfg)                       -> PD tree (params single source)
+  forward(params, cfg, batch, comm, rng)    -> (logits, aux) for training
+  prefill(params, cfg, batch, cache, comm)  -> (last logits, cache)
+  decode(params, cfg, tokens, cache, pos, comm[, enc_out]) -> (logits, cache)
+  init_cache(cfg, batch, max_seq)           -> cache pytree (zeros)
+
+Layers run under lax.scan over stacked parameters (homogeneous per family),
+with per-layer flag arrays expressing heterogeneity (gemma3's 5:1
+local:global pattern, zamba2's shared-attention interleave, DeepSeek's
+dense-prefix layers are a separate unstacked prefix).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import rope as R
+from repro.models import ssm as SSM
+from repro.models.config import ModelConfig
+from repro.models.layers import (PD, apply_mlp, apply_norm, init_params,
+                                 maybe_shard, mlp_template, model_dim_spec,
+                                 norm_template, stack_template)
+
+
+# ---------------------------------------------------------------------------
+# Templates
+# ---------------------------------------------------------------------------
+
+def _block_template(cfg: ModelConfig, n_layers: int, moe: bool,
+                    ep_workers: int):
+    """One stacked run of decoder blocks."""
+    d = cfg.d_model
+    t = {"attn_norm": stack_template(norm_template(cfg.norm_type, d),
+                                     n_layers),
+         "mlp_norm": stack_template(norm_template(cfg.norm_type, d),
+                                    n_layers)}
+    if cfg.attn_type == "mla":
+        t["attn"] = A.mla_template(d, cfg.n_heads, cfg.kv_lora_rank,
+                                   cfg.mla_qk_nope, cfg.mla_qk_rope,
+                                   cfg.mla_v_dim, stack=n_layers)
+    else:
+        t["attn"] = A.gqa_template(d, cfg.n_heads, cfg.n_kv, cfg.hd,
+                                   bias=cfg.attn_bias, stack=n_layers)
+    if moe:
+        ff = cfg.moe_d_ff or cfg.d_ff
+        t["moe"] = MOE.moe_template(d, ff, cfg.n_experts,
+                                    cfg.n_shared_experts, ep_workers,
+                                    stack=n_layers)
+    else:
+        t["mlp"] = mlp_template(d, cfg.d_ff, cfg.mlp_type,
+                                layers_axis=n_layers)
+    return t
+
+
+def _ssm_block_template(cfg: ModelConfig, n_layers: int):
+    t = {"norm": stack_template(norm_template(cfg.norm_type, cfg.d_model),
+                                n_layers),
+         "ssm": SSM.ssm_template(cfg.d_model, cfg.d_inner, cfg.ssm_heads,
+                                 cfg.ssm_head_dim, cfg.ssm_state,
+                                 cfg.ssm_groups, cfg.conv_kernel,
+                                 stack=n_layers)}
+    return t
+
+
+def model_template(cfg: ModelConfig, ep_workers: int = 1):
+    d, V = cfg.d_model, cfg.padded_vocab
+    vs = model_dim_spec(V)
+    t = {"embed": PD((V, d), spec=(vs, None), scale=0.02),
+         "final_norm": norm_template(cfg.norm_type, d)}
+    if not cfg.tie_embeddings:
+        t["lm_head"] = PD((d, V), spec=(None, vs))
+    if cfg.rope == "learned":
+        t["pos_embed"] = PD((cfg.max_seq, d), scale=0.02)
+
+    if cfg.family in ("ssm", "hybrid"):
+        t["blocks"] = _ssm_block_template(cfg, cfg.n_layers)
+        if cfg.attn_every:
+            t["shared_attn"] = {
+                "norm": norm_template(cfg.norm_type, d),
+                "attn": A.gqa_template(d, cfg.n_heads, cfg.n_kv, cfg.hd),
+                "mlp_norm": norm_template(cfg.norm_type, d),
+                "mlp": mlp_template(d, cfg.d_ff, cfg.mlp_type),
+            }
+        return t
+
+    moe = cfg.n_experts > 0
+    n_main = cfg.n_layers - cfg.first_k_dense
+    if cfg.first_k_dense:
+        t["dense_blocks"] = _block_template(cfg, cfg.first_k_dense,
+                                            moe=False, ep_workers=1)
+    t["blocks"] = _block_template(cfg, n_main, moe=moe,
+                                  ep_workers=ep_workers)
+
+    if cfg.enc_layers:  # whisper: encoder + per-decoder-layer cross attn
+        t["encoder"] = {
+            "blocks": _block_template(
+                dataclasses.replace(cfg, n_experts=0), cfg.enc_layers,
+                moe=False, ep_workers=1),
+            "pos_embed": PD((cfg.enc_frames, d), scale=0.02),
+            "final_norm": norm_template(cfg.norm_type, d),
+        }
+        t["cross"] = {
+            "norm": stack_template(norm_template(cfg.norm_type, d),
+                                   cfg.n_layers),
+            "attn": A.gqa_template(d, cfg.n_heads, cfg.n_kv, cfg.hd,
+                                   bias=cfg.attn_bias, stack=cfg.n_layers),
+        }
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Positions / embeddings
+# ---------------------------------------------------------------------------
+
+def _positions(cfg: ModelConfig, B: int, S: int, offset=0):
+    if cfg.rope == "mrope":
+        return R.mrope_positions(B, S, cfg.vision_tokens, cfg.vision_grid_h,
+                                 offset)
+    return R.text_positions(B, S, offset)
+
+
+def _embed(params, cfg: ModelConfig, tokens, offset=0, vision_embeds=None):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = h.astype(cfg.compute_dtype)
+    if cfg.rope == "learned":
+        S = tokens.shape[1]
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"],
+                                          offset, S, axis=0)
+        h = h + pe[None].astype(h.dtype)
+    if vision_embeds is not None and cfg.vision_tokens:
+        # VLM stub: precomputed patch embeddings replace the prefix.
+        h = jax.lax.dynamic_update_slice(
+            h, vision_embeds.astype(h.dtype), (0, 0, 0))
+    return maybe_shard(h, ("pod", "data"), None, None)
+
+
+def _logits(params, cfg: ModelConfig, h):
+    h = apply_norm(params["final_norm"], h, cfg.norm_type)
+    if cfg.tie_embeddings:
+        return h @ params["embed"].T.astype(h.dtype)
+    return h @ params["lm_head"].astype(h.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Layer scans
+# ---------------------------------------------------------------------------
+
+def _layer_flags(cfg: ModelConfig):
+    """Per-layer int flags: attention kind (0 causal / 1 sliding)."""
+    L = cfg.n_layers - cfg.first_k_dense
+    if cfg.sliding_window and cfg.global_every:
+        # gemma3: every `global_every`-th layer is global, rest sliding.
+        f = [0 if (i + 1) % cfg.global_every == 0 else 1 for i in range(L)]
+    elif cfg.sliding_window:
+        f = [1] * L
+    else:
+        f = [0] * L
+    return jnp.asarray(f, jnp.int32)
+
+
+def _attn_call(p, cfg, h, positions, sliding, *, kind_flag=None, cache=None,
+               cache_pos=None, kv_override=None, use_blockwise=False):
+    """Attention with a traced sliding/global selector."""
+    base_kind = "causal" if cfg.causal else "bidir"
+    if cfg.attn_type == "mla":
+        return A.mla_forward(p, cfg, h, positions, cache=cache,
+                             cache_pos=cache_pos,
+                             use_blockwise=use_blockwise)
+    if kind_flag is None or not cfg.sliding_window:
+        return A.gqa_forward(p, cfg, h, positions, kind=base_kind,
+                             window=0, cache=cache, cache_pos=cache_pos,
+                             kv_override=kv_override,
+                             use_blockwise=use_blockwise)
+
+    def sl(args):
+        return A.gqa_forward(p, cfg, h, positions, kind="sliding",
+                             window=cfg.sliding_window, cache=cache,
+                             cache_pos=cache_pos,
+                             use_blockwise=use_blockwise)
+
+    def gl(args):
+        return A.gqa_forward(p, cfg, h, positions, kind=base_kind, window=0,
+                             cache=cache, cache_pos=cache_pos,
+                             use_blockwise=use_blockwise)
+
+    return jax.lax.cond(kind_flag == 1, sl, gl, ())
+
+
+def _decoder_scan(params, cfg: ModelConfig, h, positions, *, comm=None,
+                  cache=None, cache_pos=None, enc_out=None,
+                  use_blockwise=False, prefix=False):
+    """Scan the (stacked) decoder blocks. Returns (h, new_cache, aux)."""
+    block = params["dense_blocks"] if prefix else params["blocks"]
+    n = (cfg.first_k_dense if prefix
+         else cfg.n_layers - cfg.first_k_dense)
+    moe = (cfg.n_experts > 0) and not prefix
+    flags = (_layer_flags(cfg)[:n] if not prefix
+             else jnp.zeros((n,), jnp.int32))
+    cross = params.get("cross") if not prefix else None
+
+    enc_kv = None
+    if enc_out is not None and cross is not None:
+        # cross K/V from encoder output, per layer (stacked weights)
+        K, hd = cfg.n_kv, cfg.hd
+        ck = jnp.einsum("bsd,lde->lbse", enc_out, cross["attn"]["wk"])
+        cv = jnp.einsum("bsd,lde->lbse", enc_out, cross["attn"]["wv"])
+        Benc, Senc = enc_out.shape[0], enc_out.shape[1]
+        enc_kv = (ck.reshape(n, Benc, Senc, K, hd),
+                  cv.reshape(n, Benc, Senc, K, hd))
+
+    def body(carry, xs):
+        hh = carry
+        lp, flag, layer_cache, ckv = xs
+        x0 = hh
+        hn = apply_norm(lp["attn_norm"], hh, cfg.norm_type)
+        ao, new_kv = _attn_call(lp["attn"], cfg, hn, positions, None,
+                                kind_flag=flag, cache=layer_cache,
+                                cache_pos=cache_pos,
+                                use_blockwise=use_blockwise)
+        hh = x0 + ao
+        if ckv is not None:
+            cn = apply_norm(lp["cross_norm"], hh, cfg.norm_type)
+            co, _ = A.gqa_forward(lp["cross_attn"], cfg, cn, positions,
+                                  kind="bidir",
+                                  kv_override=(ckv["k"], ckv["v"]))
+            hh = hh + co
+        hm = apply_norm(lp["mlp_norm"], hh, cfg.norm_type)
+        aux = jnp.zeros((), jnp.float32)
+        if moe:
+            mo, mmet = MOE.moe_forward(
+                lp["moe"], hm, top_k=cfg.top_k, n_experts=cfg.n_experts,
+                capacity_factor=cfg.capacity_factor, comm=comm)
+            aux = mmet["aux_loss"]
+        else:
+            mo = apply_mlp(lp["mlp"], hm, cfg.mlp_type)
+        hh = hh + mo
+        hh = maybe_shard(hh, ("pod", "data"), None, None)
+        return hh, (new_kv, aux)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    # assemble scan xs
+    lp = dict(block)
+    if cross is not None:
+        lp["cross_norm"] = cross["norm"]
+        lp["cross_attn"] = cross["attn"]
+    xs = (lp, flags,
+          cache if cache is not None else _none_like(n),
+          _stack_tuple(enc_kv) if enc_kv is not None else _none_like(n))
+    h, (new_cache, aux) = jax.lax.scan(body, h, xs)
+    return h, new_cache, aux.sum()
+
+
+def _decoder_scan_window_decode(params, cfg: ModelConfig, h, positions,
+                                cache, cache_pos):
+    """Single-token decode with the split window cache (window_cache=True):
+    sliding layers ring-write their (L, B, W) stack slice; the few global
+    layers dynamic-index a compact (G, B, S) stack carried through the scan
+    (same pattern as the zamba2 shared-attention cache)."""
+    n = cfg.n_layers
+    flags = _layer_flags(cfg)               # 1 = sliding, 0 = global
+
+    def body(carry, xs):
+        hh, gc, gidx = carry
+        lp, flag, lc = xs
+        x0 = hh
+        hn = apply_norm(lp["attn_norm"], hh, cfg.norm_type)
+
+        def local_branch(op):
+            hh_, lc_, gc_ = op
+            ao, new_kv = A.gqa_forward(lp["attn"], cfg, hh_, positions,
+                                       kind="sliding",
+                                       window=cfg.sliding_window,
+                                       cache=lc_, cache_pos=cache_pos)
+            return ao, new_kv, gc_
+
+        def global_branch(op):
+            hh_, lc_, gc_ = op
+            slot = {"k": jax.lax.dynamic_index_in_dim(gc_["k"], gidx, 0,
+                                                      keepdims=False),
+                    "v": jax.lax.dynamic_index_in_dim(gc_["v"], gidx, 0,
+                                                      keepdims=False)}
+            ao, new_kv = A.gqa_forward(lp["attn"], cfg, hh_, positions,
+                                       kind="causal", window=0,
+                                       cache=slot, cache_pos=cache_pos)
+            gc_ = {"k": jax.lax.dynamic_update_index_in_dim(
+                        gc_["k"], new_kv["k"], gidx, 0),
+                   "v": jax.lax.dynamic_update_index_in_dim(
+                        gc_["v"], new_kv["v"], gidx, 0)}
+            return ao, lc_, gc_
+
+        ao, new_lc, gc = jax.lax.cond(flag == 1, local_branch,
+                                      global_branch, (hn, lc, gc))
+        hh = x0 + ao
+        hm = apply_norm(lp["mlp_norm"], hh, cfg.norm_type)
+        hh = hh + apply_mlp(lp["mlp"], hm, cfg.mlp_type)
+        gidx = gidx + (flag == 0).astype(jnp.int32)
+        return (hh, gc, gidx), new_lc
+
+    (h, gcache, _), new_local = jax.lax.scan(
+        body, (h, cache["global"], jnp.zeros((), jnp.int32)),
+        (params["blocks"], flags, cache["local"]))
+    return h, {"local": new_local, "global": gcache}
+
+
+def _none_like(n):
+    return None
+
+
+def _stack_tuple(kv):
+    return {"k": kv[0], "v": kv[1]}
+
+
+# ---------------------------------------------------------------------------
+# SSM / hybrid scan
+# ---------------------------------------------------------------------------
+
+def _ssm_scan(params, cfg: ModelConfig, h, positions, *, cache=None,
+              cache_pos=None, decode_mode=False, use_blockwise=False):
+    n = cfg.n_layers
+    do_attn = jnp.asarray(
+        [1 if cfg.attn_every and (i + 1) % cfg.attn_every == 0 else 0
+         for i in range(n)], jnp.int32)
+    shared = params.get("shared_attn")
+    shared_cache = None if cache is None else cache.get("shared")
+
+    def body(carry, xs):
+        hh, sc, app_idx = carry
+        lp, flag, layer_state = xs
+        x0 = hh
+        hn = apply_norm(lp["norm"], hh, cfg.norm_type)
+        so, new_state = SSM.ssm_forward(lp["ssm"], cfg, hn,
+                                        state=layer_state,
+                                        decode=decode_mode)
+        hh = x0 + so
+
+        if shared is not None:
+            def with_attn(op):
+                hh_, sc_ = op
+                an = apply_norm(shared["norm"], hh_, cfg.norm_type)
+                if sc_ is not None:
+                    slot = {"k": jax.lax.dynamic_index_in_dim(
+                                sc_["k"], app_idx, 0, keepdims=False),
+                            "v": jax.lax.dynamic_index_in_dim(
+                                sc_["v"], app_idx, 0, keepdims=False)}
+                else:
+                    slot = None
+                ao, new_kv = A.gqa_forward(
+                    shared["attn"], cfg, an, positions, kind="causal",
+                    cache=slot, cache_pos=cache_pos,
+                    use_blockwise=use_blockwise)
+                hh_ = hh_ + ao
+                mn = apply_norm(shared["mlp_norm"], hh_, cfg.norm_type)
+                hh_ = hh_ + apply_mlp(shared["mlp"], mn, cfg.mlp_type)
+                if sc_ is not None and new_kv is not None:
+                    sc_ = {"k": jax.lax.dynamic_update_index_in_dim(
+                                sc_["k"], new_kv["k"], app_idx, 0),
+                           "v": jax.lax.dynamic_update_index_in_dim(
+                                sc_["v"], new_kv["v"], app_idx, 0)}
+                return hh_, sc_
+
+            def no_attn(op):
+                return op
+
+            hh, sc = jax.lax.cond(flag == 1, with_attn, no_attn, (hh, sc))
+            app_idx = app_idx + flag
+        hh = maybe_shard(hh, ("pod", "data"), None, None)
+        return (hh, sc, app_idx), new_state
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    layer_states = None if cache is None else cache["ssm"]
+    xs = (params["blocks"], do_attn, layer_states)
+    (h, shared_cache, _), new_states = jax.lax.scan(
+        body, (h, shared_cache, jnp.zeros((), jnp.int32)), xs)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"ssm": new_states}
+        if shared_cache is not None:
+            new_cache["shared"] = shared_cache
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frames):
+    """Whisper encoder over stub frame embeddings (B, T_enc, d)."""
+    enc = params["encoder"]
+    h = frames.astype(cfg.compute_dtype) + enc["pos_embed"][None].astype(
+        cfg.compute_dtype)
+    ecfg = dataclasses.replace(cfg, causal=False, rope="none",
+                               n_experts=0, first_k_dense=0)
+    B, S, _ = h.shape
+    pos = R.text_positions(B, S)
+
+    def body(carry, lp):
+        hh = carry
+        x0 = hh
+        hn = apply_norm(lp["attn_norm"], hh, cfg.norm_type)
+        ao, _ = A.gqa_forward(lp["attn"], ecfg, hn, pos, kind="bidir")
+        hh = x0 + ao
+        hm = apply_norm(lp["mlp_norm"], hh, cfg.norm_type)
+        hh = hh + apply_mlp(lp["mlp"], hm, cfg.mlp_type)
+        return hh, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, enc["blocks"])
+    return apply_norm(enc["final_norm"], h, cfg.norm_type)
+
+
+def forward(params, cfg: ModelConfig, batch, *, comm=None):
+    """Training forward: returns (logits, aux_loss)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    vision = batch.get("vision_embeds")
+    h = _embed(params, cfg, tokens, 0, vision)
+    positions = _positions(cfg, B, S)
+    use_bw = S >= cfg.blockwise_threshold
+    enc_out = None
+    if cfg.enc_layers:
+        enc_out = encode(params, cfg, batch["frames"])
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family in ("ssm", "hybrid"):
+        h, _ = _ssm_scan(params, cfg, h, positions, use_blockwise=use_bw)
+    else:
+        if cfg.first_k_dense:
+            h, _, _ = _decoder_scan(params, cfg, h, positions, comm=comm,
+                                    use_blockwise=use_bw, prefix=True)
+        h, _, aux = _decoder_scan(params, cfg, h, positions, comm=comm,
+                                  enc_out=enc_out, use_blockwise=use_bw)
+    return _logits(params, cfg, h), aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16):
+    """Zeroed decode cache for the architecture."""
+    if cfg.family in ("ssm", "hybrid"):
+        one = SSM.init_ssm_state(cfg, batch, jnp.float32)
+        states = jax.tree.map(
+            lambda x: jnp.zeros((cfg.n_layers,) + x.shape, x.dtype), one)
+        cache = {"ssm": states}
+        if cfg.attn_every:
+            napps = cfg.n_attn_apps
+            cache["shared"] = {
+                "k": jnp.zeros((napps, batch, max_seq, cfg.n_kv, cfg.hd),
+                               dtype),
+                "v": jnp.zeros((napps, batch, max_seq, cfg.n_kv, cfg.hd),
+                               dtype)}
+        return cache
+    if cfg.attn_type == "mla":
+        return {"ckv": jnp.zeros((cfg.n_layers, batch, max_seq,
+                                  cfg.kv_lora_rank), dtype),
+                "kr": jnp.zeros((cfg.n_layers, batch, max_seq,
+                                 cfg.mla_qk_rope), dtype)}
+    if cfg.window_cache and cfg.sliding_window and cfg.global_every:
+        # beyond-paper decode optimization: sliding-window layers keep a
+        # ring buffer of `window` slots; the few global layers keep the
+        # full sequence in a compact stack (gemma3: 48*S -> 40*1024 + 8*S)
+        L, G, W = cfg.n_layers, cfg.n_global_layers, cfg.sliding_window
+        return {
+            "local": {"k": jnp.zeros((L, batch, W, cfg.n_kv, cfg.hd),
+                                     dtype),
+                      "v": jnp.zeros((L, batch, W, cfg.n_kv, cfg.hd),
+                                     dtype)},
+            "global": {"k": jnp.zeros((G, batch, max_seq, cfg.n_kv,
+                                       cfg.hd), dtype),
+                       "v": jnp.zeros((G, batch, max_seq, cfg.n_kv,
+                                       cfg.hd), dtype)},
+        }
+    L = cfg.n_layers
+    c = {"k": jnp.zeros((L, batch, max_seq, cfg.n_kv, cfg.hd), dtype),
+         "v": jnp.zeros((L, batch, max_seq, cfg.n_kv, cfg.hd), dtype)}
+    if cfg.first_k_dense:
+        c = {"k": c["k"], "v": c["v"]}  # prefix layers share the stack
+    return c
+
+
+def _split_cache(cfg, cache):
+    """MLA caches keep their dict form; GQA caches are {'k','v'} stacked."""
+    return cache
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, *, comm=None):
+    """Process the prompt, fill the cache, return logits of the last token."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    vision = batch.get("vision_embeds")
+    h = _embed(params, cfg, tokens, 0, vision)
+    positions = _positions(cfg, B, S)
+    use_bw = S >= cfg.blockwise_threshold
+    enc_out = batch.get("enc_out")
+    if cfg.enc_layers and enc_out is None:
+        enc_out = encode(params, cfg, batch["frames"])
+
+    if cfg.family in ("ssm", "hybrid"):
+        h, new_cache = _ssm_scan(params, cfg, h, positions, cache=cache,
+                                 cache_pos=0, use_blockwise=use_bw)
+    else:
+        assert not cfg.first_k_dense or True
+        if cfg.first_k_dense:
+            # prefix layers use the first slots of the stacked cache
+            pre_cache = jax.tree.map(lambda x: x[:cfg.first_k_dense], cache)
+            h, pre_new, _ = _decoder_scan(params, cfg, h, positions,
+                                          comm=comm, cache=pre_cache,
+                                          cache_pos=0, use_blockwise=use_bw,
+                                          prefix=True)
+            main_cache = jax.tree.map(lambda x: x[cfg.first_k_dense:], cache)
+            h, main_new, _ = _decoder_scan(params, cfg, h, positions,
+                                           comm=comm, cache=main_cache,
+                                           cache_pos=0, enc_out=enc_out,
+                                           use_blockwise=use_bw)
+            new_cache = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], 0), pre_new, main_new)
+        else:
+            h, new_cache, _ = _decoder_scan(params, cfg, h, positions,
+                                            comm=comm, cache=cache,
+                                            cache_pos=0, enc_out=enc_out,
+                                            use_blockwise=use_bw)
+    logits = _logits(params, cfg, h[:, -1:])
+    return logits, new_cache
+
+
+def decode(params, cfg: ModelConfig, tokens, cache, pos, *, comm=None,
+           enc_out=None):
+    """One decode step: tokens (B,1), pos scalar index into the cache."""
+    B = tokens.shape[0]
+    h = _embed(params, cfg, tokens, pos, None)
+    positions = _positions(cfg, B, 1, offset=pos)
+
+    if cfg.family in ("ssm", "hybrid"):
+        h, new_cache = _ssm_scan(params, cfg, h, positions, cache=cache,
+                                 cache_pos=pos, decode_mode=True)
+    elif (cfg.window_cache and cfg.sliding_window and cfg.global_every
+          and isinstance(cache, dict) and "local" in cache):
+        h, new_cache = _decoder_scan_window_decode(params, cfg, h,
+                                                   positions, cache, pos)
+    else:
+        if cfg.first_k_dense:
+            pre_cache = jax.tree.map(lambda x: x[:cfg.first_k_dense], cache)
+            h, pre_new, _ = _decoder_scan(params, cfg, h, positions,
+                                          comm=comm, cache=pre_cache,
+                                          cache_pos=pos, prefix=True)
+            main_cache = jax.tree.map(lambda x: x[cfg.first_k_dense:], cache)
+            h, main_new, _ = _decoder_scan(params, cfg, h, positions,
+                                           comm=comm, cache=main_cache,
+                                           cache_pos=pos, enc_out=enc_out)
+            new_cache = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], 0), pre_new, main_new)
+        else:
+            h, new_cache, _ = _decoder_scan(params, cfg, h, positions,
+                                            comm=comm, cache=cache,
+                                            cache_pos=pos, enc_out=enc_out)
+    return _logits(params, cfg, h), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, cfg: ModelConfig, batch, *, comm=None):
+    """Next-token (or MLM via ``loss_mask``) cross-entropy + MoE aux."""
+    logits, aux = forward(params, cfg, batch, comm=comm)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    # gold logit via a shard-local masked reduction: with the vocab axis
+    # tensor-parallel sharded this lowers to a local reduce + tiny psum
+    # instead of all-gathering the logits (take_along_axis would).
+    V = logits.shape[-1]
+    hit = jax.lax.broadcasted_iota(jnp.int32, (1, 1, V), 2) == \
+        labels[..., None]
+    gold = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+    else:
+        denom = nll.size
+    loss = nll.sum() / denom
+    return loss + cfg.aux_loss_weight * aux, {"nll": loss, "aux": aux}

@@ -1,0 +1,198 @@
+"""Sharding-spec derivation for the trainer.
+
+Terminology: *worker axes* (``W``) are the manual mesh axes carrying the
+paper's data-parallel workers — ('data',) single-pod, ('pod','data')
+multi-pod. 'model' is the GSPMD-auto tensor-parallel axis.
+
+Storage layout:
+  * DP-replicated param leaves gain a leading worker axis (each DP group
+    owns its local-step replica): full spec P(W, *model_entries).
+  * Expert-parallel leaves keep their natural rank; the expert axis is
+    sharded over W: model entries with W inserted at ep_axis.
+  * Optimizer state for DP leaves is per-worker (leading W) in comm-view
+    shape; EP-leaf state mirrors the param spec. Scalars replicate.
+
+``inner_*`` variants keep only the worker axes (what shard_map in_specs
+are allowed to mention); model-axis sharding rides along on the argument
+shardings (partial-manual shard_map).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import compressor as C
+from repro.core.adam import Adam, AdamState
+from repro.core.one_bit_adam import OneBitAdam, OneBitAdamState
+from repro.core.zero_one_adam import ZeroOneAdam, ZeroOneAdamState
+
+
+def _entries(spec) -> Tuple:
+    if spec is None:
+        return ()
+    return tuple(spec)
+
+
+def param_full_spec(spec, dp: bool, ep_axis: Optional[int], W: Tuple,
+                    ep_axes: Tuple = ()) -> P:
+    e = _entries(spec)
+    if dp:
+        return P(W, *e)
+    if not ep_axes:
+        return P(*e)
+    ax = ep_axis or 0
+    e = e + (None,) * max(0, ax + 1 - len(e))
+    assert e[ax] is None, f"ep axis {ax} already sharded: {e}"
+    return P(*(e[:ax] + (ep_axes,) + e[ax + 1:]))
+
+
+def param_inner_spec(dp: bool, ep_axis: Optional[int], W: Tuple,
+                     ep_axes: Tuple = ()) -> P:
+    if dp:
+        return P(W)
+    if not ep_axes:
+        return P()
+    ax = ep_axis or 0
+    return P(*((None,) * ax + (ep_axes,)))
+
+
+def _drop_model(spec: P) -> P:
+    """Keep only worker-axis entries (for shard_map in/out specs)."""
+    return spec
+
+
+class TreeSpecs:
+    """Per-leaf spec derivation shared by trainer and dry-run."""
+
+    def __init__(self, opt, pds: List, W: Tuple[str, ...],
+                 ep_axes: Tuple[str, ...] = ()):
+        # pds: flat list of layers.PD aligned with opt's flat leaves
+        self.opt = opt
+        self.pds = pds
+        self.W = W
+        self.ep_axes = tuple(ep_axes)
+
+    # ---- params ----------------------------------------------------------
+    def params_full(self) -> List[P]:
+        return [param_full_spec(tuple(pd.spec) if pd.spec else None,
+                                pd.dp, pd.ep_axis, self.W, self.ep_axes)
+                for pd in self.pds]
+
+    def params_inner(self) -> List[P]:
+        return [param_inner_spec(pd.dp, pd.ep_axis, self.W, self.ep_axes)
+                for pd in self.pds]
+
+    def params_model(self) -> List[P]:
+        """Model-axis-only specs (for the nested fully-manual optimizer
+        shard_map: worker axes are already manual in the outer context)."""
+        return [P(*pd.spec) if pd.spec else P() for pd in self.pds]
+
+    def state_model_specs(self):
+        """Model-axis-only specs matching the optimizer state structure."""
+        opt = self.opt
+
+        def view_e(i):
+            return P(*C.view_spec_entries(opt.layouts[i],
+                                          tuple(self.pds[i].spec)
+                                          if self.pds[i].spec else None))
+
+        def chunk_e(i):
+            return P(*C.chunk_spec_entries(opt.layouts[i],
+                                           tuple(self.pds[i].spec)
+                                           if self.pds[i].spec else None))
+
+        def nat_e(i):
+            pd = self.pds[i]
+            return P(*pd.spec) if pd.spec else P()
+
+        n = len(self.pds)
+        mv = [view_e(i) if self.pds[i].dp else nat_e(i) for i in range(n)]
+        u = [view_e(i) if self.pds[i].dp else None for i in range(n)]
+        es = [chunk_e(i) if self.pds[i].dp else None for i in range(n)]
+        if isinstance(opt, Adam):
+            nat = [nat_e(i) for i in range(n)]
+            return AdamState(step=P(), m=nat, v=nat)
+        if isinstance(opt, OneBitAdam):
+            return OneBitAdamState(step=P(), m=mv, v=mv, err_w=u, err_s=es)
+        if isinstance(opt, ZeroOneAdam):
+            ps = opt.cfg.sync_policy.init()
+            vs = opt.cfg.var_policy.init()
+            anc = [nat_e(i) if (self.pds[i].dp and opt.cfg.store_anchor)
+                   else None for i in range(n)]
+            return ZeroOneAdamState(
+                step=P(), gamma_acc=P(),
+                sync_pstate=tuple(P() for _ in ps),
+                var_pstate=tuple(P() for _ in vs),
+                m=mv, v=mv, u=u, err_w=u, err_s=es, anchor=anc)
+        raise TypeError(type(opt))
+
+    # ---- optimizer state -------------------------------------------------
+    def _leaf_state_specs(self, kind: str):
+        """kind: view | chunk | natural — full and inner specs per leaf."""
+        full, inner = [], []
+        for pd, lo in zip(self.pds, self.opt.layouts):
+            spec = tuple(pd.spec) if pd.spec else None
+            if pd.dp:
+                if kind == "view":
+                    e = C.view_spec_entries(lo, spec)
+                elif kind == "chunk":
+                    e = C.chunk_spec_entries(lo, spec)
+                else:
+                    e = _entries(spec)
+                full.append(P(self.W, *e))
+                inner.append(P(self.W))
+            else:
+                full.append(param_full_spec(spec, False, pd.ep_axis, self.W,
+                                            self.ep_axes))
+                inner.append(param_inner_spec(False, pd.ep_axis, self.W,
+                                              self.ep_axes))
+        return full, inner
+
+    def state_specs(self):
+        """(full_specs, inner_specs) trees matching the optimizer state."""
+        opt = self.opt
+        mv_f, mv_i = self._leaf_state_specs("view")
+        nat_f, nat_i = self._leaf_state_specs("natural")
+        ch_f, ch_i = self._leaf_state_specs("chunk")
+
+        def dp_only(lst):
+            return [x if pd.dp else None
+                    for x, pd in zip(lst, self.pds)]
+
+        if isinstance(opt, Adam):
+            full = AdamState(step=P(), m=nat_f, v=nat_f)
+            inner = AdamState(step=P(), m=nat_i, v=nat_i)
+        elif isinstance(opt, OneBitAdam):
+            full = OneBitAdamState(step=P(), m=mv_f, v=mv_f,
+                                   err_w=dp_only(mv_f), err_s=dp_only(ch_f))
+            inner = OneBitAdamState(step=P(), m=mv_i, v=mv_i,
+                                    err_w=dp_only(mv_i),
+                                    err_s=dp_only(ch_i))
+        elif isinstance(opt, ZeroOneAdam):
+            ps = opt.cfg.sync_policy.init()
+            vs = opt.cfg.var_policy.init()
+            sync_spec = tuple(P() for _ in ps)
+            var_spec = tuple(P() for _ in vs)
+            anchor_f = [nat_f[i] if (pd.dp and opt.cfg.store_anchor)
+                        else None for i, pd in enumerate(self.pds)]
+            anchor_i = [nat_i[i] if (pd.dp and opt.cfg.store_anchor)
+                        else None for i, pd in enumerate(self.pds)]
+            full = ZeroOneAdamState(
+                step=P(), gamma_acc=P(), sync_pstate=sync_spec,
+                var_pstate=var_spec, m=mv_f, v=mv_f, u=dp_only(mv_f),
+                err_w=dp_only(mv_f), err_s=dp_only(ch_f), anchor=anchor_f)
+            inner = ZeroOneAdamState(
+                step=P(), gamma_acc=P(), sync_pstate=sync_spec,
+                var_pstate=var_spec, m=mv_i, v=mv_i, u=dp_only(mv_i),
+                err_w=dp_only(mv_i), err_s=dp_only(ch_i), anchor=anchor_i)
+        else:
+            raise TypeError(type(opt))
+        return full, inner
+
+    # ---- convenience -----------------------------------------------------
+    def shardings(self, mesh, tree_specs):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), tree_specs,
+            is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,83 @@
+"""Unit + property tests for the 1-bit EF compressor and comm views."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core import compressor as C
+
+
+@pytest.mark.parametrize("shape,spec,n", [
+    ((13,), None, 4),
+    ((28, 96), None, 4),
+    ((28, 96), P(None, "model"), 4),
+    ((3, 50, 16), P(None, None, "model"), 8),
+    ((), None, 4),
+    ((100,), None, 16),
+])
+def test_view_roundtrip(shape, spec, n):
+    lo = C.make_layout(shape, spec, n)
+    x = jnp.arange(int(np.prod(shape)) if shape else 1,
+                   dtype=jnp.float32).reshape(shape)
+    v = C.to_view(x, lo)
+    assert v.shape == lo.view_shape
+    back = C.from_view(v, lo)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_force_flatten_small_shards():
+    # model-local shards too small to bit-pack structurally must flatten
+    lo = C.make_layout((2, 4), P(None, "model"), 4, rest_factor=16,
+                       force_flatten=True)
+    assert lo.flatten and lo.rest_factor == 16
+    ents = C.view_spec_entries(lo, P(None, "model"))
+    assert ents == (None, "model")
+
+
+def test_pack_unpack_roundtrip():
+    x = jnp.asarray(np.random.RandomState(0).randn(4, 64), jnp.float32)
+    p = C.pack_signs(x)
+    s = C.unpack_signs(p, 64)
+    np.testing.assert_array_equal(np.asarray(s), np.sign(
+        np.asarray(x)) + (np.asarray(x) == 0))
+
+
+@settings(max_examples=30, deadline=None)
+@given(rows=st.integers(1, 6), cols=st.sampled_from([8, 16, 64, 128]),
+       seed=st.integers(0, 2**31 - 1),
+       mode=st.sampled_from(["tensor", "chunk", "row"]))
+def test_ef_compress_properties(rows, cols, seed, mode):
+    rng = np.random.RandomState(seed)
+    lo = C.make_layout((rows * cols,), None, rows)
+    z = C.to_view(jnp.asarray(rng.randn(rows * cols), jnp.float32), lo)
+    mask = C.pad_mask(lo)
+    packed, scales, err = C.ef_compress(z, lo, mode, mask)
+    vals = C.decompress(packed, scales, lo.pack_count)
+    # EF identity: z == C[z] + err (on unpadded positions)
+    recon = vals + err
+    m = mask if mask is not None else 1.0
+    np.testing.assert_allclose(np.asarray(recon * m), np.asarray(z * m),
+                               rtol=1e-5, atol=1e-5)
+    # scales are nonnegative L1 means
+    assert (np.asarray(scales) >= 0).all()
+    # compression error bounded: |err| <= |z| + scale
+    assert np.all(np.abs(np.asarray(err)) <=
+                  np.abs(np.asarray(z)) + np.asarray(scales).max() + 1e-6)
+
+
+def test_scale_is_l1_mean_tensor_mode():
+    lo = C.make_layout((32,), None, 4)
+    z = C.to_view(jnp.arange(32, dtype=jnp.float32) - 16, lo)
+    _, scales, _ = C.ef_compress(z, lo, "tensor", C.pad_mask(lo))
+    expect = np.abs(np.arange(32, dtype=np.float32) - 16).mean()
+    np.testing.assert_allclose(float(scales.reshape(-1)[0]), expect,
+                               rtol=1e-6)
+
+
+def test_compressed_bytes_32x_reduction():
+    lo = C.make_layout((1024, 1024), None, 8)
+    comp = C.compressed_bytes(lo, "tensor")
+    full_bf16 = 2 * 1024 * 1024 * 2
+    assert comp < full_bf16 / 12  # ~16x vs bf16, 32x vs fp32

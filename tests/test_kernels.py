@@ -1,0 +1,70 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("R,C", [(8, 128), (16, 256), (8, 1024), (32, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ef_compress_matches_ref(R, C, dtype):
+    key = jax.random.PRNGKey(R * C)
+    z = jax.random.normal(key, (R, C)).astype(dtype)
+    e = (jax.random.normal(jax.random.fold_in(key, 1), (R, C)) * 0.3
+         ).astype(dtype)
+    p1, s1, e1 = ops.ef_compress(z, e)
+    p2, s2, e2 = ref.ef_compress_ref(z, e)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(e1, np.float32),
+                               np.asarray(e2, np.float32),
+                               rtol=1e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("R,C", [(8, 128), (16, 512)])
+def test_decompress_matches_ref(R, C):
+    key = jax.random.PRNGKey(3)
+    packed = jax.random.randint(key, (R, C // 8), 0, 256).astype(jnp.uint8)
+    scales = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (R,)))
+    v1 = ops.decompress(packed, scales)
+    v2 = ref.decompress_ref(packed, scales)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+
+
+def test_compress_decompress_roundtrip_signs():
+    z = jax.random.normal(jax.random.PRNGKey(0), (8, 256))
+    e = jnp.zeros_like(z)
+    p, s, _ = ops.ef_compress(z, e)
+    v = ops.decompress(p, s)
+    np.testing.assert_array_equal(np.sign(np.asarray(v)),
+                                  np.where(np.asarray(z) >= 0, 1.0, -1.0))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       lr=st.floats(1e-5, 1e-1), beta1=st.floats(0.0, 0.99))
+def test_fused_local_step_matches_ref(seed, lr, beta1):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    g, m, u = (jax.random.normal(k, (8, 256)) for k in ks[:3])
+    v = jnp.abs(jax.random.normal(ks[3], (8, 256))) + 1e-3
+    o1 = ops.fused_local_step(g, m, u, v, lr, beta1)
+    o2 = ref.fused_local_step_ref(g, m, u, v, lr, beta1)
+    for a, b in zip(o1, o2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("block", [(8, 128), (8, 256), (4, 512)])
+def test_fused_block_shapes(block):
+    g = jax.random.normal(jax.random.PRNGKey(0), (8, 512))
+    m = jnp.zeros_like(g)
+    u = jnp.zeros_like(g)
+    v = jnp.ones_like(g)
+    o1 = ops.fused_local_step(g, m, u, v, 0.01, 0.9, block=block)
+    o2 = ref.fused_local_step_ref(g, m, u, v, 0.01, 0.9)
+    for a, b in zip(o1, o2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5)

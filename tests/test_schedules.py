@@ -1,0 +1,82 @@
+"""T_v / T_u policy behaviour (paper §6 policies)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schedules as S
+
+
+def _roll(policy, steps, is_var=False, intervals=None):
+    st = policy.init()
+    fires = []
+    for t in range(steps):
+        if is_var:
+            iv = intervals[t] if intervals is not None else 1
+            f, st = policy.step(st, jnp.int32(t), jnp.int32(iv))
+        else:
+            f, st, _ = policy.step(st, jnp.int32(t))
+        fires.append(bool(f))
+    return fires
+
+
+def test_adaptive_freeze_exponential_gaps():
+    pol = S.AdaptiveFreezePolicy(kappa=2)
+    fires = _roll(pol, 40, is_var=True)
+    idx = [i for i, f in enumerate(fires) if f]
+    gaps = np.diff(idx)
+    # k_{j+1}-k_j = 2^{floor(j/2)}: 1,1,2,2,4,4,8,8...
+    expect = [2 ** (j // 2) for j in range(len(gaps))]
+    assert list(gaps) == expect[:len(gaps)]
+
+
+def test_freeze_stops_when_local_steps_begin():
+    pol = S.AdaptiveFreezePolicy(kappa=16)
+    st = pol.init()
+    fired_after = []
+    for t in range(20):
+        iv = 1 if t < 10 else 2   # local stepping starts at t=10
+        f, st = pol.step(st, jnp.int32(t), jnp.int32(iv))
+        if t >= 10:
+            fired_after.append(bool(f))
+    assert not any(fired_after)  # paper: stop v updates once interval > 1
+
+
+def test_fixed_warmup_is_onebit_adam_stage():
+    pol = S.FixedWarmupPolicy(t0=5)
+    fires = _roll(pol, 10, is_var=True)
+    assert fires == [True] * 5 + [False] * 5
+
+
+def test_lr_proportional_sync_doubles_and_clips():
+    pol = S.LrProportionalSyncPolicy(warmup_steps=4, double_every=4,
+                                     max_interval=4)
+    fires = _roll(pol, 32)
+    idx = [i for i, f in enumerate(fires) if f]
+    gaps = list(np.diff(idx))
+    # every step through warmup, then 1,1.. doubling to clip at 4
+    assert gaps[:4] == [1, 1, 1, 1]
+    assert max(gaps) == 4
+    assert gaps[-1] == 4  # clipped steady state
+    # monotone non-decreasing intervals
+    assert all(b >= a for a, b in zip(gaps, gaps[1:]))
+
+
+def test_interval_matches_assumption_H():
+    pol = S.LrProportionalSyncPolicy(warmup_steps=2, double_every=2,
+                                     max_interval=16)
+    st = pol.init()
+    max_gap, last = 0, 0
+    for t in range(200):
+        f, st, _ = pol.step(st, jnp.int32(t))
+        if bool(f):
+            max_gap = max(max_gap, t - last)
+            last = t
+    assert max_gap <= 16  # Assumption 5: H bound
+
+
+def test_lr_schedules_shapes():
+    lr1 = S.LinearWarmupExpDecay(4e-4, 10, decay=0.5, decay_period=10)
+    assert float(lr1(0)) < float(lr1(9))
+    assert abs(float(lr1(10)) - 4e-4) < 1e-9
+    assert float(lr1(20)) < float(lr1(10))
+    lr2 = S.LinearWarmupCosine(1e-3, 5, 100)
+    assert float(lr2(100)) <= float(lr2(50)) <= float(lr2(5)) + 1e-9

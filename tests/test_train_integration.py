@@ -1,0 +1,115 @@
+"""End-to-end trainer integration: sim-mode 0/1 Adam on a real tiny LM
+(the paper's Fig. 2 setup at unit scale), microbatching equivalence,
+checkpoint roundtrip, data determinism.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing import io as ckpt_io
+from repro.configs import get
+from repro.core import OptimizerConfig, schedules as S
+from repro.data import DataConfig, SyntheticLM, worker_shard
+from repro.train import Trainer, TrainerConfig
+
+OPT = OptimizerConfig(
+    name="zero_one_adam",
+    lr=S.LinearWarmupExpDecay(peak_lr=2e-3, warmup_steps=10, decay=0.97,
+                              decay_period=20),
+    var_policy=S.AdaptiveFreezePolicy(kappa=4),
+    sync_policy=S.LrProportionalSyncPolicy(warmup_steps=10, double_every=20,
+                                           max_interval=4))
+
+
+def test_sim_training_loss_decreases_and_consensus():
+    cfg = get("gpt2").smoke
+    tr = Trainer(cfg, OPT, n_workers=4)
+    params, state = tr.sim_init(jax.random.PRNGKey(0))
+    fn = tr.sim_step_fn()
+    # stream over a sub-vocabulary: the model learns the support quickly,
+    # giving clear loss signal within CI budget
+    data = SyntheticLM(DataConfig(vocab=64, seq_len=32,
+                                  global_batch=8, seed=5))
+    losses = []
+    for step in range(40):
+        params, state, met = fn(params, state, data.batch(step))
+        losses.append(float(np.asarray(met["loss"]).reshape(-1)[0]))
+        if bool(np.asarray(met["synced"]).reshape(-1)[0]):
+            for leaf in jax.tree.leaves(params):
+                arr = np.asarray(leaf)
+                assert (arr == arr[:1]).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
+    assert np.isfinite(losses).all()
+
+
+def test_microbatch_grad_equivalence():
+    cfg = get("granite-3-8b").smoke
+    tr1 = Trainer(cfg, OPT, n_workers=1,
+                  trainer_cfg=TrainerConfig(micro_batches=1))
+    tr4 = Trainer(cfg, OPT, n_workers=1,
+                  trainer_cfg=TrainerConfig(micro_batches=4))
+    p1, s1 = tr1.single_init(jax.random.PRNGKey(0))
+    p4, s4 = tr4.single_init(jax.random.PRNGKey(0))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=16,
+                                  global_batch=8, seed=3))
+    batch = data.batch(0)
+    p1n, _, m1 = tr1.single_step_fn()(p1, s1, batch)
+    p4n, _, m4 = tr4.single_step_fn()(p4, s4, batch)
+    for a, b in zip(jax.tree.leaves(p1n), jax.tree.leaves(p4n)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-5)
+
+
+def test_moe_ep_sim_matches_single_worker_routing():
+    """Sim-mode EP (experts split over 4 workers, a2a dispatch) must agree
+    with single-worker MoE on the same global batch at init (fwd loss)."""
+    cfg = get("llama4-scout-17b-a16e").smoke
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=16,
+                                  global_batch=8, seed=3))
+    batch = data.batch(0)
+    tr1 = Trainer(cfg, OPT, n_workers=1)
+    tr4 = Trainer(cfg, OPT, n_workers=4)
+    p1, s1 = tr1.single_init(jax.random.PRNGKey(0))
+    p4, s4 = tr4.sim_init(jax.random.PRNGKey(0))
+    _, _, m1 = tr1.single_step_fn()(p1, s1, batch)
+    _, _, m4 = tr4.sim_step_fn()(p4, s4, batch)
+    l1 = float(np.asarray(m1["loss"]).reshape(-1)[0])
+    l4 = float(np.asarray(m4["loss"]).reshape(-1)[0])
+    # same params, same data; capacity-drop patterns may differ slightly
+    assert abs(l1 - l4) < 0.05, (l1, l4)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get("chatglm3-6b").smoke
+    tr = Trainer(cfg, OPT, n_workers=1)
+    params, state = tr.single_init(jax.random.PRNGKey(0))
+    path = os.path.join(tmp_path, "ck.npz")
+    ckpt_io.save(path, {"params": params}, step=7, meta={"arch": cfg.name})
+    like = {"params": params}
+    restored, step, meta = ckpt_io.restore(path, like)
+    assert step == 7 and meta["arch"] == cfg.name
+    for a, b in zip(jax.tree.leaves(restored["params"]),
+                    jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_data_determinism_and_sharding():
+    d = SyntheticLM(DataConfig(vocab=128, seq_len=16, global_batch=8,
+                               seed=9))
+    b1, b2 = d.batch(5), d.batch(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = d.batch(6)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    s0 = worker_shard(b1, 0, 4)
+    s3 = worker_shard(b1, 3, 4)
+    assert s0["tokens"].shape == (2, 16)
+    assert not np.array_equal(np.asarray(s0["tokens"]),
+                              np.asarray(s3["tokens"]))
+    # learnable structure: labels follow the bigram table mostly
+    np.testing.assert_array_equal(np.asarray(b1["tokens"][:, 1:]),
+                                  np.asarray(b1["labels"][:, :-1]))
