@@ -106,14 +106,21 @@ def make_layout(shape: Sequence[int], spec, n: int,
     """
     shape = tuple(int(s) for s in shape)
     replicated = spec is None or all(e is None for e in tuple(spec))
+    # Flatten views pad to an n*128 quantum (not just the n*8 bit-packing
+    # minimum) so the kernel frame's column width is always a multiple of
+    # the 128-lane TPU register width, folded or not. Costs < n*128 extra
+    # elements per leaf; scales/EF stay pad-exact via masks/row counts.
+    # Deliberately mode-independent (not gated on use_pallas): state and
+    # wire layouts must match between the fused and unfused paths so the
+    # modes stay drop-in interchangeable, checkpoints included.
     if len(shape) == 0:
-        padded = _round_up(1, n * 8)
+        padded = _round_up(1, n * 128)
         return LeafLayout(shape=(), n=n, flatten=True, split_axis=0,
                           padded=padded, view_shape=(n, padded // n),
                           rest_factor=1)
     if replicated or force_flatten:
         total = int(np.prod(shape))
-        padded = _round_up(total, n * 8)
+        padded = _round_up(total, n * 128)
         return LeafLayout(shape=shape, n=n, flatten=True, split_axis=0,
                           padded=padded, view_shape=(n, padded // n),
                           rest_factor=rest_factor if not replicated else 1)
@@ -283,6 +290,95 @@ def chunk_spec_entries(layout: LeafLayout, spec) -> Tuple:
     return view_spec_entries(layout, spec)[1:]
 
 
+# ---------------------------------------------------------------------------
+# View <-> 2-D adapter (the kernels' tile contract)
+#
+# The Pallas kernels in repro.kernels operate on 2-D (rows, cols) tiles.
+# Every comm view (n, A/n, *rest) maps onto that frame by collapsing all
+# leading axes into rows and keeping the last axis as cols:
+#
+#     view (n, A/n, r0, .., rk, C)  <->  2-D (n * A/n * r0 * .. * rk, C)
+#
+# This is a pure reshape (no data movement): the last view axis is already
+# the bit-packing axis and a multiple of 8, so packed bytes produced on the
+# 2-D frame are byte-identical to ``pack_signs`` on the view. Padding is
+# always expressible per 2-D row as a true-element *count* (flatten views
+# pad the tail of the flat element order -> tail columns of the last rows;
+# structured views pad whole chunk rows -> whole 2-D rows), which is what
+# :func:`view_row_counts` precomputes for the kernels' mask-aware scales.
+# ---------------------------------------------------------------------------
+
+# Max frame width handed to the kernels. Tiles are (block_rows, cols), so
+# cols bounds VMEM per tile (~6 f32 operands x 8 rows x cols = 192*cols
+# bytes at 8192 -> ~1.6 MB, comfortably under the ~16 MB/core budget).
+# Flatten views of big leaves (cols = leaf_size/n) are refolded to respect
+# it; structured views keep their (bounded, model-local) last dim.
+FRAME_MAX_COLS = 8192
+
+
+def view_rows_cols(layout: LeafLayout) -> Tuple[int, int]:
+    """(rows, cols) of the kernel-facing 2-D frame of a comm view.
+
+    For flatten views wider than FRAME_MAX_COLS the frame folds each chunk
+    row into ``k`` sub-rows (still a pure reshape of the flat element
+    order; every chunk stays a contiguous, equal block of frame rows, so
+    scale-group reductions reshape cleanly and padding remains a tail
+    expressible as per-row counts).
+    """
+    vs = layout.view_shape
+    rows, cols = int(np.prod(vs[:-1])), int(vs[-1])
+    if layout.flatten and cols > FRAME_MAX_COLS:
+        # fold in 128-lane units so folded cols stay register-aligned;
+        # worst case is a 128-wide frame, never narrower
+        assert cols % 128 == 0, layout  # flatten views pad to n*128
+        m = cols // 128
+        k = -(-m // (FRAME_MAX_COLS // 128))  # smallest split under the cap
+        while m % k:
+            k += 1
+        rows, cols = rows * k, 128 * (m // k)
+    return rows, cols
+
+
+def view_to_2d(v: jnp.ndarray, layout: LeafLayout) -> jnp.ndarray:
+    """Comm view -> (rows, cols) kernel frame. Pure reshape."""
+    rows, cols = view_rows_cols(layout)
+    return v.reshape(rows, cols)
+
+
+def view_from_2d(a2d: jnp.ndarray, layout: LeafLayout) -> jnp.ndarray:
+    """Kernel frame -> comm view. The last dim is inferred so the same
+    helper restores values and packed bytes, framed or not."""
+    return a2d.reshape(layout.view_shape[:-1] + (-1,))
+
+
+def view_row_counts(layout: LeafLayout) -> np.ndarray:
+    """True (unpadded) element count per 2-D frame row, int32 (rows,).
+
+    Agrees with ``pad_mask`` broadcast over the view, reshaped to the frame
+    and row-summed; the kernels rebuild the elementwise mask as
+    ``iota(cols) < count``.
+    """
+    rows, cols = view_rows_cols(layout)
+    if layout.flatten:
+        base = int(np.prod(layout.shape)) if layout.shape else 1
+        starts = np.arange(rows, dtype=np.int64) * cols
+        cnt = np.clip(base - starts, 0, cols)
+    else:
+        base = layout.shape[layout.split_axis]
+        vs = layout.view_shape
+        group = int(np.prod(vs[2:-1], dtype=np.int64)) if len(vs) > 3 else 1
+        pos = np.arange(layout.n * vs[1], dtype=np.int64)  # split positions
+        cnt = np.repeat((pos < base).astype(np.int64), group) * cols
+    return cnt.astype(np.int32)
+
+
+def chunk_row_counts(layout: LeafLayout) -> np.ndarray:
+    """Per-worker-chunk row counts, int32 (n, rows // n): row counts of the
+    server chunk that worker j owns (``view_row_counts`` regrouped)."""
+    rows, _ = view_rows_cols(layout)
+    return view_row_counts(layout).reshape(layout.n, rows // layout.n)
+
+
 def true_counts(layout: LeafLayout) -> Tuple[float, np.ndarray]:
     """(#real elements per leaf, #real elements per chunk row array (n, A/n))."""
     rest = int(np.prod(layout.view_shape[2:])) if len(layout.view_shape) > 2 else 1
@@ -382,14 +478,24 @@ def decompress(packed: jnp.ndarray, scales: jnp.ndarray, count: int,
 
 
 def compressed_bytes(layout: LeafLayout, mode: ScaleMode) -> int:
-    """Bytes per worker sent on one sync (a2a payload + gathered result)."""
-    chunk_elems = int(np.prod(layout.chunk_shape))
-    packed = layout.n * (chunk_elems // 8)  # full packed view, bytes
-    if mode == "tensor":
-        nscale = 1
-    elif mode == "chunk":
-        nscale = layout.n
+    """Bytes per worker SENT on one sync (scatter a2a + gather broadcast).
+
+    Scatter: the all_to_all keeps this worker's own chunk local, so each
+    worker transmits (n-1)/n of its packed view = (n-1) packed chunks.
+    Gather: the worker broadcasts its one compressed server-chunk result to
+    the n-1 peers — the same (n-1) chunk payloads again. Scales ride along
+    with identical (n-1)-fold replication in both phases: one f32 per chunk
+    for tensor/chunk granularity, one per view row for row granularity.
+    """
+    chunk_packed = int(np.prod(layout.chunk_shape)) // 8  # bytes per chunk
+    if mode in ("tensor", "chunk"):
+        scatter_scales = gather_scales = 1
+    elif len(layout.view_shape) == 2:
+        # row granularity degenerates on flatten views: the worker side
+        # falls back to chunk scales (see _scales), the server side to
+        # per-element scales (see onebit_allreduce._server_compress).
+        scatter_scales, gather_scales = 1, layout.view_shape[1]
     else:
-        nscale = layout.n * layout.view_shape[1]
-    # scatter phase sends (n-1)/n of packed view; gather receives same again.
-    return 2 * packed + 4 * nscale * 2
+        scatter_scales = gather_scales = layout.view_shape[1]
+    return (layout.n - 1) * (2 * chunk_packed
+                             + 4 * (scatter_scales + gather_scales))

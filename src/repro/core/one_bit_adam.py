@@ -42,7 +42,8 @@ class OneBitAdam:
                        for lo, sp in zip(self.layouts, self.specs)]
         self.ar_cfg = AR.OneBitConfig(scale_mode=cfg.scale_mode,
                                       quantize=cfg.quantize,
-                                      model_axes=self.model_axes)
+                                      model_axes=self.model_axes,
+                                      use_pallas=cfg.use_pallas)
 
     def flat(self, tree):
         return self.treedef.flatten_up_to(tree)

@@ -55,6 +55,8 @@ class OneBitConfig:
     model_axes: tuple = ()               # manual tensor-parallel axes when the
                                          # optimizer runs fully-manual (scales
                                          # psum over these)
+    use_pallas: bool = False             # route EF-compress/decompress through
+                                         # the fused kernels (repro.kernels)
 
 
 def onebit_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
@@ -79,10 +81,25 @@ def onebit_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
         return out.astype(cfg.compute_dtype), ef
 
     mask = C.pad_mask(layout, dtype=z_view.dtype)
+    # Kernel dispatch: GSPMD-auto-sharded views stay on the constrained jnp
+    # path (dispatch.kernel_safe), as does the server side of
+    # row-granularity on 2-D (flatten) views, which degenerates to
+    # per-element scales (see dispatch.server_compress_view).
+    use_k = cfg.use_pallas
+    if use_k:
+        from repro.kernels import dispatch as K
+        use_k = K.kernel_safe(vspec)
+    k_server = use_k and not (cfg.scale_mode == "row"
+                              and len(layout.view_shape) == 2)
     # --- worker side -------------------------------------------------------
-    zw = cst(z_view + ef.err_worker.astype(z_view.dtype))
-    packed, scales, err_w = C.ef_compress(zw, layout, cfg.scale_mode, mask,
-                                          cfg.model_axes)
+    if use_k:
+        packed, scales, err_w = K.ef_compress_view(
+            cst(z_view), ef.err_worker.astype(z_view.dtype), layout,
+            cfg.scale_mode, cfg.model_axes)
+    else:
+        zw = cst(z_view + ef.err_worker.astype(z_view.dtype))
+        packed, scales, err_w = C.ef_compress(zw, layout, cfg.scale_mode,
+                                              mask, cfg.model_axes)
     packed, err_w = cst(packed), cst(err_w)
 
     # --- scatter: worker j collects chunk j from everyone ------------------
@@ -95,17 +112,27 @@ def onebit_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
     rscales = comm.all_to_all(bscales, split_axis=0, concat_axis=0)
 
     # --- server side (this worker serves its chunk) -------------------------
-    vals = cst(C.unpack_signs(recv, layout.pack_count, cfg.compute_dtype))
-    vals = vals * rscales.astype(cfg.compute_dtype)
+    if use_k:
+        vals = cst(K.decompress_view(recv, rscales, layout,
+                                     cfg.compute_dtype))
+    else:
+        vals = cst(C.unpack_signs(recv, layout.pack_count,
+                                  cfg.compute_dtype))
+        vals = vals * rscales.astype(cfg.compute_dtype)
     avg = vals.mean(axis=0)                                   # (A/n, *rest)
-    y = avg + ef.err_server.astype(cfg.compute_dtype)
+    widx = comm.index() if worker_index is None else worker_index
     # Server-side compression shares the leaf layout but acts on one chunk;
     # reuse the chunk-level granularity of the configured mode.
-    y_exp = cst(y[None])                                      # (1, A/n, *rest)
-    widx = comm.index() if worker_index is None else worker_index
-    s_mask = None if mask is None else mask[widx][None]
-    packed_s, scales_s, err_s = _server_compress(
-        y_exp, layout, cfg.scale_mode, s_mask, cfg.model_axes)
+    if k_server:
+        packed_s, scales_s, err_s = K.server_compress_view(
+            cst(avg[None]), ef.err_server.astype(cfg.compute_dtype)[None],
+            layout, cfg.scale_mode, widx, cfg.model_axes)
+    else:
+        y = avg + ef.err_server.astype(cfg.compute_dtype)
+        y_exp = cst(y[None])                                  # (1, A/n, *rest)
+        s_mask = None if mask is None else mask[widx][None]
+        packed_s, scales_s, err_s = _server_compress(
+            y_exp, layout, cfg.scale_mode, s_mask, cfg.model_axes)
     packed_s = cst(packed_s)
     err_s = cst(err_s)[0]
 
@@ -113,8 +140,13 @@ def onebit_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
     gpacked = cst(comm.all_gather(packed_s, axis=0, tiled=True))
     gscales = comm.all_gather(
         scales_s.astype(jnp.float32), axis=0, tiled=True)
-    out = cst(C.unpack_signs(gpacked, layout.pack_count, cfg.compute_dtype))
-    out = out * gscales.astype(cfg.compute_dtype)
+    if k_server:
+        out = cst(K.decompress_view(gpacked, gscales, layout,
+                                    cfg.compute_dtype))
+    else:
+        out = cst(C.unpack_signs(gpacked, layout.pack_count,
+                                 cfg.compute_dtype))
+        out = out * gscales.astype(cfg.compute_dtype)
     return out, EFState(err_worker=err_w.astype(ef.err_worker.dtype),
                         err_server=err_s.astype(ef.err_server.dtype))
 

@@ -80,7 +80,8 @@ class ZeroOneAdam:
                        for lo, sp in zip(self.layouts, self.specs)]
         self.ar_cfg = AR.OneBitConfig(scale_mode=cfg.scale_mode,
                                       quantize=cfg.quantize,
-                                      model_axes=self.model_axes)
+                                      model_axes=self.model_axes,
+                                      use_pallas=cfg.use_pallas)
 
     def flat(self, tree):
         return self.treedef.flatten_up_to(tree)
@@ -131,21 +132,27 @@ class ZeroOneAdam:
         gamma_total = state.gamma_acc + lr     # Σ γ over [t', t] inclusive
 
         # --- local half-step for every leaf --------------------------------
-        x_half, m_half, u_half, denoms = [], [], [], []
-        for x, g, m, v, u, lo, dp in zip(xs, gv, state.m, state.v, state.u,
-                                         los, dps):
+        # DP leaves with use_pallas route the elementwise chain through the
+        # fused kernel (one VMEM pass); the unfused jnp chain is f32-identical.
+        if cfg.use_pallas:
+            from repro.kernels import dispatch as K
+        x_half, m_half, u_half = [], [], []
+        for x, g, m, v, u, lo, dp, vs in zip(xs, gv, state.m, state.v,
+                                             state.u, los, dps, self.vspecs):
             m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
-            denom = jnp.sqrt(v32 + cfg.eps)
-            mh = cfg.beta1 * m32 + (1 - cfg.beta1) * g
-            delta = lr * mh / denom
-            if not dp:
-                delta_nat = delta  # natural shape already
-            else:
+            if dp and cfg.use_pallas and K.kernel_safe(vs):
+                mh, u_new, delta = K.fused_local_step_view(
+                    g, m32, u.astype(jnp.float32), v32, lr, cfg.beta1,
+                    cfg.eps, lo)
                 delta_nat = C.from_view(delta, lo)
+            else:
+                mh = cfg.beta1 * m32 + (1 - cfg.beta1) * g
+                delta = lr * mh / jnp.sqrt(v32 + cfg.eps)
+                delta_nat = C.from_view(delta, lo) if dp else delta
+                u_new = (u.astype(jnp.float32) + lr * mh) if dp else None
             x_half.append((x.astype(jnp.float32) - delta_nat).astype(x.dtype))
             m_half.append(mh)
-            u_half.append((u.astype(jnp.float32) + lr * mh) if dp else None)
-            denoms.append(denom)
+            u_half.append(u_new)
 
         dp_idx = [i for i, dp in enumerate(dps) if dp]
 
@@ -164,15 +171,18 @@ class ZeroOneAdam:
                     vspec=self.vspecs[i], worker_index=worker_index)
                 ubar = ubar.astype(jnp.float32)
                 nm[k] = ubar / gamma_total
+                # sync-only: the per-step half-step doesn't need √(v+ε) as a
+                # standalone array (the fused kernel divides internally)
+                denom = jnp.sqrt(state.v[i].astype(jnp.float32) + cfg.eps)
                 if use_anchor:
                     # x_{t+1} = x_{t'} - ū/√(v+ε): bitwise identical on all
                     # workers (ū and the anchor are replicated).
                     nx[k] = (anc[k].astype(jnp.float32)
-                             - C.from_view(ubar / denoms[i], lo)
+                             - C.from_view(ubar / denom, lo)
                              ).astype(xh[k].dtype)
                     na[k] = nx[k]
                 else:
-                    corr = (uh[k] - ubar) / denoms[i]
+                    corr = (uh[k] - ubar) / denom
                     nx[k] = (xh[k].astype(jnp.float32)
                              + C.from_view(corr, lo)).astype(xh[k].dtype)
                 nu[k] = jnp.zeros_like(uh[k])

@@ -1,5 +1,10 @@
 """Pallas TPU kernels for the paper's compute hot-spots (optimizer side):
 fused error-feedback 1-bit compress/decompress + fused 0/1 Adam local step.
-Validated with interpret=True against ref.py oracles on CPU.
+
+``ops`` exposes the jitted 2-D kernel wrappers, ``ref`` their pure-jnp
+oracles, and ``dispatch`` the comm-view-level glue that
+``OptimizerConfig.use_pallas=True`` routes through. Validated with
+interpret=True against ref.py on CPU; on TPU the same calls compile to
+fused Mosaic kernels.
 """
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref

@@ -1,0 +1,195 @@
+"""View-level dispatch: comm views -> 2-D tiles -> Pallas kernels.
+
+This is the seam ``OptimizerConfig.use_pallas=True`` routes through. Each
+function mirrors one jnp hot-path in ``repro.core`` — same argument
+semantics, same output shapes, f32-identical numerics:
+
+    ef_compress_view      <->  compressor.ef_compress (+ the caller's
+                               ``z + err`` pre-add, fused into the kernel)
+    server_compress_view  <->  onebit_allreduce._server_compress
+    decompress_view       <->  unpack_signs(...) * scales
+    fused_local_step_view <->  zero_one_adam's unfused local half-step
+
+Views map to the kernels' (rows, cols) frame by pure reshape (see
+compressor.view_to_2d); padding is carried as per-row true counts so the
+kernels' scales/error-feedback are pad-exact. Scale granularities that
+group multiple 2-D rows ("tensor", "chunk", and "row" with trailing view
+dims) use the two-pass reduction (abs_rowsum -> O(rows) combine ->
+ef_quantize); per-2-D-row granularity uses the single-pass fused kernel.
+The combine step also psums over manual tensor-parallel axes and applies
+``rest_factor`` global denominators, exactly like ``compressor._scales``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressor as C
+from repro.kernels import ops
+
+
+def _largest_divisor(x: int, cap: int) -> int:
+    d = min(x, cap)
+    while x % d:
+        d -= 1
+    return d
+
+
+@functools.lru_cache(maxsize=None)
+def _row_counts_np(layout: C.LeafLayout) -> np.ndarray:
+    return C.view_row_counts(layout)
+
+
+def _counts(layout: C.LeafLayout) -> jnp.ndarray:
+    return jnp.asarray(_row_counts_np(layout))
+
+
+def _scales_to_rows(scales, lead_shape, rows):
+    """Broadcast granular scales (tensor/chunk/row shapes) over the buffer's
+    leading view dims, then repeat onto frame sub-rows when the 2-D frame
+    folds wider views (see compressor.view_rows_cols)."""
+    s = jnp.broadcast_to(scales.astype(jnp.float32),
+                         lead_shape + (1,)).reshape(-1)
+    if s.shape[0] != rows:
+        s = jnp.repeat(s, rows // s.shape[0])
+    return s
+
+
+def kernel_safe(vspec) -> bool:
+    """Whether kernel dispatch may handle a view with this tensor-parallel
+    spec. Pallas calls carry no GSPMD partitioning rules yet, so a view
+    that is model-sharded over an ambient *auto* mesh axis must stay on
+    the jnp path — otherwise XLA all-gathers the view onto every chip at
+    the kernel boundary (the exact regression ``compressor.constrain``
+    exists to prevent). Fully-manual meshes (model axes Manual) and
+    meshless runs are safe.
+    """
+    if vspec is None or all(e is None for e in tuple(vspec)):
+        return True
+    return not C.ambient_auto_mesh()
+
+
+def _row_group_scales(rowsum, shape, rest_factor, model_axes):
+    """Row-granularity scales for a buffer of the given (lead, chunk, *rest)
+    shape: one scale per (lead, chunk-row) pair, i.e. per group of
+    prod(rest[:-1]) 2-D rows, divided by the full (global) rest extent —
+    padding is whole rows, already zeroed in the masked rowsums. Shared by
+    the worker view (lead = n) and the server chunk (lead = 1)."""
+    ndim = len(shape)
+    group = int(np.prod(shape[2:-1])) if ndim > 3 else 1
+    rest = max(int(np.prod(shape[2:])) * rest_factor, 1)
+    rs = rowsum.reshape(shape[0], shape[1], group).sum(axis=-1)
+    s = C._psum_model(rs, model_axes) / rest
+    return s.reshape(shape[:2] + (1,) * (ndim - 2))
+
+
+def _combine_scales(rowsum, layout: C.LeafLayout, mode: C.ScaleMode,
+                    model_axes):
+    """Masked per-row L1 sums (R,) -> scales shaped like compressor._scales."""
+    vs = layout.view_shape
+    ndim, n = len(vs), vs[0]
+    total, per_chunk = C.true_counts(layout)
+    rf = layout.rest_factor
+    if mode == "tensor":
+        s = C._psum_model(rowsum.sum(), model_axes) / (total * rf)
+        return s.reshape((1,) * ndim)
+    if mode == "chunk":
+        cs = rowsum.reshape(n, -1).sum(axis=1)
+        cnt = jnp.asarray(np.maximum(per_chunk * rf, 1.0), jnp.float32)
+        s = C._psum_model(cs, model_axes) / cnt
+        return s.reshape((n,) + (1,) * (ndim - 1))
+    return _row_group_scales(rowsum, vs, rf, model_axes)
+
+
+def ef_compress_view(z, err, layout: C.LeafLayout, mode: C.ScaleMode,
+                     model_axes=()):
+    """Worker-side fused EF-compress of a comm view.
+
+    Fuses the caller's ``z + err`` accumulation; returns
+    (packed view, scales shaped like compressor._scales, err view).
+    """
+    rows, cols = C.view_rows_cols(layout)
+    vs = layout.view_shape
+    ndim = len(vs)
+    eff = "chunk" if (mode == "row" and ndim == 2) else mode
+    z2, e2 = z.reshape(rows, cols), err.reshape(rows, cols)
+    br = _largest_divisor(rows, 8)
+    cnts = _counts(layout)
+    if eff == "row" and ndim == 3 and not model_axes and \
+            layout.rest_factor == 1:
+        # per-2-D-row scales: the single-pass fully fused kernel applies
+        packed2, srow, err2 = ops.ef_compress(z2, e2, cnts, block_rows=br)
+        scales = srow.reshape(vs[:2] + (1,) * (ndim - 2))
+    else:
+        rowsum = ops.abs_rowsum(z2, e2, cnts, block_rows=br)
+        scales = _combine_scales(rowsum, layout, eff, model_axes)
+        srow = _scales_to_rows(scales, vs[:-1], rows)
+        packed2, err2 = ops.ef_quantize(z2, e2, srow, cnts, block_rows=br)
+    return (C.view_from_2d(packed2, layout), scales,
+            err2.reshape(vs).astype(err.dtype))
+
+
+def server_compress_view(avg, err, layout: C.LeafLayout, mode: C.ScaleMode,
+                         worker_index, model_axes=()):
+    """Server-side fused EF-compress of one chunk (leading dim 1).
+
+    Mirrors onebit_allreduce._server_compress with the ``avg + err`` add
+    fused in. Not applicable to row granularity on 2-D (flatten) views —
+    that degenerates to per-element scales; callers keep the jnp path there.
+    """
+    ys = avg.shape
+    ndim = len(ys)
+    assert not (mode == "row" and ndim == 2)
+    rows_all, cols = C.view_rows_cols(layout)
+    rows = rows_all // layout.n   # the frame splits chunks into equal blocks
+    cnts = jnp.take(jnp.asarray(C.chunk_row_counts(layout)), worker_index,
+                    axis=0)
+    z2, e2 = avg.reshape(rows, cols), err.reshape(rows, cols)
+    br = _largest_divisor(rows, 8)
+    rowsum = ops.abs_rowsum(z2, e2, cnts, block_rows=br)
+    rf = layout.rest_factor
+    if mode == "row":
+        scales = _row_group_scales(rowsum, ys, rf, model_axes)
+    else:  # tensor / chunk -> one scale for this chunk
+        denom = jnp.maximum(cnts.sum().astype(jnp.float32) * rf, 1.0)
+        s = C._psum_model(rowsum.sum(), model_axes) / denom
+        scales = s.reshape((1,) * ndim)
+    srow = _scales_to_rows(scales, ys[:-1], rows)
+    packed2, err2 = ops.ef_quantize(z2, e2, srow, cnts, block_rows=br)
+    return (packed2.reshape(ys[:-1] + (ys[-1] // 8,)), scales,
+            err2.reshape(ys).astype(err.dtype))
+
+
+def decompress_view(packed, scales, layout: C.LeafLayout,
+                    dtype=jnp.float32):
+    """Fused unpack·scale of a view-shaped packed buffer (the a2a receive
+    or the gathered chunk results — both carry the full view shape).
+
+    ``scales`` must broadcast against the packed array's leading dims (the
+    shapes _scales / server compression produce for tensor/chunk/row modes).
+    """
+    rows, cols = C.view_rows_cols(layout)
+    p2 = packed.reshape(rows, cols // 8)
+    srow = _scales_to_rows(scales, packed.shape[:-1], rows)
+    out2 = ops.decompress(p2, srow, block_rows=_largest_divisor(rows, 8),
+                          dtype=dtype)
+    return out2.reshape(packed.shape[:-1] + (layout.pack_count,))
+
+
+def fused_local_step_view(g, m, u, v, lr, beta1, eps,
+                          layout: C.LeafLayout):
+    """Fused 0/1 Adam local half-step over one leaf's comm view.
+
+    Returns (m', u', delta) in view shape — identical math to the unfused
+    three-sweep XLA chain, in one VMEM pass.
+    """
+    rows, cols = C.view_rows_cols(layout)
+    vs = layout.view_shape
+    r2 = lambda a: a.reshape(rows, cols)
+    block = (_largest_divisor(rows, 8), _largest_divisor(cols, 1024))
+    mh2, uh2, d2 = ops.fused_local_step(r2(g), r2(m), r2(u), r2(v), lr,
+                                        beta1, eps, block=block)
+    return mh2.reshape(vs), uh2.reshape(vs), d2.reshape(vs)

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _fused_kernel(g_ref, m_ref, u_ref, v_ref, lr_ref, b1_ref,
+def _fused_kernel(g_ref, m_ref, u_ref, v_ref, lr_ref, b1_ref, omb1_ref,
                   m_out, u_out, delta_out, *, eps):
     g = g_ref[...].astype(jnp.float32)
     m = m_ref[...].astype(jnp.float32)
@@ -28,8 +28,14 @@ def _fused_kernel(g_ref, m_ref, u_ref, v_ref, lr_ref, b1_ref,
     v = v_ref[...].astype(jnp.float32)
     lr = lr_ref[0, 0].astype(jnp.float32)
     b1 = b1_ref[0, 0].astype(jnp.float32)
-    mh = b1 * m + (1.0 - b1) * g
-    delta = lr * mh * jax.lax.rsqrt(v + eps)
+    # 1-β₁ is folded at trace time (f64) and shipped as its own operand:
+    # recomputing it in f32 here is 1 ulp off the unfused XLA path and
+    # breaks the use_pallas on/off bit-parity contract
+    omb1 = omb1_ref[0, 0].astype(jnp.float32)
+    mh = b1 * m + omb1 * g
+    # divide (not rsqrt) so use_pallas=True reproduces the unfused XLA path
+    # bit-for-bit in f32; rsqrt is ~1 ulp off and breaks step-parity tests
+    delta = lr * mh / jnp.sqrt(v + eps)
     m_out[...] = mh.astype(m_out.dtype)
     u_out[...] = (u + lr * mh).astype(u_out.dtype)
     delta_out[...] = delta.astype(delta_out.dtype)
@@ -47,13 +53,14 @@ def fused_local_step(g, m, u, v, lr, beta1, *, eps=1e-8,
     grid = (R // br, C // bc)
     lr_arr = jnp.asarray(lr, jnp.float32).reshape(1, 1)
     b1_arr = jnp.asarray(beta1, jnp.float32).reshape(1, 1)
+    omb1_arr = jnp.asarray(1.0 - beta1, jnp.float32).reshape(1, 1)
     tile = lambda: pl.BlockSpec((br, bc), lambda i, j: (i, j))
     scal = lambda: pl.BlockSpec((1, 1), lambda i, j: (0, 0))
     import functools
     return pl.pallas_call(
         functools.partial(_fused_kernel, eps=eps),
         grid=grid,
-        in_specs=[tile(), tile(), tile(), tile(), scal(), scal()],
+        in_specs=[tile(), tile(), tile(), tile(), scal(), scal(), scal()],
         out_specs=[tile(), tile(), tile()],
         out_shape=[
             jax.ShapeDtypeStruct((R, C), m.dtype),
@@ -61,4 +68,4 @@ def fused_local_step(g, m, u, v, lr, beta1, *, eps=1e-8,
             jax.ShapeDtypeStruct((R, C), jnp.float32),
         ],
         interpret=interpret,
-    )(g, m, u, v, lr_arr, b1_arr)
+    )(g, m, u, v, lr_arr, b1_arr, omb1_arr)

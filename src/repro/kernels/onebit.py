@@ -1,52 +1,82 @@
-"""Pallas TPU kernel: fused error-feedback 1-bit compression.
+"""Pallas TPU kernels: fused error-feedback 1-bit compression.
 
 The compression hot-path of 0/1 Adam touches every parameter byte three
 times when expressed as separate XLA ops (add error, compute scale+sign,
-write error). This kernel fuses the whole worker-side EF-compress into one
-VMEM pass per tile:
+write error). These kernels fuse the whole worker-side EF-compress into one
+or two VMEM passes per tile:
 
     zw   = z + err_in
-    s    = mean(|zw|) per row            (the "row" scale granularity)
+    s    = masked-mean(|zw|) at the requested granularity
     bits = zw >= 0  -> packed uint8 (8 lanes per byte)
-    err  = zw - sign(zw)·s
+    err  = (zw - sign(zw)·s) · mask
 
-Layout: operands are 2-D (rows, cols) — the optimizer's comm views flatten
-to this. Tiles are (BLOCK_R, cols): a full row per tile so the scale
-reduction stays in-register; cols must be a multiple of 128 for lane
-alignment and of 8 for packing (the comm-view layouts guarantee both).
+Layout: operands are 2-D (rows, cols) — the optimizer's comm views reshape
+to this frame (see ``compressor.view_to_2d``). Tiles are (BLOCK_R, cols): a
+full row per tile so row reductions stay in-register; cols must be a
+multiple of 8 for packing. Flatten views are padded and folded so their
+frame cols are 128-lane aligned and capped at ``FRAME_MAX_COLS`` (VMEM
+bound); structured views keep their model-local last dim.
+
+Pad-exactness: each row carries a true-element *count* (padding is always a
+row tail or a whole row — see compressor.view_row_counts); the kernels
+rebuild the elementwise mask as ``iota(cols) < count`` so scales and error
+feedback never see padding. ``counts=None`` means "no padding".
+
+Scale granularities (tensor / chunk / row of the comm view) that span
+multiple 2-D rows use a two-pass reduction: ``abs_rowsum`` produces masked
+per-row L1 sums, the (R,)-sized combine runs as plain XLA, and
+``ef_quantize`` consumes the broadcast per-row scales. The single-pass
+``ef_compress`` covers the per-row granularity. ``kernels/dispatch.py``
+picks the pass structure per leaf.
 
 TPU is the TARGET; correctness is validated on CPU with interpret=True
-against ref.py (tests/test_kernels.py sweeps shapes/dtypes).
+against ref.py (tests/test_kernels.py + tests/test_pallas_parity.py).
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-def _ef_compress_kernel(z_ref, err_ref, packed_ref, scale_ref, errout_ref):
-    zw = z_ref[...].astype(jnp.float32) + err_ref[...].astype(jnp.float32)
-    r, c = zw.shape
-    s = jnp.abs(zw).mean(axis=1)                       # (BLOCK_R,)
-    bits = (zw >= 0)
+
+def _row_mask(cnt_i32, r, c):
+    """(r, c) bool mask from per-row true counts; 2-D iota (TPU-safe)."""
+    col = jax.lax.broadcasted_iota(jnp.int32, (r, c), 1)
+    return col < cnt_i32[:, None]
+
+
+def _pack_bits(bits, r, c):
+    """(r, c) bool -> (r, c//8) uint8, big-endian (matches jnp.packbits)."""
     b8 = bits.reshape(r, c // 8, 8).astype(jnp.uint8)
     weights = (jnp.uint8(128) >> jax.lax.broadcasted_iota(
         jnp.uint8, (1, 1, 8), 2))
-    packed_ref[...] = (b8 * weights).sum(axis=-1).astype(jnp.uint8)
+    return (b8 * weights).sum(axis=-1).astype(jnp.uint8)
+
+
+def _ef_compress_kernel(z_ref, err_ref, cnt_ref, packed_ref, scale_ref,
+                        errout_ref):
+    zw = z_ref[...].astype(jnp.float32) + err_ref[...].astype(jnp.float32)
+    r, c = zw.shape
+    cnt = cnt_ref[...]
+    mask = _row_mask(cnt, r, c)
+    s = (jnp.where(mask, jnp.abs(zw), 0.0).sum(axis=1)
+         / jnp.maximum(cnt.astype(jnp.float32), 1.0))       # (BLOCK_R,)
+    bits = (zw >= 0)
+    packed_ref[...] = _pack_bits(bits, r, c)
     scale_ref[...] = s.astype(scale_ref.dtype)
     zhat = jnp.where(bits, s[:, None], -s[:, None])
-    errout_ref[...] = (zw - zhat).astype(errout_ref.dtype)
+    errout_ref[...] = jnp.where(mask, zw - zhat, 0.0).astype(errout_ref.dtype)
 
 
-def ef_compress(z: jnp.ndarray, err: jnp.ndarray, *, block_rows: int = 8,
-                interpret: bool = True):
-    """Fused EF 1-bit compress over (R, C). Returns (packed u8 (R, C//8),
-    scales f32 (R,), err_out like err)."""
+def ef_compress(z: jnp.ndarray, err: jnp.ndarray, counts=None, *,
+                block_rows: int = 8, interpret: bool = True):
+    """Fused single-pass EF 1-bit compress over (R, C) with per-row scales.
+    Returns (packed u8 (R, C//8), scales f32 (R,), err_out like err)."""
     R, C = z.shape
     assert C % 8 == 0, C
     assert R % block_rows == 0, (R, block_rows)
+    if counts is None:
+        counts = jnp.full((R,), C, jnp.int32)
     grid = (R // block_rows,)
     return pl.pallas_call(
         _ef_compress_kernel,
@@ -54,6 +84,7 @@ def ef_compress(z: jnp.ndarray, err: jnp.ndarray, *, block_rows: int = 8,
         in_specs=[
             pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
             pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
         ],
         out_specs=[
             pl.BlockSpec((block_rows, C // 8), lambda i: (i, 0)),
@@ -66,7 +97,80 @@ def ef_compress(z: jnp.ndarray, err: jnp.ndarray, *, block_rows: int = 8,
             jax.ShapeDtypeStruct((R, C), err.dtype),
         ],
         interpret=interpret,
-    )(z, err)
+    )(z, err, counts)
+
+
+def _abs_rowsum_kernel(z_ref, err_ref, cnt_ref, out_ref):
+    zw = z_ref[...].astype(jnp.float32) + err_ref[...].astype(jnp.float32)
+    r, c = zw.shape
+    mask = _row_mask(cnt_ref[...], r, c)
+    out_ref[...] = jnp.where(mask, jnp.abs(zw), 0.0).sum(axis=1)
+
+
+def abs_rowsum(z: jnp.ndarray, err: jnp.ndarray, counts=None, *,
+               block_rows: int = 8, interpret: bool = True):
+    """Pass 1 of the two-pass EF-compress: masked per-row L1 sums of
+    ``z + err``. Returns f32 (R,)."""
+    R, C = z.shape
+    assert R % block_rows == 0, (R, block_rows)
+    if counts is None:
+        counts = jnp.full((R,), C, jnp.int32)
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        _abs_rowsum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((R,), jnp.float32),
+        interpret=interpret,
+    )(z, err, counts)
+
+
+def _ef_quantize_kernel(z_ref, err_ref, scale_ref, cnt_ref, packed_ref,
+                        errout_ref):
+    zw = z_ref[...].astype(jnp.float32) + err_ref[...].astype(jnp.float32)
+    r, c = zw.shape
+    mask = _row_mask(cnt_ref[...], r, c)
+    s = scale_ref[...].astype(jnp.float32)
+    bits = (zw >= 0)
+    packed_ref[...] = _pack_bits(bits, r, c)
+    zhat = jnp.where(bits, s[:, None], -s[:, None])
+    errout_ref[...] = jnp.where(mask, zw - zhat, 0.0).astype(errout_ref.dtype)
+
+
+def ef_quantize(z: jnp.ndarray, err: jnp.ndarray, scales: jnp.ndarray,
+                counts=None, *, block_rows: int = 8, interpret: bool = True):
+    """Pass 2 of the two-pass EF-compress: quantize ``z + err`` against
+    precomputed per-row scales (R,). Returns (packed u8 (R, C//8), err_out)."""
+    R, C = z.shape
+    assert C % 8 == 0, C
+    assert R % block_rows == 0, (R, block_rows)
+    if counts is None:
+        counts = jnp.full((R,), C, jnp.int32)
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        _ef_quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, C // 8), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C // 8), jnp.uint8),
+            jax.ShapeDtypeStruct((R, C), err.dtype),
+        ],
+        interpret=interpret,
+    )(z, err, scales, counts)
 
 
 def _decompress_kernel(packed_ref, scale_ref, out_ref):

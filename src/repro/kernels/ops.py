@@ -1,8 +1,12 @@
 """Jitted public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (the kernels execute in Python via
-the Pallas interpreter for correctness validation); on TPU the same calls
-compile to fused Mosaic kernels.
+``interpret`` defaults to True off-TPU (the kernels execute via the Pallas
+interpreter for correctness validation); on TPU the same calls compile to
+fused Mosaic kernels.
+
+All wrappers take 2-D (rows, cols) operands; ``counts`` is the optional
+per-row true-element count for pad-exact scales/error-feedback (None means
+no padding). View-shaped callers go through ``repro.kernels.dispatch``.
 """
 from __future__ import annotations
 
@@ -20,10 +24,32 @@ def _interpret_default():
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def ef_compress(z, err, block_rows: int = 8, interpret: bool | None = None):
+def ef_compress(z, err, counts=None, block_rows: int = 8,
+                interpret: bool | None = None):
+    """Single-pass fused EF-compress with per-row scales."""
     if interpret is None:
         interpret = _interpret_default()
-    return _ob.ef_compress(z, err, block_rows=block_rows,
+    return _ob.ef_compress(z, err, counts, block_rows=block_rows,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def abs_rowsum(z, err, counts=None, block_rows: int = 8,
+               interpret: bool | None = None):
+    """Masked per-row L1 sums of z + err (two-pass compress, pass 1)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _ob.abs_rowsum(z, err, counts, block_rows=block_rows,
+                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def ef_quantize(z, err, scales, counts=None, block_rows: int = 8,
+                interpret: bool | None = None):
+    """Quantize z + err against per-row scales (two-pass compress, pass 2)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _ob.ef_quantize(z, err, scales, counts, block_rows=block_rows,
                            interpret=interpret)
 
 

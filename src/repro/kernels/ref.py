@@ -1,18 +1,50 @@
-"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Each oracle mirrors one kernel in onebit.py / fused_adam.py, including the
+mask-aware semantics: ``counts`` is the per-row true-element count (None
+means no padding), identical to what the kernels receive.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 
-def ef_compress_ref(z, err):
-    """(R, C) -> (packed u8 (R, C//8), scales f32 (R,), err_out)."""
+def _mask(counts, R, C):
+    if counts is None:
+        return jnp.ones((R, C), bool)
+    return jnp.arange(C, dtype=jnp.int32)[None, :] < counts[:, None]
+
+
+def ef_compress_ref(z, err, counts=None):
+    """(R, C) -> (packed u8 (R, C//8), per-row scales f32 (R,), err_out)."""
     zw = z.astype(jnp.float32) + err.astype(jnp.float32)
-    s = jnp.abs(zw).mean(axis=1)
+    R, C = zw.shape
+    m = _mask(counts, R, C)
+    denom = (jnp.full((R,), float(C)) if counts is None
+             else jnp.maximum(counts.astype(jnp.float32), 1.0))
+    s = jnp.where(m, jnp.abs(zw), 0.0).sum(axis=1) / denom
     bits = zw >= 0
     packed = jnp.packbits(bits.astype(jnp.uint8), axis=-1, bitorder="big")
     zhat = jnp.where(bits, s[:, None], -s[:, None])
-    return packed, s, (zw - zhat).astype(err.dtype)
+    return packed, s, jnp.where(m, zw - zhat, 0.0).astype(err.dtype)
+
+
+def abs_rowsum_ref(z, err, counts=None):
+    zw = z.astype(jnp.float32) + err.astype(jnp.float32)
+    R, C = zw.shape
+    return jnp.where(_mask(counts, R, C), jnp.abs(zw), 0.0).sum(axis=1)
+
+
+def ef_quantize_ref(z, err, scales, counts=None):
+    zw = z.astype(jnp.float32) + err.astype(jnp.float32)
+    R, C = zw.shape
+    bits = zw >= 0
+    packed = jnp.packbits(bits.astype(jnp.uint8), axis=-1, bitorder="big")
+    s = scales.astype(jnp.float32)
+    zhat = jnp.where(bits, s[:, None], -s[:, None])
+    return packed, jnp.where(_mask(counts, R, C), zw - zhat,
+                             0.0).astype(err.dtype)
 
 
 def decompress_ref(packed, scales, dtype=jnp.float32):

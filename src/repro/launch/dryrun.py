@@ -161,7 +161,7 @@ def default_opt_cfg(optimizer: str = "zero_one_adam", scale_mode="tensor"):
         lr=S.LinearWarmupExpDecay(peak_lr=4e-4, warmup_steps=12500),
         var_policy=S.AdaptiveFreezePolicy(kappa=16),
         sync_policy=S.LrProportionalSyncPolicy(
-            warmup_steps=12500, double_every=32678, max_interval=16),
+            warmup_steps=12500, double_every=32768, max_interval=16),
         onebit_warmup=16000,
         scale_mode=scale_mode,
         state_dtype=jnp.bfloat16,   # production state dtype (fp16 in paper)

@@ -40,7 +40,8 @@ def build_opt_cfg(args) -> OptimizerConfig:
             warmup_steps=args.sync_warmup, double_every=args.double_every,
             max_interval=args.max_interval),
         onebit_warmup=args.onebit_warmup,
-        scale_mode=args.scale_mode)
+        scale_mode=args.scale_mode,
+        use_pallas=args.use_pallas)
 
 
 def main():
@@ -65,6 +66,9 @@ def main():
     ap.add_argument("--onebit-warmup", type=int, default=20)
     ap.add_argument("--scale-mode", default="tensor",
                     choices=["tensor", "chunk", "row"])
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route the optimizer hot path through the fused "
+                         "Pallas kernels (interpreted off-TPU)")
     ap.add_argument("--micro-batches", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)

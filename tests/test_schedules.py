@@ -73,6 +73,21 @@ def test_interval_matches_assumption_H():
     assert max_gap <= 16  # Assumption 5: H bound
 
 
+def test_default_sync_policy_pins_lr_half_life():
+    """Regression for the 32678 typo: the paper's BERT recipe doubles the
+    sync interval every 2^15 = 32768 steps (the lr half-life)."""
+    from repro.core import OptimizerConfig
+    pol = OptimizerConfig().sync_policy
+    assert pol.double_every == 32768 == 2 ** 15
+    assert pol.warmup_steps == 12500 and pol.max_interval == 16
+    w = pol.warmup_steps
+    assert int(pol.interval(w)) == 1
+    assert int(pol.interval(w + 2 ** 15 - 1)) == 1
+    assert int(pol.interval(w + 2 ** 15)) == 2
+    assert int(pol.interval(w + 2 * 2 ** 15)) == 4
+    assert int(pol.interval(w + 10 * 2 ** 15)) == 16  # clipped at H
+
+
 def test_lr_schedules_shapes():
     lr1 = S.LinearWarmupExpDecay(4e-4, 10, decay=0.5, decay_period=10)
     assert float(lr1(0)) < float(lr1(9))
