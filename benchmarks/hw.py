@@ -3,7 +3,10 @@
 # TPU v5e target (roofline terms)
 TPU_PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 TPU_HBM_BW = 819e9               # bytes/s per chip
-TPU_ICI_BW = 50e9                # bytes/s per link
+TPU_ICI_BW = 50e9                # bytes/s per link (intra-pod)
+TPU_DCI_BW = 6.25e9              # bytes/s per chip across pods (slow
+                                 # data-center links; ~order below ICI —
+                                 # why the hierarchical AllReduce exists)
 
 # The paper's clusters (Fig. 3 reproduction)
 V100_FP16_FLOPS = 112e12

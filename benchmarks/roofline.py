@@ -96,13 +96,29 @@ def analyze(path="results/dryrun.jsonl", mesh_filter="16x16"):
         t_c = flops_a / hw.TPU_PEAK_FLOPS
         t_m = mem_a / hw.TPU_HBM_BW
         coll = sum(r["collective_bytes"].values())
-        t_x = coll / hw.TPU_ICI_BW
+        # per-level split when the dry-run classified replica groups by pod
+        # crossing (multi-pod meshes): intra-pod traffic rides the fast ICI,
+        # inter-pod the slow DCI — the hierarchical AllReduce moves bytes
+        # from the second bucket into the first
+        intra, inter = r.get("intrapod_bytes"), r.get("interpod_bytes")
+        if intra is not None and inter is not None:
+            # unattributed traffic (e.g. collective-permutes without
+            # replica groups) is charged at ICI speed so the split never
+            # under-counts the flat fallback's total
+            intra += r.get("unattributed_collective_bytes") or 0.0
+            t_x_intra = intra / hw.TPU_ICI_BW
+            t_x_inter = inter / hw.TPU_DCI_BW
+            t_x = t_x_intra + t_x_inter
+        else:
+            t_x_intra, t_x_inter = coll / hw.TPU_ICI_BW, 0.0
+            t_x = t_x_intra
         dom = max(("compute", t_c), ("memory", t_m),
                   ("collective", t_x), key=lambda kv: kv[1])[0]
         ratio = flops_a / max(r["flops_per_device"], 1.0)
         bound = max(t_c, t_m, t_x)
         mfu_bound = t_c / bound if bound else 0.0
         rows.append(dict(arch=arch, shape=shape, t_c=t_c, t_m=t_m, t_x=t_x,
+                         t_x_intra=t_x_intra, t_x_inter=t_x_inter,
                          t_c_hlo=r["flops_per_device"] / hw.TPU_PEAK_FLOPS,
                          t_m_hlo=r["bytes_per_device"] / hw.TPU_HBM_BW,
                          dominant=dom, model_flops=flops_a, ratio=ratio,
@@ -128,11 +144,12 @@ def main():
     print(f"# Roofline terms per (arch x shape), mesh {mesh} "
           f"(seconds/step/device; compute/memory analytic, collective "
           f"trip-count-corrected from HLO)")
-    print("arch,shape,compute_s,memory_s,collective_s,dominant,"
-          "model_vs_hlo_flops,mfu_upper_bound")
+    print("arch,shape,compute_s,memory_s,collective_s,collective_intra_s,"
+          "collective_inter_s,dominant,model_vs_hlo_flops,mfu_upper_bound")
     for r in rows:
         print(f"{r['arch']},{r['shape']},{r['t_c']:.3e},{r['t_m']:.3e},"
-              f"{r['t_x']:.3e},{r['dominant']},{r['ratio']:.3f},"
+              f"{r['t_x']:.3e},{r['t_x_intra']:.3e},{r['t_x_inter']:.3e},"
+              f"{r['dominant']},{r['ratio']:.3f},"
               f"{r['mfu_bound']:.3f}")
     by_dom = defaultdict(list)
     for r in rows:

@@ -8,13 +8,14 @@ Public surface:
   - 1-bit EF compressor + comm-view layouts (compressor.py)
 """
 from repro.core.api import OptimizerConfig, make_optimizer, comm_accounting
-from repro.core.comm import Comm, mesh_comm, sim_comm, run_simulated
+from repro.core.comm import (Comm, Hierarchy, mesh_comm, sim_comm,
+                             run_simulated)
 from repro.core import schedules
 from repro.core import compressor
 from repro.core import onebit_allreduce
 
 __all__ = [
     "OptimizerConfig", "make_optimizer", "comm_accounting",
-    "Comm", "mesh_comm", "sim_comm", "run_simulated",
+    "Comm", "Hierarchy", "mesh_comm", "sim_comm", "run_simulated",
     "schedules", "compressor", "onebit_allreduce",
 ]

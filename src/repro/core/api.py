@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.core import compressor as C
 from repro.core import schedules as S
-from repro.core.comm import Comm
+from repro.core.comm import Comm, Hierarchy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +61,11 @@ class OptimizerConfig:
                                          # through the fused Pallas kernels
                                          # (repro.kernels.dispatch); f32-
                                          # identical to the unfused XLA path
+    hierarchy: Optional[Hierarchy] = None  # two-level (intra-pod x inter-pod)
+                                         # topology: reduce uncompressed over
+                                         # the fast inner axes, run the 1-bit
+                                         # EF exchange only across pods. None
+                                         # = flat (single-level) exchange.
 
 
 def tree_layouts(shapes, specs, n: int):
@@ -99,26 +104,52 @@ def make_optimizer(cfg: OptimizerConfig, param_shapes, *, specs=None,
 # ---------------------------------------------------------------------------
 
 def comm_accounting(opt) -> Dict[str, float]:
-    """Static bytes-per-round numbers for the optimizer's parameter tree."""
+    """Static bytes-per-round numbers for the optimizer's parameter tree.
+
+    ``*_inner`` / ``*_outer`` split every round into its topology levels:
+    ``inner`` is the uncompressed intra-pod traffic (zero for flat layouts),
+    ``outer`` crosses the inter-pod links — the compressed exchange for
+    syncs, the owned-slice exchange for full-precision rounds. The headline
+    ``fullprec_bytes_per_round`` keeps the historical true-parameter ring
+    convention for flat layouts and becomes the per-level sum (padded-view
+    based, like every other number here) when a hierarchy is configured.
+    """
+    import numpy as np
     layouts = jax.tree.leaves(opt.layouts)
     masks = jax.tree.leaves(opt.dp_mask)
+    wire = jnp.dtype(opt.cfg.comm_dtype).itemsize
     total_params = 0
-    compressed = 0
+    comp_inner = comp_outer = 0
+    full_inner = full_outer = 0
+    n_inner = 1
     for lo, dp in zip(layouts, masks):
         if not dp:
             continue
-        import numpy as np
         total_params += int(np.prod(lo.shape)) if lo.shape else 1
-        compressed += C.compressed_bytes(lo, opt.cfg.scale_mode)
-    wire = jnp.dtype(opt.cfg.comm_dtype).itemsize
+        lv = C.compressed_bytes_levels(lo, opt.cfg.scale_mode,
+                                       inner_itemsize=wire)
+        comp_inner += lv["inner"]
+        comp_outer += lv["outer"]
+        fv = C.fullprec_bytes_levels(lo, wire)
+        full_inner += fv["inner"]
+        full_outer += fv["outer"]
+        n_inner = max(n_inner, lo.n_inner)
     # Ring/chunked allreduce (scatter-mean + all-gather) moves 2*(n-1)/n of
     # the payload per worker — same transport convention as compressed_bytes,
     # so the compression ratios the Fig. 3/4 benches derive are unbiased.
     ring = 2.0 * (opt.n - 1) / max(opt.n, 1)
-    full = ring * total_params * wire
+    full = (full_inner + full_outer if n_inner > 1
+            else ring * total_params * wire)
+    compressed = comp_inner + comp_outer
     return {
         "dp_params": float(total_params),
         "compressed_bytes_per_sync": float(compressed),
+        "compressed_bytes_per_sync_inner": float(comp_inner),
+        "compressed_bytes_per_sync_outer": float(comp_outer),
         "fullprec_bytes_per_round": float(full),
+        "fullprec_bytes_per_round_inner": float(full_inner),
+        "fullprec_bytes_per_round_outer": float(full_outer),
         "bits_per_param_sync": 8.0 * compressed / max(total_params, 1),
+        "n_inner": float(n_inner),
+        "n_outer": float(opt.n // n_inner),
     }

@@ -24,6 +24,28 @@ import jax.numpy as jnp
 
 
 @dataclasses.dataclass(frozen=True)
+class Hierarchy:
+    """Two-level worker topology: slow inter-pod axes × fast intra-pod axes.
+
+    The hierarchical 1-bit AllReduce reduces *uncompressed* inside the fast
+    (``inner``) domain and runs Algorithm 2's EF-compressed exchange only
+    across the slow (``outer``) domain. ``inner`` is the static intra-pod
+    worker count (needed at optimizer-init time, before any axis context
+    exists, to size per-level EF state); the axis names match the mesh axes
+    in production and the nested-vmap axis names in simulation, so one
+    config value drives both regimes.
+    """
+
+    inner: int                                  # workers per pod
+    outer_axes: Tuple[str, ...] = ("pod",)      # inter-pod (slow) axes
+    inner_axes: Tuple[str, ...] = ("data",)     # intra-pod (fast) axes
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return tuple(self.outer_axes) + tuple(self.inner_axes)
+
+
+@dataclasses.dataclass(frozen=True)
 class Comm:
     """Collectives over the worker axes.
 
@@ -40,10 +62,8 @@ class Comm:
         return self.axes if len(self.axes) > 1 else self.axes[0]
 
     def size(self) -> int:
-        n = 1
-        for a in self.axes:
-            n *= jax.lax.axis_size(a)
-        return n
+        from repro.core.compat import axis_size
+        return axis_size(self.axes)
 
     def index(self):
         return jax.lax.axis_index(self.axes)
@@ -58,12 +78,41 @@ class Comm:
         return jax.lax.pmax(x, self.axis_name)
 
     def all_gather(self, x, axis: int = 0, tiled: bool = True):
-        return jax.lax.all_gather(x, self.axis_name, axis=axis, tiled=tiled)
+        if len(self.axes) <= 1:
+            return jax.lax.all_gather(x, self.axis_name, axis=axis,
+                                      tiled=tiled)
+        # Flattened axis tuples: decompose into per-axis gathers, innermost
+        # first — concatenation is then outer-major, exactly the flattened-
+        # axis order of the native tuple call. (vmap's all_gather batching
+        # rule rejects tuples — the simulation / GSPMD-vmap regime — and the
+        # decomposition is collective-equivalent on a mesh: same payload,
+        # one ring per topology level.)
+        if not tiled:
+            x = jnp.expand_dims(x, axis)
+        for a in reversed(self.axes):
+            x = jax.lax.all_gather(x, a, axis=axis, tiled=True)
+        return x
 
     def all_to_all(self, x, split_axis: int = 0, concat_axis: int = 0):
         return jax.lax.all_to_all(
             x, self.axis_name, split_axis=split_axis, concat_axis=concat_axis,
             tiled=True)
+
+    def split(self, outer_axes: Sequence[str], inner_axes: Sequence[str]):
+        """(outer_comm, inner_comm) over grouped sub-axes of this comm.
+
+        ``outer_axes + inner_axes`` must equal ``self.axes`` in order (the
+        flattened worker index is outer-major, so contiguous groups of the
+        flat index land in the inner domain). Works identically under
+        shard_map (mesh sub-axes) and nested vmap (simulation). An empty
+        group degenerates to a :class:`NullComm`.
+        """
+        outer, inner = tuple(outer_axes), tuple(inner_axes)
+        if outer + inner != self.axes:
+            raise ValueError(
+                f"cannot split axes {self.axes} into {outer} + {inner}")
+        return (Comm(outer) if outer else NullComm(),
+                Comm(inner) if inner else NullComm())
 
 
 class NullComm(Comm):
@@ -96,6 +145,17 @@ class NullComm(Comm):
 
     def all_to_all(self, x, split_axis: int = 0, concat_axis: int = 0):
         return x
+
+
+def norm_hierarchy(h: "Hierarchy | None", n_workers: int):
+    """Validate a Hierarchy against the worker count; None when it cannot
+    apply (single worker) so callers fall back to the flat path."""
+    if h is None or n_workers <= 1:
+        return None
+    if n_workers % h.inner:
+        raise ValueError(
+            f"hierarchy.inner={h.inner} must divide n_workers={n_workers}")
+    return h
 
 
 def sim_comm(axis_name: str = "workers") -> Comm:

@@ -1,0 +1,59 @@
+"""JAX version compatibility shims.
+
+The code targets the current public API (``jax.shard_map`` with
+``axis_names``/``check_vma``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.lax.axis_size``); this module maps each call onto the jax 0.4.x
+equivalents (``jax.experimental.shard_map.shard_map`` with ``auto``/
+``check_rep``, typeless meshes, ``jax.core.axis_frame``) so the same
+trainer/server code runs on both. Every shim resolves the API at call
+time, so an upgraded jax is picked up without code changes.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+
+def axis_size(name) -> int:
+    """Static size of one vmap/mesh axis (or a tuple: product)."""
+    names = name if isinstance(name, (tuple, list)) else (name,)
+    n = 1
+    for a in names:
+        if hasattr(jax.lax, "axis_size"):
+            n *= jax.lax.axis_size(a)
+        else:
+            f = jax.core.axis_frame(a)
+            n *= f if isinstance(f, int) else f.size
+    return n
+
+
+def shard_map(f, *, in_specs, out_specs, axis_names, mesh=None,
+              check: bool = False):
+    """``jax.shard_map`` with manual ``axis_names``, on any jax.
+
+    On jax < 0.5 the explicit ``mesh`` is required (the old API cannot
+    pick it up from an ambient abstract mesh) and the manual-axis set is
+    translated into its complement ``auto`` set.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = dict(in_specs=in_specs, out_specs=out_specs,
+                  axis_names=set(axis_names), check_vma=check)
+        if mesh is not None:
+            kw["mesh"] = mesh
+        return jax.shard_map(f, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    if mesh is None:
+        raise ValueError("jax<0.5 shard_map needs an explicit mesh")
+    auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _sm(f, mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check, auto=auto)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """GSPMD-auto mesh; ``axis_types`` only exists on newer jax."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))

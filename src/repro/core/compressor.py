@@ -42,7 +42,17 @@ ScaleMode = str  # "tensor" | "chunk" | "row"
 
 @dataclasses.dataclass(frozen=True)
 class LeafLayout:
-    """Static description of how one leaf maps to its comm view."""
+    """Static description of how one leaf maps to its comm view.
+
+    The view's leading axis enumerates the ``n`` chunks of the chunked
+    AllReduce. With a two-level hierarchy (``n_inner > 1``) those chunks are
+    grouped two ways at once: contiguous blocks of ``n_outer`` rows form the
+    **inner reduce-scatter chunk** (the slice a worker owns after the
+    full-precision intra-pod reduce-scatter, shape ``(n_outer, *chunk)``),
+    and each single row stays the **outer 1-bit chunk** (what one pod serves
+    during the compressed inter-pod exchange, shape ``chunk``). The flat
+    layout is the exact ``n_inner == 1`` degenerate case.
+    """
 
     shape: Tuple[int, ...]        # natural (unpadded) leaf shape
     n: int                        # worker count (number of chunks)
@@ -53,6 +63,7 @@ class LeafLayout:
     rest_factor: int = 1          # global/local element ratio when the leaf
                                   # is tensor-parallel sharded and the layout
                                   # was built on the model-LOCAL shard
+    n_inner: int = 1              # intra-pod worker count (1 = flat)
 
     @property
     def pad(self) -> int:
@@ -67,6 +78,22 @@ class LeafLayout:
     def pack_count(self) -> int:
         """Number of elements packed along the last view axis."""
         return self.view_shape[-1]
+
+    @property
+    def n_outer(self) -> int:
+        """Pod count (size of the compressed exchange)."""
+        return self.n // self.n_inner
+
+    @property
+    def slice_shape(self) -> Tuple[int, ...]:
+        """Shape of the inner reduce-scatter slice one worker owns."""
+        return (self.n_outer,) + self.chunk_shape
+
+    @property
+    def ef_worker_shape(self) -> Tuple[int, ...]:
+        """Worker-side EF state shape: the buffer actually compressed —
+        the full view when flat, the owned slice when hierarchical."""
+        return self.slice_shape
 
 
 def _is_sharded(spec, axis: int) -> bool:
@@ -93,7 +120,8 @@ def spec_model_factor(spec, axis_sizes) -> int:
 
 def make_layout(shape: Sequence[int], spec, n: int,
                 rest_factor: int = 1,
-                force_flatten: bool = False) -> LeafLayout:
+                force_flatten: bool = False,
+                n_inner: int = 1) -> LeafLayout:
     """Choose the comm view for a leaf with the given model-sharding spec.
 
     ``spec`` is a ``PartitionSpec`` (or None) describing tensor-parallel
@@ -103,8 +131,15 @@ def make_layout(shape: Sequence[int], spec, n: int,
     domain (nested shard_map over 'model'): leaf shapes are then
     tensor-parallel-LOCAL shards, so the uniform flat view is always valid —
     there is no GSPMD resharding to avoid.
+
+    ``n_inner`` enables the two-level (intra-pod × inter-pod) chunking: the
+    view geometry is unchanged, but the layout records how its ``n`` chunk
+    rows group into ``n_inner`` reduce-scatter slices of ``n // n_inner``
+    outer 1-bit chunks each (see :class:`LeafLayout`).
     """
     shape = tuple(int(s) for s in shape)
+    if n_inner < 1 or n % n_inner:
+        raise ValueError(f"n_inner={n_inner} must divide n={n}")
     replicated = spec is None or all(e is None for e in tuple(spec))
     # Flatten views pad to an n*128 quantum (not just the n*8 bit-packing
     # minimum) so the kernel frame's column width is always a multiple of
@@ -117,13 +152,14 @@ def make_layout(shape: Sequence[int], spec, n: int,
         padded = _round_up(1, n * 128)
         return LeafLayout(shape=(), n=n, flatten=True, split_axis=0,
                           padded=padded, view_shape=(n, padded // n),
-                          rest_factor=1)
+                          rest_factor=1, n_inner=n_inner)
     if replicated or force_flatten:
         total = int(np.prod(shape))
         padded = _round_up(total, n * 128)
         return LeafLayout(shape=shape, n=n, flatten=True, split_axis=0,
                           padded=padded, view_shape=(n, padded // n),
-                          rest_factor=rest_factor if not replicated else 1)
+                          rest_factor=rest_factor if not replicated else 1,
+                          n_inner=n_inner)
     # Sharded leaf under GSPMD-auto: split along the largest unsharded axis.
     candidates = [a for a in range(len(shape)) if not _is_sharded(spec, a)]
     if not candidates:
@@ -142,7 +178,7 @@ def make_layout(shape: Sequence[int], spec, n: int,
     view_shape = (n, padded // n, *rest)
     return LeafLayout(shape=shape, n=n, flatten=False, split_axis=split_axis,
                       padded=padded, view_shape=view_shape,
-                      rest_factor=rest_factor)
+                      rest_factor=rest_factor, n_inner=n_inner)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -379,6 +415,33 @@ def chunk_row_counts(layout: LeafLayout) -> np.ndarray:
     return view_row_counts(layout).reshape(layout.n, rows // layout.n)
 
 
+def slice_row_counts(layout: LeafLayout) -> np.ndarray:
+    """Per-slice 2-D frame row counts, int32 (n_inner, rows // n_inner).
+
+    Row ``j`` holds the true-element counts of the frame rows of the inner
+    reduce-scatter slice owned by intra-pod worker ``j`` (the slices are
+    contiguous equal blocks of frame rows, so this is ``view_row_counts``
+    regrouped — exactly like :func:`chunk_row_counts` one level up).
+    """
+    rows, _ = view_rows_cols(layout)
+    return view_row_counts(layout).reshape(layout.n_inner,
+                                           rows // layout.n_inner)
+
+
+def slice_true_counts(layout: LeafLayout) -> Tuple[np.ndarray, np.ndarray]:
+    """Static per-slice element counts for the hierarchical worker compress.
+
+    Returns ``(totals (n_inner,), per_chunk (n_inner, n_outer))`` — the
+    float64 true-element counts of each inner slice and of each outer chunk
+    within it. ``slice_true_counts(flat_layout)`` is ``true_counts`` with a
+    leading length-1 axis, which is what makes the ``n_inner == 1``
+    hierarchical path bitwise-identical to the flat one.
+    """
+    _, per_chunk = true_counts(layout)
+    grouped = per_chunk.reshape(layout.n_inner, layout.n_outer)
+    return grouped.sum(axis=1), grouped
+
+
 def true_counts(layout: LeafLayout) -> Tuple[float, np.ndarray]:
     """(#real elements per leaf, #real elements per chunk row array (n, A/n))."""
     rest = int(np.prod(layout.view_shape[2:])) if len(layout.view_shape) > 2 else 1
@@ -470,6 +533,66 @@ def ef_compress(z: jnp.ndarray, layout: LeafLayout, mode: ScaleMode,
     return packed, scales, err
 
 
+def _slice_scales(z: jnp.ndarray, layout: LeafLayout, mode: ScaleMode,
+                  mask: Optional[jnp.ndarray], inner_index,
+                  model_axes=()) -> jnp.ndarray:
+    """:func:`_scales` for one inner reduce-scatter slice (n_outer, *chunk).
+
+    Denominators come from the statically precomputed per-slice true counts
+    selected by the (traced) intra-pod worker index, so the padded tail —
+    which always lands in the last slice — stays pad-exact. With
+    ``n_inner == 1`` this selects the full-view counts and is bitwise
+    identical to ``_scales`` on the whole view.
+    """
+    az = jnp.abs(z)
+    if mask is not None:
+        az = az * mask
+    totals, per_chunk = slice_true_counts(layout)
+    rf = layout.rest_factor
+    if mode == "tensor":
+        # unlike the flat path a whole slice can be padding (tiny leaves):
+        # clamp so its all-zero sums produce a zero scale, not NaN
+        denom = jnp.take(jnp.asarray(np.maximum(totals * rf, 1.0), z.dtype),
+                         inner_index)
+        s = _psum_model(az.sum(), model_axes) / denom
+        return s.reshape((1,) * z.ndim)
+    if mode == "chunk":
+        axes = tuple(range(1, z.ndim))
+        cnt = jnp.take(jnp.asarray(np.maximum(per_chunk * rf, 1.0), z.dtype),
+                       inner_index, axis=0)
+        s = _psum_model(az.sum(axis=axes), model_axes) / cnt
+        return s.reshape((z.shape[0],) + (1,) * (z.ndim - 1))
+    if mode == "row":
+        if z.ndim <= 2:
+            return _slice_scales(z, layout, "chunk", mask, inner_index,
+                                 model_axes)
+        # padding is whole split positions, so the (static) full rest extent
+        # is the exact denominator — same as _scales on the flat view
+        axes = tuple(range(2, z.ndim))
+        rest = int(np.prod(z.shape[2:])) * rf
+        s = _psum_model(az.sum(axis=axes), model_axes) / rest
+        return s.reshape(z.shape[:2] + (1,) * (z.ndim - 2))
+    raise ValueError(f"unknown scale mode {mode!r}")
+
+
+def ef_compress_slice(z: jnp.ndarray, layout: LeafLayout, mode: ScaleMode,
+                      mask: Optional[jnp.ndarray], inner_index,
+                      model_axes=()):
+    """Worker-side EF compression of one inner reduce-scatter slice.
+
+    ``z`` is the pod-mean slice plus the incoming worker error, shape
+    ``layout.slice_shape``; ``mask`` the matching slice of the pad mask.
+    Same contract as :func:`ef_compress`, with per-slice denominators.
+    """
+    scales = _slice_scales(z, layout, mode, mask, inner_index, model_axes)
+    packed = pack_signs(z)
+    signs = jnp.where(z >= 0, 1.0, -1.0).astype(z.dtype)
+    err = z - signs * scales.astype(z.dtype)
+    if mask is not None:
+        err = err * mask.astype(err.dtype)
+    return packed, scales, err
+
+
 def decompress(packed: jnp.ndarray, scales: jnp.ndarray, count: int,
                dtype=jnp.float32) -> jnp.ndarray:
     """Inverse of the quantizer: scale · sign."""
@@ -477,17 +600,30 @@ def decompress(packed: jnp.ndarray, scales: jnp.ndarray, count: int,
     return signs * scales.astype(dtype)
 
 
-def compressed_bytes(layout: LeafLayout, mode: ScaleMode) -> int:
-    """Bytes per worker SENT on one sync (scatter a2a + gather broadcast).
+def compressed_bytes_levels(layout: LeafLayout, mode: ScaleMode,
+                            inner_itemsize: int = 2) -> dict:
+    """Per-level bytes one worker SENDS on one hierarchical sync.
 
-    Scatter: the all_to_all keeps this worker's own chunk local, so each
-    worker transmits (n-1)/n of its packed view = (n-1) packed chunks.
-    Gather: the worker broadcasts its one compressed server-chunk result to
-    the n-1 peers — the same (n-1) chunk payloads again. Scales ride along
-    with identical (n-1)-fold replication in both phases: one f32 per chunk
-    for tensor/chunk granularity, one per view row for row granularity.
+    ``inner``: the full-precision intra-pod phases — the reduce-scatter
+    all_to_all ships (n_inner − 1) of the n_inner view slices, and the final
+    intra-pod all_gather broadcasts the decompressed owned slice to the
+    n_inner − 1 pod-mates, both at the wire dtype (``inner_itemsize``).
+
+    ``outer``: Algorithm 2's compressed exchange across pods over the owned
+    slice — scatter keeps the own chunk local, so (n_outer − 1) packed
+    chunks go out, and the gather broadcasts this pod's compressed server
+    chunk to the n_outer − 1 peers: the same (n_outer − 1) payloads again.
+    Scales ride along with identical replication in both phases: one f32
+    per chunk for tensor/chunk granularity, one per view row for row
+    granularity.
+
+    A flat layout (``n_inner == 1``) has ``inner == 0`` and ``outer`` equal
+    to the historical flat-path accounting.
     """
-    chunk_packed = int(np.prod(layout.chunk_shape)) // 8  # bytes per chunk
+    chunk_elems = int(np.prod(layout.chunk_shape))
+    chunk_packed = chunk_elems // 8                      # bytes per chunk
+    ni, no = layout.n_inner, layout.n_outer
+    inner = 2 * (ni - 1) * no * chunk_elems * inner_itemsize
     if mode in ("tensor", "chunk"):
         scatter_scales = gather_scales = 1
     elif len(layout.view_shape) == 2:
@@ -497,5 +633,29 @@ def compressed_bytes(layout: LeafLayout, mode: ScaleMode) -> int:
         scatter_scales, gather_scales = 1, layout.view_shape[1]
     else:
         scatter_scales = gather_scales = layout.view_shape[1]
-    return (layout.n - 1) * (2 * chunk_packed
-                             + 4 * (scatter_scales + gather_scales))
+    outer = (no - 1) * (2 * chunk_packed
+                        + 4 * (scatter_scales + gather_scales))
+    return {"inner": inner, "outer": outer}
+
+
+def compressed_bytes(layout: LeafLayout, mode: ScaleMode,
+                     inner_itemsize: int = 2) -> int:
+    """Total bytes per worker SENT on one sync, across both levels (the
+    flat path is the ``inner == 0`` special case)."""
+    lv = compressed_bytes_levels(layout, mode, inner_itemsize)
+    return lv["inner"] + lv["outer"]
+
+
+def fullprec_bytes_levels(layout: LeafLayout, itemsize: int) -> dict:
+    """Per-level bytes one worker sends on a full-precision round.
+
+    Flat: the chunked scatter-mean/all-gather moves 2·(n−1)/n of the view.
+    Hierarchical: the intra-pod reduce-scatter + all_gather move
+    2·(n_inner−1)/n_inner of the view, the inter-pod exchange
+    2·(n_outer−1)/n_outer of the owned slice (1/n_inner of the view).
+    """
+    ni, no = layout.n_inner, layout.n_outer
+    elems = int(np.prod(layout.view_shape))
+    inner = 2 * (ni - 1) * (elems // ni) * itemsize
+    outer = 2 * (no - 1) * (elems // ni // no) * itemsize
+    return {"inner": inner, "outer": outer}

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.core import compressor as C
 from repro.core import onebit_allreduce as AR
-from repro.core.comm import Comm
+from repro.core.comm import Comm, norm_hierarchy
 
 
 class OneBitAdamState(NamedTuple):
@@ -29,6 +29,8 @@ class OneBitAdam:
         self.cfg = cfg
         self.n = n_workers
         self.model_axes = tuple((model_axis_sizes or {}).keys())
+        self.hierarchy = norm_hierarchy(getattr(cfg, "hierarchy", None),
+                                        n_workers)
         leaves, self.treedef = jax.tree.flatten(param_shapes)
         self.specs = self.treedef.flatten_up_to(specs)
         self.dp_mask = self.treedef.flatten_up_to(dp_mask)
@@ -36,14 +38,18 @@ class OneBitAdam:
             C.make_layout(l.shape, s, n_workers,
                           rest_factor=C.spec_model_factor(
                               s, model_axis_sizes or {}),
-                          force_flatten=bool(model_axis_sizes))
+                          force_flatten=bool(model_axis_sizes),
+                          n_inner=self.hierarchy.inner if self.hierarchy
+                          else 1)
             for l, s in zip(leaves, self.specs)]
         self.vspecs = [C.view_spec_entries(lo, sp)
                        for lo, sp in zip(self.layouts, self.specs)]
         self.ar_cfg = AR.OneBitConfig(scale_mode=cfg.scale_mode,
                                       quantize=cfg.quantize,
                                       model_axes=self.model_axes,
-                                      use_pallas=cfg.use_pallas)
+                                      use_pallas=cfg.use_pallas,
+                                      hierarchy=self.hierarchy,
+                                      comm_dtype=cfg.comm_dtype)
 
     def flat(self, tree):
         return self.treedef.flatten_up_to(tree)
@@ -61,7 +67,7 @@ class OneBitAdam:
                zip(ps, self.layouts, self.dp_mask)],
             v=[zst(p, lo, dp) for p, lo, dp in
                zip(ps, self.layouts, self.dp_mask)],
-            err_w=[jnp.zeros(lo.view_shape, sd) if dp else None
+            err_w=[jnp.zeros(lo.ef_worker_shape, sd) if dp else None
                    for lo, dp in zip(self.layouts, self.dp_mask)],
             err_s=[jnp.zeros(lo.chunk_shape, sd) if dp else None
                    for lo, dp in zip(self.layouts, self.dp_mask)],
@@ -85,7 +91,9 @@ class OneBitAdam:
         def full_branch(op):
             gs_dp, ew, es = op
             out = [AR.fullprec_allreduce_view(comm, g, cfg.comm_dtype,
-                                              vspec=self.vspecs[i])
+                                              vspec=self.vspecs[i],
+                                              hierarchy=self.hierarchy,
+                                              layout=self.layouts[i])
                    for g, i in zip(gs_dp, dp_idx)]
             return out, ew, es
 

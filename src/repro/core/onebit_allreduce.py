@@ -28,20 +28,27 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compressor as C
-from repro.core.comm import Comm
+from repro.core.comm import Comm, Hierarchy
 
 
 class EFState(NamedTuple):
-    """Per-leaf error-feedback state (worker error + this worker's server
-    error chunk)."""
+    """Per-leaf error-feedback state for the compressed level.
 
-    err_worker: jnp.ndarray   # view shape (n, A/n, *rest)
+    Both errors live at the level that quantizes: with a flat topology the
+    worker error covers the whole comm view; with a hierarchy it covers the
+    inner reduce-scatter slice this worker owns (the only buffer it ever
+    compresses), and the server error the single outer chunk this pod
+    serves. The uncompressed intra-pod exchanges carry no error feedback —
+    they are exact up to the wire dtype.
+    """
+
+    err_worker: jnp.ndarray   # layout.ef_worker_shape (n_outer, A/n, *rest)
     err_server: jnp.ndarray   # chunk shape (A/n, *rest)
 
 
 def init_ef_state(layout: C.LeafLayout, dtype=jnp.float32) -> EFState:
     return EFState(
-        err_worker=jnp.zeros(layout.view_shape, dtype),
+        err_worker=jnp.zeros(layout.ef_worker_shape, dtype),
         err_server=jnp.zeros(layout.chunk_shape, dtype),
     )
 
@@ -57,6 +64,11 @@ class OneBitConfig:
                                          # psum over these)
     use_pallas: bool = False             # route EF-compress/decompress through
                                          # the fused kernels (repro.kernels)
+    hierarchy: Optional[Hierarchy] = None  # two-level topology: reduce
+                                         # uncompressed over hierarchy.inner_axes,
+                                         # 1-bit-compress only over outer_axes
+    comm_dtype: jnp.dtype = jnp.bfloat16  # wire dtype of the uncompressed
+                                         # intra-pod phases (hierarchy only)
 
 
 def onebit_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
@@ -69,7 +81,14 @@ def onebit_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
     through every shape-changing op so the compressed pipeline stays
     model-sharded (see compressor.constrain).
     The returned value estimates ``mean_i z_view^{(i)}`` in view shape.
+
+    With ``cfg.hierarchy`` set the same estimate is produced by the
+    topology-aware two-level schedule (:func:`_hier_allreduce_view`); the
+    flat code below is its exact ``n_inner == 1`` degenerate case.
     """
+    if cfg.hierarchy is not None:
+        assert layout.n_inner == cfg.hierarchy.inner, (layout, cfg.hierarchy)
+        return _hier_allreduce_view(comm, z_view, ef, layout, cfg, vspec)
     cst = lambda x: C.constrain(x, vspec)
     if not cfg.quantize:
         # Identity compressor: the exact same collective schedule exchanging
@@ -151,6 +170,132 @@ def onebit_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
                         err_server=err_s.astype(ef.err_server.dtype))
 
 
+def _hier_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
+                         layout: C.LeafLayout, cfg: OneBitConfig,
+                         vspec=None):
+    """Topology-aware two-level AllReduce (intra-pod × inter-pod).
+
+    Schedule, per worker (inner index j, outer index k):
+
+      1. **intra-pod reduce-scatter** (uncompressed, wire dtype): all_to_all
+         over the fast inner axes of the view reshaped (n_inner, n_outer,
+         A/n, *rest); the mean over senders leaves this worker owning the
+         pod-mean of slice j.
+      2. **inter-pod Algorithm 2** on the owned slice: EF-compress (worker
+         error), all_to_all the packed bits across pods, server-average +
+         EF-compress the chunk this pod serves (server error), all_gather
+         the compressed results. Identical to the flat path with n→n_outer.
+      3. **intra-pod all_gather** of the decompressed slice rebuilds the
+         full view.
+
+    Only step 2 crosses the slow inter-pod links — at 1 bit/element — while
+    the bulky uncompressed traffic of steps 1/3 stays inside the pod. With
+    ``n_inner == 1`` steps 1/3 are skipped entirely and step 2 *is* the flat
+    path (bitwise, including scale denominators), which the degenerate-
+    equivalence tests pin down.
+    """
+    h = cfg.hierarchy
+    ni, no = layout.n_inner, layout.n_outer
+    vs = layout.view_shape
+    cst = lambda x: C.constrain(x, vspec)
+    outer, inner = comm.split(h.outer_axes, h.inner_axes)
+
+    # --- 1: intra-pod reduce-scatter (slice j <- contiguous view rows) -----
+    zr = z_view.reshape((ni, no) + vs[1:])
+    if ni > 1:
+        recv = inner.all_to_all(zr.astype(cfg.comm_dtype),
+                                split_axis=0, concat_axis=0)
+        own = recv.astype(jnp.float32).mean(axis=0)        # (no, A/n, *rest)
+        j = inner.index()
+    else:
+        own = zr[0]
+        j = jnp.zeros((), jnp.int32)
+    own = cst(own.astype(cfg.compute_dtype))
+
+    if not cfg.quantize:
+        # Identity compressor: the exact two-level collective schedule
+        # exchanging uncompressed values (degenerate-equivalence/ablation).
+        recv = cst(outer.all_to_all(own, split_axis=0, concat_axis=0))
+        avg = recv.mean(axis=0)
+        out_slice = cst(outer.all_gather(avg[None], axis=0, tiled=True))
+        new_ef = ef
+    else:
+        mask_full = C.pad_mask(layout, dtype=own.dtype)
+        if mask_full is not None:
+            m_slice = jnp.take(
+                mask_full.reshape((ni, no) + mask_full.shape[1:]), j, axis=0)
+        else:
+            m_slice = None
+        use_k = cfg.use_pallas
+        if use_k:
+            from repro.kernels import dispatch as K
+            use_k = K.kernel_safe(vspec)
+        k_server = use_k and not (cfg.scale_mode == "row" and len(vs) == 2)
+
+        # --- 2a: worker-side EF-compress of the owned slice ----------------
+        if use_k:
+            packed, scales, err_w = K.ef_compress_view(
+                own, ef.err_worker.astype(own.dtype), layout,
+                cfg.scale_mode, cfg.model_axes, inner_index=j)
+        else:
+            zw = cst(own + ef.err_worker.astype(own.dtype))
+            packed, scales, err_w = C.ef_compress_slice(
+                zw, layout, cfg.scale_mode, m_slice, j, cfg.model_axes)
+        packed, err_w = cst(packed), cst(err_w)
+
+        # --- 2b: inter-pod scatter: pod k collects sub-chunk k -------------
+        recv = cst(outer.all_to_all(packed, split_axis=0, concat_axis=0))
+        bscales = jnp.broadcast_to(
+            scales, (no,) + scales.shape[1:]).astype(jnp.float32)
+        rscales = outer.all_to_all(bscales, split_axis=0, concat_axis=0)
+
+        # --- 2c: server side (this pod serves full-view chunk j*no+k) ------
+        if use_k:
+            vals = cst(K.decompress_view(recv, rscales, layout,
+                                         cfg.compute_dtype))
+        else:
+            vals = cst(C.unpack_signs(recv, layout.pack_count,
+                                      cfg.compute_dtype))
+            vals = vals * rscales.astype(cfg.compute_dtype)
+        avg = vals.mean(axis=0)                            # (A/n, *rest)
+        k_idx = outer.index()
+        widx = j * no + k_idx
+        if k_server:
+            packed_s, scales_s, err_s = K.server_compress_view(
+                cst(avg[None]), ef.err_server.astype(cfg.compute_dtype)[None],
+                layout, cfg.scale_mode, widx, cfg.model_axes)
+        else:
+            y = avg + ef.err_server.astype(cfg.compute_dtype)
+            y_exp = cst(y[None])
+            s_mask = None if mask_full is None else mask_full[widx][None]
+            packed_s, scales_s, err_s = _server_compress(
+                y_exp, layout, cfg.scale_mode, s_mask, cfg.model_axes)
+        packed_s = cst(packed_s)
+        err_s = cst(err_s)[0]
+
+        # --- 2d: inter-pod gather of the compressed chunk results ----------
+        gpacked = cst(outer.all_gather(packed_s, axis=0, tiled=True))
+        gscales = outer.all_gather(
+            scales_s.astype(jnp.float32), axis=0, tiled=True)
+        if k_server:
+            out_slice = cst(K.decompress_view(gpacked, gscales, layout,
+                                              cfg.compute_dtype))
+        else:
+            out_slice = cst(C.unpack_signs(gpacked, layout.pack_count,
+                                           cfg.compute_dtype))
+            out_slice = out_slice * gscales.astype(cfg.compute_dtype)
+        new_ef = EFState(err_worker=err_w.astype(ef.err_worker.dtype),
+                         err_server=err_s.astype(ef.err_server.dtype))
+
+    # --- 3: intra-pod all_gather rebuilds the full view --------------------
+    if ni > 1:
+        out = inner.all_gather(out_slice.astype(cfg.comm_dtype)[None],
+                               axis=0, tiled=True).reshape(vs)
+    else:
+        out = out_slice.reshape(vs)
+    return cst(out).astype(cfg.compute_dtype), new_ef
+
+
 def _server_compress(y, layout, mode, mask, model_axes=()):
     """EF-compress one server chunk (leading dim 1)."""
     from repro.core.compressor import _psum_model
@@ -182,7 +327,9 @@ def _server_compress(y, layout, mode, mask, model_axes=()):
 
 def fullprec_allreduce_view(comm: Comm, z_view: jnp.ndarray,
                             comm_dtype=jnp.bfloat16,
-                            vspec=None) -> jnp.ndarray:
+                            vspec=None, hierarchy: Optional[Hierarchy] = None,
+                            layout: Optional[C.LeafLayout] = None
+                            ) -> jnp.ndarray:
     """Full-precision mean over workers (used on T_v steps) at the wire
     dtype, as the paper does with fp16 training.
 
@@ -191,9 +338,25 @@ def fullprec_allreduce_view(comm: Comm, z_view: jnp.ndarray,
     traffic, ~2·d bytes). Besides matching the 1-bit path's transport, this
     sidesteps an XLA CPU-backend crash on bf16 ``all-reduce`` inside
     partial-manual shard_map (bf16 a2a/all-gather are fine; TPU unaffected).
+
+    With ``hierarchy`` (and its ``layout``) the same mean runs the two-level
+    schedule: intra-pod reduce-scatter, inter-pod exchange of the owned
+    slice (1/n_inner of the traffic crosses the slow links), intra-pod
+    all_gather — mirroring the 1-bit path's transport level for level.
     """
     acc = z_view.dtype
     cst = lambda x: C.constrain(x, vspec)
+    if hierarchy is not None and layout is not None and layout.n_inner > 1:
+        ni, no = layout.n_inner, layout.n_outer
+        outer, inner = comm.split(hierarchy.outer_axes, hierarchy.inner_axes)
+        zr = z_view.astype(comm_dtype).reshape((ni, no) + layout.chunk_shape)
+        recv = inner.all_to_all(zr, split_axis=0, concat_axis=0)
+        own = recv.astype(jnp.float32).mean(axis=0).astype(comm_dtype)
+        recv2 = cst(outer.all_to_all(own, split_axis=0, concat_axis=0))
+        avg = recv2.astype(jnp.float32).mean(axis=0).astype(comm_dtype)
+        g1 = cst(outer.all_gather(avg[None], axis=0, tiled=True))
+        out = inner.all_gather(g1[None], axis=0, tiled=True)
+        return out.reshape(z_view.shape).astype(acc)
     zc = cst(z_view.astype(comm_dtype))
     recv = cst(comm.all_to_all(zc, split_axis=0, concat_axis=0))
     avg = recv.astype(jnp.float32).mean(axis=0).astype(comm_dtype)

@@ -47,6 +47,11 @@ def _counts(layout: C.LeafLayout) -> jnp.ndarray:
     return jnp.asarray(_row_counts_np(layout))
 
 
+@functools.lru_cache(maxsize=None)
+def _slice_counts_np(layout: C.LeafLayout) -> np.ndarray:
+    return C.slice_row_counts(layout)
+
+
 def _scales_to_rows(scales, lead_shape, rows):
     """Broadcast granular scales (tensor/chunk/row shapes) over the buffer's
     leading view dims, then repeat onto frame sub-rows when the 2-D frame
@@ -87,49 +92,77 @@ def _row_group_scales(rowsum, shape, rest_factor, model_axes):
 
 
 def _combine_scales(rowsum, layout: C.LeafLayout, mode: C.ScaleMode,
-                    model_axes):
-    """Masked per-row L1 sums (R,) -> scales shaped like compressor._scales."""
+                    model_axes, inner_index=None):
+    """Masked per-row L1 sums (R,) -> scales shaped like compressor._scales.
+
+    With ``inner_index`` the buffer is one inner reduce-scatter slice
+    (n_outer leading chunks) and the denominators are the statically
+    precomputed per-slice counts selected by the traced index — mirroring
+    ``compressor._slice_scales``.
+    """
     vs = layout.view_shape
-    ndim, n = len(vs), vs[0]
-    total, per_chunk = C.true_counts(layout)
+    ndim = len(vs)
     rf = layout.rest_factor
+    if inner_index is None:
+        lead, shape = vs[0], vs
+        total, per_chunk = C.true_counts(layout)
+        denom = total * rf
+        cnt = jnp.asarray(np.maximum(per_chunk * rf, 1.0), jnp.float32)
+    else:
+        lead, shape = layout.n_outer, layout.slice_shape
+        totals, per_chunk = C.slice_true_counts(layout)
+        denom = jnp.take(jnp.asarray(np.maximum(totals * rf, 1.0),
+                                     jnp.float32), inner_index)
+        cnt = jnp.take(jnp.asarray(np.maximum(per_chunk * rf, 1.0),
+                                   jnp.float32), inner_index, axis=0)
     if mode == "tensor":
-        s = C._psum_model(rowsum.sum(), model_axes) / (total * rf)
+        s = C._psum_model(rowsum.sum(), model_axes) / denom
         return s.reshape((1,) * ndim)
     if mode == "chunk":
-        cs = rowsum.reshape(n, -1).sum(axis=1)
-        cnt = jnp.asarray(np.maximum(per_chunk * rf, 1.0), jnp.float32)
+        cs = rowsum.reshape(lead, -1).sum(axis=1)
         s = C._psum_model(cs, model_axes) / cnt
-        return s.reshape((n,) + (1,) * (ndim - 1))
-    return _row_group_scales(rowsum, vs, rf, model_axes)
+        return s.reshape((lead,) + (1,) * (ndim - 1))
+    return _row_group_scales(rowsum, shape, rf, model_axes)
 
 
 def ef_compress_view(z, err, layout: C.LeafLayout, mode: C.ScaleMode,
-                     model_axes=()):
+                     model_axes=(), inner_index=None):
     """Worker-side fused EF-compress of a comm view.
 
     Fuses the caller's ``z + err`` accumulation; returns
     (packed view, scales shaped like compressor._scales, err view).
+
+    With ``inner_index`` the buffer is the inner reduce-scatter slice of the
+    hierarchical path (``layout.slice_shape``): the frame shrinks to the
+    slice's contiguous block of rows and the pad-exact row counts/denominators
+    are selected by the traced intra-pod index.
     """
     rows, cols = C.view_rows_cols(layout)
     vs = layout.view_shape
     ndim = len(vs)
     eff = "chunk" if (mode == "row" and ndim == 2) else mode
+    if inner_index is None:
+        bshape, cnts = vs, _counts(layout)
+    else:
+        bshape = layout.slice_shape
+        rows = rows // layout.n_inner
+        cnts = jnp.take(jnp.asarray(_slice_counts_np(layout)), inner_index,
+                        axis=0)
     z2, e2 = z.reshape(rows, cols), err.reshape(rows, cols)
     br = _largest_divisor(rows, 8)
-    cnts = _counts(layout)
     if eff == "row" and ndim == 3 and not model_axes and \
             layout.rest_factor == 1:
         # per-2-D-row scales: the single-pass fully fused kernel applies
         packed2, srow, err2 = ops.ef_compress(z2, e2, cnts, block_rows=br)
-        scales = srow.reshape(vs[:2] + (1,) * (ndim - 2))
+        scales = srow.reshape(bshape[:2] + (1,) * (ndim - 2))
     else:
         rowsum = ops.abs_rowsum(z2, e2, cnts, block_rows=br)
-        scales = _combine_scales(rowsum, layout, eff, model_axes)
-        srow = _scales_to_rows(scales, vs[:-1], rows)
+        scales = _combine_scales(rowsum, layout, eff, model_axes,
+                                 inner_index)
+        srow = _scales_to_rows(scales, bshape[:-1], rows)
         packed2, err2 = ops.ef_quantize(z2, e2, srow, cnts, block_rows=br)
-    return (C.view_from_2d(packed2, layout), scales,
-            err2.reshape(vs).astype(err.dtype))
+    return (packed2.reshape(bshape[:-1] + (-1,)), scales,
+            err2.reshape(bshape).astype(err.dtype))
 
 
 def server_compress_view(avg, err, layout: C.LeafLayout, mode: C.ScaleMode,
@@ -170,8 +203,12 @@ def decompress_view(packed, scales, layout: C.LeafLayout,
 
     ``scales`` must broadcast against the packed array's leading dims (the
     shapes _scales / server compression produce for tensor/chunk/row modes).
+    Slice-shaped buffers of the hierarchical path (leading dim n_outer
+    instead of n) shrink the frame proportionally.
     """
     rows, cols = C.view_rows_cols(layout)
+    rows = (rows * int(np.prod(packed.shape[:-1]))
+            // int(np.prod(layout.view_shape[:-1])))
     p2 = packed.reshape(rows, cols // 8)
     srow = _scales_to_rows(scales, packed.shape[:-1], rows)
     out2 = ops.decompress(p2, srow, block_rows=_largest_divisor(rows, 8),

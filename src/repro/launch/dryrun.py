@@ -24,6 +24,7 @@ import json
 import re
 import sys
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -155,7 +156,112 @@ def collective_bytes(hlo_text: str):
     return out, counts
 
 
-def default_opt_cfg(optimizer: str = "zero_one_adam", scale_mode="tensor"):
+def _parse_replica_groups(line: str):
+    """Replica groups of one collective line: list of id-lists, or None.
+
+    Handles both the explicit ``{{0,1},{2,3}}`` form and the iota form
+    ``[g,s]<=[t0,..]T(perm)`` (decoded numerically).
+    """
+    m = re.search(r"replica_groups=\{\{([\d,{}\s]*)\}\}", line)
+    if m:
+        return [[int(x) for x in grp.split(",") if x.strip()]
+                for grp in m.group(1).split("},{")]
+    m = re.search(r"replica_groups=\[([\d,]+)\]<=\[([\d,]+)\]"
+                  r"(?:T\(([\d,]+)\))?", line)
+    if m:
+        import numpy as np
+        try:
+            dims = [int(x) for x in m.group(1).split(",")]
+            tdims = [int(x) for x in m.group(2).split(",")]
+            ids = np.arange(int(np.prod(tdims))).reshape(tdims)
+            if m.group(3):
+                ids = ids.transpose([int(x) for x in m.group(3).split(",")])
+            return ids.reshape(dims).tolist()
+        except ValueError:   # unexpected form -> caller's unattributed bucket
+            return None
+    # collective-permute carries source_target_pairs instead; each (src,
+    # tgt) pair is its own two-device "group" for pod-crossing purposes
+    m = re.search(r"source_target_pairs=\{\{([\d,{}\s]*)\}\}", line)
+    if m:
+        return [[int(x) for x in pair.split(",") if x.strip()]
+                for pair in m.group(1).split("},{")]
+    return None
+
+
+def collective_group_bytes(hlo_text: str, pod_span: Optional[int] = None):
+    """Collective traffic bucketed by replica-group size, plus the
+    intra/inter-pod split when ``pod_span`` (devices per pod) is given.
+
+    This is what makes the hierarchical AllReduce's promise checkable in
+    the lowered HLO: the inner (intra-pod) collectives appear as groups
+    whose device ids stay inside one ``pod_span`` block, the outer 1-bit
+    exchange as (small) groups that cross blocks.
+    """
+    blocks = _computation_blocks(hlo_text)
+    loop_mult = _loop_multipliers(hlo_text, blocks)
+    parents = _block_parents(hlo_text, blocks)
+
+    def total_mult(comp, depth=0):
+        if depth > 8:
+            return 1
+        m = loop_mult.get(comp, 1)
+        ps = parents.get(comp, [])
+        if not ps:
+            return m
+        return m * max(total_mult(p, depth + 1) for p in ps)
+
+    by_group = {}
+    intra = inter = unattributed = 0.0
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    op_re = re.compile(
+        r"=\s+(\(?[\w\[\],\s{}/#]*?\)?)\s+"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)(-start|-done)?\(")
+    for comp, lines in blocks.items():
+        scale = total_mult(comp)
+        for line in lines:
+            m = op_re.search(line)
+            if not m or m.group(3) == "-done":
+                continue
+            op = m.group(2)
+            nbytes = 0.0
+            for dt, dims in shape_re.findall(m.group(1)):
+                if dt not in BYTES:
+                    continue
+                nelt = 1
+                for d in dims.split(","):
+                    if d:
+                        nelt *= int(d)
+                nbytes += nelt * BYTES[dt]
+            nbytes *= (2.0 if op == "all-reduce" else 1.0) * scale
+            groups = _parse_replica_groups(line)
+            gsize = len(groups[0]) if groups else 0
+            key = f"{op}|g{gsize}"
+            by_group[key] = by_group.get(key, 0.0) + nbytes
+            if pod_span:
+                if groups:
+                    crosses = any(len({i // pod_span for i in g}) > 1
+                                  for g in groups)
+                    if crosses:
+                        inter += nbytes
+                    else:
+                        intra += nbytes
+                else:
+                    # global groups ("{}") or an unparsed form: keep it out
+                    # of both pod buckets but visible, so the split never
+                    # silently under-counts the collective term
+                    unattributed += nbytes
+    out = {"by_group_size": by_group}
+    if pod_span:
+        out["intrapod_bytes"] = intra
+        out["interpod_bytes"] = inter
+        out["unattributed_bytes"] = unattributed
+    return out
+
+
+def default_opt_cfg(optimizer: str = "zero_one_adam", scale_mode="tensor",
+                    hierarchy_inner: int = 0):
+    from repro.core import Hierarchy
     return OptimizerConfig(
         name=optimizer,
         lr=S.LinearWarmupExpDecay(peak_lr=4e-4, warmup_steps=12500),
@@ -166,13 +272,16 @@ def default_opt_cfg(optimizer: str = "zero_one_adam", scale_mode="tensor"):
         scale_mode=scale_mode,
         state_dtype=jnp.bfloat16,   # production state dtype (fp16 in paper)
         comm_dtype=jnp.bfloat16,
+        hierarchy=(Hierarchy(inner=hierarchy_inner) if hierarchy_inner
+                   else None),
     )
 
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool,
             optimizer: str = "zero_one_adam", scale_mode: str = "tensor",
             micro_override=None, window_cache: bool = False,
-            mesh_shape=None, verbose: bool = True):
+            mesh_shape=None, verbose: bool = True,
+            hierarchy: bool = False):
     spec = get(arch)
     shape = SH.SHAPES[shape_name]
     if shape_name not in spec.shapes:
@@ -180,8 +289,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
                 "note": spec.skip_notes}
     if mesh_shape is not None:  # perf-iteration override (same chip count)
         dp, tp = mesh_shape
-        mesh = jax.make_mesh((dp, tp), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.core.compat import make_mesh
+        mesh = make_mesh((dp, tp), ("data", "model"))
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     W = worker_axes(mesh)
@@ -196,7 +305,13 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
             n_workers *= mesh.shape[a]
         b_local = shape.global_batch // n_workers
         micro = micro_override or max(1, b_local // 2)
-        tr = Trainer(cfg, default_opt_cfg(optimizer, scale_mode), mesh=mesh,
+        inner = 0
+        if hierarchy:
+            if "pod" not in mesh.axis_names:
+                raise ValueError("--hierarchy needs the multi-pod mesh")
+            inner = mesh.shape["data"]
+        tr = Trainer(cfg, default_opt_cfg(optimizer, scale_mode,
+                                          hierarchy_inner=inner), mesh=mesh,
                      trainer_cfg=TrainerConfig(micro_batches=micro,
                                                worker_axes=W))
         fn, _ = tr.mesh_step_fn()
@@ -227,7 +342,11 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
-    coll, coll_counts = collective_bytes(compiled.as_text())
+    hlo_text = compiled.as_text()
+    coll, coll_counts = collective_bytes(hlo_text)
+    pod_span = (mesh.devices.size // mesh.shape["pod"]
+                if "pod" in mesh.axis_names else None)
+    grp = collective_group_bytes(hlo_text, pod_span)
 
     rec = {
         "arch": arch, "shape": shape_name, "status": "ok",
@@ -235,12 +354,17 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
                  else ("2x16x16" if multi_pod else "16x16")),
         "optimizer": optimizer if shape.kind == "train" else None,
         "scale_mode": scale_mode if shape.kind == "train" else None,
+        "hierarchy": bool(hierarchy) if shape.kind == "train" else None,
         "micro": micro_override, "window_cache": window_cache,
         "kind": shape.kind,
         "flops_per_device": float(cost.get("flops", 0.0)),
         "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
         "collective_bytes": coll,
         "collective_counts": coll_counts,
+        "collective_by_group": grp["by_group_size"],
+        "intrapod_bytes": grp.get("intrapod_bytes"),
+        "interpod_bytes": grp.get("interpod_bytes"),
+        "unattributed_collective_bytes": grp.get("unattributed_bytes"),
         "argument_bytes": int(mem.argument_size_in_bytes),
         "output_bytes": int(mem.output_size_in_bytes),
         "temp_bytes": int(mem.temp_size_in_bytes),
@@ -259,6 +383,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
         tot_coll = sum(coll.values())
         print(f"   collectives: {tot_coll/2**20:.1f}MiB/device "
               f"{ {k: round(v/2**20, 2) for k, v in coll.items() if v} }")
+        if pod_span:
+            print(f"   pod split: intra={grp['intrapod_bytes']/2**20:.1f}MiB "
+                  f"inter={grp['interpod_bytes']/2**20:.1f}MiB/device")
         print(f"   lower {t_lower:.1f}s compile {t_compile:.1f}s")
     del lowered, compiled
     gc.collect()
@@ -277,6 +404,10 @@ def main():
     ap.add_argument("--scale-mode", default="tensor",
                     choices=["tensor", "chunk", "row"])
     ap.add_argument("--micro", type=int, default=None)
+    ap.add_argument("--hierarchy", action="store_true",
+                    help="two-level AllReduce: uncompressed intra-pod "
+                         "('data'), 1-bit inter-pod ('pod'); needs "
+                         "--multi-pod")
     ap.add_argument("--window-cache", action="store_true")
     ap.add_argument("--mesh-shape", default=None,
                     help="DPxTP override, e.g. 32x8 (perf iterations)")
@@ -303,7 +434,7 @@ def main():
                           scale_mode=args.scale_mode,
                           micro_override=args.micro,
                           window_cache=args.window_cache,
-                          mesh_shape=ms)
+                          mesh_shape=ms, hierarchy=args.hierarchy)
         except Exception as e:  # noqa: BLE001 — report, keep going
             rec = {"arch": a, "shape": s,
                    "mesh": "2x16x16" if mp else "16x16",

@@ -6,15 +6,14 @@ module never touches jax device state — the dry-run sets
 """
 from __future__ import annotations
 
-import jax
+from repro.core.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; (2,16,16) = 512 chips across 2 pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def worker_axes(mesh) -> tuple:
@@ -25,7 +24,5 @@ def worker_axes(mesh) -> tuple:
 def make_debug_mesh(data: int = 2, model: int = 2, pod: int = 0):
     """Small mesh for CI subprocess tests (needs device_count >= product)."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))

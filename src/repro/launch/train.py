@@ -23,7 +23,8 @@ import numpy as np
 
 from repro.checkpointing import io as ckpt_io
 from repro.configs import get
-from repro.core import OptimizerConfig, comm_accounting, schedules as S
+from repro.core import (Hierarchy, OptimizerConfig, comm_accounting,
+                        schedules as S)
 from repro.data import DataConfig, SyntheticLM
 from repro.train import Trainer, TrainerConfig
 
@@ -41,7 +42,9 @@ def build_opt_cfg(args) -> OptimizerConfig:
             max_interval=args.max_interval),
         onebit_warmup=args.onebit_warmup,
         scale_mode=args.scale_mode,
-        use_pallas=args.use_pallas)
+        use_pallas=args.use_pallas,
+        hierarchy=(Hierarchy(inner=args.hierarchy)
+                   if args.hierarchy else None))
 
 
 def main():
@@ -69,6 +72,11 @@ def main():
     ap.add_argument("--use-pallas", action="store_true",
                     help="route the optimizer hot path through the fused "
                          "Pallas kernels (interpreted off-TPU)")
+    ap.add_argument("--hierarchy", type=int, default=0, metavar="INNER",
+                    help="workers per pod for the two-level AllReduce: "
+                         "reduce uncompressed inside pods ('data' axis), "
+                         "1-bit-compress only across pods ('pod' axis). "
+                         "0 = flat single-level exchange")
     ap.add_argument("--micro-batches", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -95,6 +103,11 @@ def main():
     print(f"arch={cfg.name} params(dp)={acct['dp_params']/1e6:.2f}M "
           f"bits/param/sync={acct['bits_per_param_sync']:.3f} "
           f"workers={n} optimizer={args.optimizer}")
+    if acct["n_inner"] > 1:
+        print(f"hierarchy: {int(acct['n_outer'])} pods x "
+              f"{int(acct['n_inner'])} workers/pod; sync bytes/worker "
+              f"intra={acct['compressed_bytes_per_sync_inner']/2**20:.2f}MiB "
+              f"inter={acct['compressed_bytes_per_sync_outer']/2**20:.2f}MiB")
 
     if args.mode == "sim":
         params, state = tr.sim_init(jax.random.PRNGKey(args.seed))

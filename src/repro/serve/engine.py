@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import compat
 from repro.core.comm import NullComm, mesh_comm
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
@@ -168,10 +169,10 @@ class Server:
             self.template, is_leaf=is_pd)
         ci = jax.tree.map(lambda _: P(None, W), self.abstract_cache())
         bi = P(W)
-        shm = jax.shard_map(body, mesh=self.mesh,
-                            in_specs=(pi, bi, ci),
-                            out_specs=(P(W), ci),
-                            axis_names=set(W), check_vma=False)
+        shm = compat.shard_map(body, mesh=self.mesh,
+                                in_specs=(pi, bi, ci),
+                                out_specs=(P(W), ci),
+                                axis_names=set(W))
         ps = self.param_shardings()
         cs = self.cache_shardings()
         bs = self._batch_sharding(prefill=True)
@@ -208,10 +209,10 @@ class Server:
                         else P()),
             self.template, is_leaf=is_pd)
         ci = jax.tree.map(lambda _: P(None, W), self.abstract_cache())
-        shm = jax.shard_map(body, mesh=self.mesh,
-                            in_specs=(pi, ci, P(W), P()),
-                            out_specs=(P(W), ci),
-                            axis_names=set(W), check_vma=False)
+        shm = compat.shard_map(body, mesh=self.mesh,
+                                in_specs=(pi, ci, P(W), P()),
+                                out_specs=(P(W), ci),
+                                axis_names=set(W))
         ps = self.param_shardings()
         cs = self.cache_shardings()
         return jax.jit(shm, in_shardings=(ps, cs, None, None),

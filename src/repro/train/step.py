@@ -26,7 +26,9 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import api as opt_api
-from repro.core.comm import Comm, NullComm, mesh_comm, sim_comm
+from repro.core import compat
+from repro.core.comm import (Comm, NullComm, mesh_comm, norm_hierarchy,
+                             sim_comm)
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.models.layers import (abstract_params, dp_mask as tmpl_dp_mask,
@@ -58,6 +60,31 @@ class Trainer:
                 n_workers = n_workers * mesh.shape[a]
         self.n_workers = n_workers or 1
 
+        # Two-level (intra-pod x inter-pod) topology for the compressed
+        # optimizer exchange. In mesh mode the hierarchy must name a split
+        # of the worker axes; in sim mode both levels are materialized as
+        # nested vmap axes carrying the same names.
+        self.hierarchy = norm_hierarchy(getattr(opt_cfg, "hierarchy", None),
+                                        self.n_workers)
+        if self.hierarchy is not None:
+            h = self.hierarchy
+            if mesh is not None:
+                if h.axes != tuple(W):
+                    raise ValueError(
+                        f"hierarchy axes {h.axes} must equal the worker "
+                        f"axes {tuple(W)}")
+                inner = 1
+                for a in h.inner_axes:
+                    inner *= mesh.shape[a]
+                if inner != h.inner:
+                    raise ValueError(
+                        f"hierarchy.inner={h.inner} != mesh inner-axes "
+                        f"product {inner}")
+            elif len(h.outer_axes) != 1 or len(h.inner_axes) != 1:
+                raise ValueError("sim mode materializes one vmap axis per "
+                                 "hierarchy level (one outer + one inner "
+                                 "axis name)")
+
         # Expert parallelism spans the largest suffix of the worker axes
         # whose size divides the expert count (llama4: 16 experts -> EP over
         # 'data' only on the 2x16x16 mesh, replicated over 'pod' with the
@@ -70,8 +97,14 @@ class Trainer:
         # The optimizer runs in the FULLY-manual domain: manual over the
         # worker axes (outer shard_map) AND over 'model' (nested shard_map in
         # _per_worker_step) — every op is chip-local except the worker-axis
-        # collectives, so GSPMD never re-gathers the comm views.
-        if mesh is not None and "model" in mesh.axis_names:
+        # collectives, so GSPMD never re-gathers the comm views. jax 0.4.x
+        # cannot nest a manual region inside a partial-auto one (the XLA
+        # partitioner of that vintage rejects manual-subgroup resharding),
+        # so there the optimizer stays in the GSPMD-auto domain: structured
+        # per-leaf layouts chunk along a replicated axis and the views keep
+        # their model sharding via compressor.constrain.
+        if (mesh is not None and "model" in mesh.axis_names
+                and hasattr(jax, "shard_map")):
             self.model_axes = ("model",)
             self.model_sizes = {"model": mesh.shape["model"]}
         else:
@@ -95,6 +128,10 @@ class Trainer:
         whose total size divides the expert count."""
         if self.mesh is not None:
             names, sizes = list(W), [self.mesh.shape[a] for a in W]
+        elif self.hierarchy is not None:  # sim: one vmap axis per level
+            h = self.hierarchy
+            names = list(h.axes)
+            sizes = [self.n_workers // h.inner, h.inner]
         else:  # sim / single: one logical worker axis
             names, sizes = ["workers"], [self.n_workers]
         self._worker_axis_names = tuple(names)
@@ -227,10 +264,10 @@ class Trainer:
             pm = jax.tree.unflatten(self.treedef,
                                     self.tree_specs.params_model())
             sm = self.tree_specs.state_model_specs()
-            opt_apply = jax.shard_map(
+            opt_apply = compat.shard_map(
                 opt_apply, in_specs=(pm, pm, sm, P()),
                 out_specs=(pm, sm, P()),
-                axis_names=set(self.model_axes), check_vma=False)
+                axis_names=set(self.model_axes), mesh=self.mesh)
 
         new_p, new_opt, met = opt_apply(p, grads, opt_state, widx)
         met["loss"] = comm.pmean(loss)
@@ -267,8 +304,18 @@ class Trainer:
     # mesh (production) mode
     # ------------------------------------------------------------------ #
     def mesh_step_fn(self):
-        """jit(shard_map(step)) for the production mesh, plus shardings."""
+        """jit(shard_map(step)) for the production mesh, plus shardings.
+
+        jax 0.4.x cannot run worker-axis collectives inside a partial-auto
+        shard_map region (the XLA partitioner of that vintage rejects
+        manual-subgroup resharding of shape-changing collectives), so the
+        same program is lowered through GSPMD + vmap-over-workers instead:
+        identical per-worker semantics, the worker axes sharded over the
+        real mesh, collectives emitted by the partitioner.
+        """
         assert self.mesh is not None
+        if not hasattr(jax, "shard_map"):
+            return self._gspmd_mesh_step_fn()
         W = self.tc.worker_axes
         comm = mesh_comm(W)
         pf = self._params_full_specs_tree()
@@ -283,11 +330,11 @@ class Trainer:
                 comm, params, opt_local, batch)
             return new_p, self._unsqueeze_state(new_s, si), met
 
-        shmapped = jax.shard_map(
+        shmapped = compat.shard_map(
             body, mesh=self.mesh,
             in_specs=(pi, si, batch_i),
             out_specs=(pi, si, P()),
-            axis_names=set(W), check_vma=False)
+            axis_names=set(W))
 
         shardings = {
             "params": self.tree_specs.shardings(self.mesh, pf),
@@ -298,6 +345,119 @@ class Trainer:
             shmapped,
             in_shardings=(shardings["params"], shardings["state"],
                           NamedSharding(self.mesh, batch_f)),
+            out_shardings=(shardings["params"], shardings["state"], None),
+            donate_argnums=donate)
+        return fn, shardings
+
+    # ------------------------------------------------------------------ #
+    # GSPMD-vmap fallback (jax 0.4.x mesh mode)
+    # ------------------------------------------------------------------ #
+    def _gspmd_mesh_step_fn(self):
+        """Mesh-mode step as jit(nested-vmap) with worker axes GSPMD-sharded.
+
+        Each mesh worker axis becomes a vmap axis of the same name, so the
+        per-worker step — collectives, hierarchy split and all — is the
+        exact sim-mode trace; ``in_shardings`` lay the mapped axes over the
+        real mesh and GSPMD partitions the lot. Worker-stacked leaves are
+        reshaped (n, ...) -> mesh axis sizes around the vmap; EP leaves
+        split their expert axis over the EP suffix and broadcast over the
+        residual worker axes (the same replication the shard_map specs
+        declare).
+        """
+        W = self.tc.worker_axes
+        sizes = tuple(self.mesh.shape[a] for a in W)
+        ep_deg, n = self.ep_degree, self.n_workers
+        res_ndim = len(W) - len(self.ep_axes)
+        res_sizes, ep_sizes = sizes[:res_ndim], sizes[res_ndim:]
+        comm = mesh_comm(W)
+        one = self._one_worker_fn(comm)
+        mapped = one
+        for name in reversed(W):
+            mapped = jax.vmap(mapped, axis_name=name)
+
+        def split_lead(x):
+            return x.reshape(sizes + x.shape[1:])
+
+        def merge_lead(x):
+            return x.reshape((n,) + x.shape[len(sizes):])
+
+        def split_ep(x, ax):
+            shp = x.shape
+            x = x.reshape(shp[:ax] + ep_sizes + (shp[ax] // ep_deg,)
+                          + shp[ax + 1:])
+            x = jnp.moveaxis(x, tuple(range(ax, ax + len(ep_sizes))),
+                             tuple(range(len(ep_sizes))))
+            return jnp.broadcast_to(x[(None,) * res_ndim],
+                                    res_sizes + x.shape)
+
+        def merge_ep(x, ax):
+            x = x[(0,) * res_ndim]
+            x = jnp.moveaxis(x, tuple(range(len(ep_sizes))),
+                             tuple(range(ax, ax + len(ep_sizes))))
+            shp = x.shape
+            return x.reshape(shp[:ax] + (-1,)
+                             + shp[ax + len(ep_sizes) + 1:])
+
+        def _ep_axis_of(spec):
+            for ax, e in enumerate(tuple(spec)):
+                if e is None:
+                    continue
+                names = e if isinstance(e, tuple) else (e,)
+                if set(names) & set(self.ep_axes):
+                    return ax
+            return None
+
+        def split_state(x, s):
+            if x is None:
+                return None
+            if self._is_per_worker_spec(s):
+                return split_lead(x)
+            ax = _ep_axis_of(s)
+            if ax is not None:
+                return split_ep(x, ax)
+            return jnp.broadcast_to(x[(None,) * len(sizes)],
+                                    sizes + x.shape)
+
+        def merge_state(x, s):
+            if x is None:
+                return None
+            if self._is_per_worker_spec(s):
+                return merge_lead(x)
+            ax = _ep_axis_of(s)
+            if ax is not None:
+                return merge_ep(x, ax)
+            return x[(0,) * len(sizes)]
+
+        sf, si = self.tree_specs.state_specs()
+        pf = self._params_full_specs_tree()
+        pd_flat = self.pd_leaves
+
+        def body(params, opt_state, batch):
+            pl = self.treedef.flatten_up_to(params)
+            pl = [split_lead(x) if pd.dp else split_ep(x, pd.ep_axis or 0)
+                  for x, pd in zip(pl, pd_flat)]
+            p2 = jax.tree.unflatten(self.treedef, pl)
+            s2 = jax.tree.map(split_state, opt_state, si)
+            b2 = jax.tree.map(
+                lambda x: x.reshape(sizes + (x.shape[0] // n,)
+                                    + x.shape[1:]), batch)
+            new_p, new_s, met = mapped(p2, s2, b2)
+            npl = self.treedef.flatten_up_to(new_p)
+            npl = [merge_lead(x) if pd.dp else merge_ep(x, pd.ep_axis or 0)
+                   for x, pd in zip(npl, pd_flat)]
+            return (jax.tree.unflatten(self.treedef, npl),
+                    jax.tree.map(merge_state, new_s, si),
+                    jax.tree.map(lambda x: x[(0,) * len(sizes)], met))
+
+        shardings = {
+            "params": self.tree_specs.shardings(self.mesh, pf),
+            "state": self.tree_specs.shardings(self.mesh, sf),
+        }
+        donate = (0, 1) if self.tc.donate else ()
+        fn = jax.jit(
+            body,
+            in_shardings=(shardings["params"], shardings["state"],
+                          NamedSharding(self.mesh, P(W))),
             out_shardings=(shardings["params"], shardings["state"], None),
             donate_argnums=donate)
         return fn, shardings
@@ -432,10 +592,9 @@ class Trainer:
     def _sim_local(self, params, i):
         return jax.tree.map(lambda x: x[i], params)
 
-    def sim_step_fn(self):
-        axis = "workers"
-        comm = sim_comm(axis)
-        n = self.n_workers
+    def _one_worker_fn(self, comm):
+        """Per-worker step on worker-local trees (shared by sim's vmap, the
+        hierarchical nested vmap, and the GSPMD-vmap mesh fallback)."""
 
         def one(params_i, state_i, batch_i):
             # params_i: DP leaves (shape local), EP leaves local slice
@@ -450,12 +609,46 @@ class Trainer:
                    for x, pd in zip(npl, self.pd_leaves)]
             return jax.tree.unflatten(self.treedef, npl), new_s, met
 
+        return one
+
+    def sim_step_fn(self):
+        n = self.n_workers
+        h = self.hierarchy
+        if h is None:
+            axes, sizes = ("workers",), (n,)
+        else:
+            # materialize both topology levels so Comm.split sees real axes
+            axes = h.axes
+            sizes = (n // h.inner, h.inner)
+        comm = Comm(axes) if len(axes) > 1 else sim_comm(axes[0])
+        one = self._one_worker_fn(comm)
+        mapped = one
+        for name in reversed(axes):
+            mapped = jax.vmap(mapped, axis_name=name)
+
         @jax.jit
         def fn(params, state, batch):
-            # batch: (GB, S) -> per-worker (n, GB/n, S)
-            def resh(x):
-                return x.reshape((n, x.shape[0] // n) + x.shape[1:])
-            b = jax.tree.map(resh, batch)
-            return jax.vmap(one, axis_name=axis)(params, state, b)
+            # batch: (GB, S) -> per-worker (*sizes, GB/n, S); the stacked
+            # params/state keep their flat leading worker axis externally
+            # (outer-major = the flattened collective order) and are only
+            # reshaped around the nested vmap
+            def resh_b(x):
+                return x.reshape(sizes + (x.shape[0] // n,) + x.shape[1:])
+
+            def lead(x):
+                return x.reshape(sizes + x.shape[1:])
+
+            def unlead(x):
+                return x.reshape((n,) + x.shape[len(sizes):])
+
+            b = jax.tree.map(resh_b, batch)
+            if len(sizes) == 1:
+                return mapped(params, state, b)
+            p2 = jax.tree.map(lead, params)
+            s2 = jax.tree.map(lead, state)
+            new_p, new_s, met = mapped(p2, s2, b)
+            return (jax.tree.map(unlead, new_p),
+                    jax.tree.map(unlead, new_s),
+                    jax.tree.map(unlead, met))
 
         return fn

@@ -1,0 +1,239 @@
+"""Hierarchical (intra-pod / inter-pod) 1-bit AllReduce semantics.
+
+Pins down the tentpole contracts:
+  * the flat path is the exact degenerate case: ``n_inner == 1`` under the
+    two-level schedule is bitwise-identical to today's single-level code;
+  * the identity-compressor two-level schedule computes the exact mean (up
+    to the bf16 wire of the intra-pod phases);
+  * workers reach bitwise consensus after every hierarchical sync;
+  * per-level error feedback stays bounded under iteration (Lemma 1
+    behaviour at each compressed level);
+  * ``compressed_bytes`` splits per level and the flat accounting is
+    unchanged (hypothesis-based where available, deterministic sweep
+    fallback as in test_compressor.py).
+
+Workers are simulated with a nested vmap — outer axis "pod", inner axis
+"data" — the same axis names the production mesh uses, so ``Comm.split``
+runs identically in both regimes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from jax.sharding import PartitionSpec as P
+
+from repro.core import compressor as C
+from repro.core import onebit_allreduce as AR
+from repro.core.comm import Comm, Hierarchy
+
+
+def _views(shape, n, seed=0):
+    lo = C.make_layout(shape, None, n)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,) + shape)
+    return jax.vmap(lambda a: C.to_view(a, lo))(x)
+
+
+def _run_flat(views, lo, cfg, ef=None):
+    comm = Comm(("w",))
+
+    def f(v, e):
+        return AR.onebit_allreduce_view(comm, v, e, lo, cfg)
+
+    if ef is None:
+        ef = jax.vmap(lambda _: AR.init_ef_state(lo))(
+            jnp.arange(views.shape[0]))
+    return jax.vmap(f, axis_name="w")(views, ef)
+
+
+def _run_hier(views, lo, cfg, ef=None, n_pods=None):
+    n = views.shape[0]
+    ni = lo.n_inner if cfg.hierarchy is None else cfg.hierarchy.inner
+    npod = n // ni
+    comm = Comm(("pod", "data"))
+
+    def f(v, e):
+        return AR.onebit_allreduce_view(comm, v, e, lo, cfg)
+
+    if ef is None:
+        ef = jax.vmap(lambda _: AR.init_ef_state(lo))(jnp.arange(n))
+    fold = lambda a: a.reshape((npod, ni) + a.shape[1:])
+    unfold = lambda a: a.reshape((n,) + a.shape[2:])
+    out = jax.vmap(jax.vmap(f, axis_name="data"), axis_name="pod")(
+        jax.tree.map(fold, views), jax.tree.map(fold, ef))
+    return jax.tree.map(unfold, out)
+
+
+CASES = [
+    ((13, 9), 8),       # flatten view with a padded tail
+    ((64, 40), 8),      # flatten view, multi-row chunks
+    ((257,), 4),        # 1-D with padding
+]
+
+
+@pytest.mark.parametrize("shape,n", CASES)
+@pytest.mark.parametrize("mode", ["tensor", "chunk", "row"])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_degenerate_single_inner_is_bitwise_flat(shape, n, mode,
+                                                 use_pallas):
+    """hierarchy with one-worker pods (n_inner=1) == today's flat path,
+    bitwise — outputs and both EF errors."""
+    lo = C.make_layout(shape, None, n)          # n_inner = 1
+    views = _views(shape, n)
+    cfg_f = AR.OneBitConfig(scale_mode=mode, use_pallas=use_pallas)
+    cfg_h = AR.OneBitConfig(
+        scale_mode=mode, use_pallas=use_pallas,
+        hierarchy=Hierarchy(inner=1, outer_axes=("pod", "data"),
+                            inner_axes=()))
+    of, eff = _run_flat(views, lo, cfg_f)
+    oh, efh = _run_hier(views, lo, cfg_h)
+    np.testing.assert_array_equal(np.asarray(of), np.asarray(oh))
+    np.testing.assert_array_equal(np.asarray(eff.err_worker),
+                                  np.asarray(efh.err_worker))
+    np.testing.assert_array_equal(np.asarray(eff.err_server),
+                                  np.asarray(efh.err_server))
+
+
+@pytest.mark.parametrize("shape,n", CASES)
+def test_hier_identity_compressor_is_exact_mean(shape, n):
+    """quantize=False two-level schedule == the exact worker mean up to the
+    bf16 wire of the intra-pod phases."""
+    ni = 2
+    lo = C.make_layout(shape, None, n, n_inner=ni)
+    views = _views(shape, n)
+    cfg = AR.OneBitConfig(quantize=False, hierarchy=Hierarchy(inner=ni))
+    out, _ = _run_hier(views, lo, cfg)
+    exact = np.asarray(views.mean(axis=0))
+    np.testing.assert_allclose(np.asarray(out[0]), exact,
+                               atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("mode", ["tensor", "chunk", "row"])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_hier_bitwise_consensus_and_kernel_parity(mode, use_pallas):
+    """Every worker decodes the identical result (consensus is what lets
+    0/1 Adam sync parameters bitwise), and the Pallas slice kernels agree
+    with the jnp path to the bit."""
+    shape, n, ni = (64, 40), 8, 4
+    lo = C.make_layout(shape, None, n, n_inner=ni)
+    views = _views(shape, n)
+    cfg = AR.OneBitConfig(scale_mode=mode, use_pallas=use_pallas,
+                          hierarchy=Hierarchy(inner=ni))
+    out, ef = _run_hier(views, lo, cfg)
+    o = np.asarray(out)
+    assert (o == o[:1]).all(), "workers diverged after hierarchical sync"
+    assert np.isfinite(o).all()
+    if use_pallas:
+        cfg_j = AR.OneBitConfig(scale_mode=mode,
+                                hierarchy=Hierarchy(inner=ni))
+        oj, efj = _run_hier(views, lo, cfg_j)
+        np.testing.assert_array_equal(o, np.asarray(oj))
+        np.testing.assert_array_equal(np.asarray(ef.err_worker),
+                                      np.asarray(efj.err_worker))
+        np.testing.assert_array_equal(np.asarray(ef.err_server),
+                                      np.asarray(efj.err_server))
+
+
+def test_hier_structured_view_consensus():
+    """Non-flatten (GSPMD-auto structured) views run the same two-level
+    schedule: model-sharded leaf, chunk split on a replicated axis."""
+    shape, n, ni = (3, 48, 16), 8, 2
+    lo = C.make_layout(shape, P(None, None, "model"), n, n_inner=ni)
+    assert not lo.flatten
+    x = jax.random.normal(jax.random.PRNGKey(3), (n,) + shape)
+    views = jax.vmap(lambda a: C.to_view(a, lo))(x)
+    for mode in ("tensor", "chunk", "row"):
+        cfg = AR.OneBitConfig(scale_mode=mode, hierarchy=Hierarchy(inner=ni))
+        out, ef = _run_hier(views, lo, cfg)
+        o = np.asarray(out)
+        assert (o == o[:1]).all() and np.isfinite(o).all()
+        assert ef.err_worker.shape[1:] == lo.ef_worker_shape
+
+
+def test_ef_error_bounded_per_level():
+    """Iterated hierarchical syncs keep both levels' EF errors bounded
+    (the no-blow-up half of Lemma 1, per compressed level)."""
+    shape, n, ni = (32, 24), 8, 4
+    lo = C.make_layout(shape, None, n, n_inner=ni)
+    cfg = AR.OneBitConfig(scale_mode="tensor", hierarchy=Hierarchy(inner=ni))
+    ef = jax.vmap(lambda _: AR.init_ef_state(lo))(jnp.arange(n))
+    for t in range(30):
+        views = _views(shape, n, seed=t)
+        _, ef = _run_hier(views, lo, cfg, ef=ef)
+    assert float(jnp.abs(ef.err_worker).max()) < 10.0
+    assert float(jnp.abs(ef.err_server).max()) < 10.0
+
+
+# ---------------------------------------------------------------------------
+# per-level bytes accounting
+# ---------------------------------------------------------------------------
+
+def _check_levels(shape, n, ni, mode):
+    lo = C.make_layout(shape, None, n, n_inner=ni)
+    lv = C.compressed_bytes_levels(lo, mode, inner_itemsize=2)
+    no = n // ni
+    elems = int(np.prod(lo.view_shape))
+    chunk = int(np.prod(lo.chunk_shape))
+    # inner: RS + AG of (ni-1)/ni of the view at the 2-byte wire dtype
+    assert lv["inner"] == 2 * (ni - 1) * (elems // ni) * 2
+    # outer: the flat formula at pod granularity
+    if mode in ("tensor", "chunk"):
+        sc = gc = 1
+    elif len(lo.view_shape) == 2:
+        sc, gc = 1, lo.view_shape[1]
+    else:
+        sc = gc = lo.view_shape[1]
+    assert lv["outer"] == (no - 1) * (2 * (chunk // 8) + 4 * (sc + gc))
+    assert C.compressed_bytes(lo, mode) == lv["inner"] + lv["outer"]
+    if ni == 1:
+        assert lv["inner"] == 0
+    # the headline property: sign bits vs f32 across the slow links
+    fp = C.fullprec_bytes_levels(lo, 4)
+    if mode == "tensor" and no > 1:
+        ratio = lv["outer"] / fp["outer"]
+        assert abs(ratio - 1 / 32) < 0.01, ratio
+
+
+DET_CASES = [((13, 9), 8, 1), ((13, 9), 8, 2), ((64, 40), 8, 4),
+             ((257,), 4, 2), ((1024,), 16, 4), ((33, 8), 8, 8)]
+
+
+@pytest.mark.parametrize("shape,n,ni", DET_CASES)
+@pytest.mark.parametrize("mode", ["tensor", "chunk", "row"])
+def test_compressed_bytes_levels_sweep(shape, n, ni, mode):
+    _check_levels(shape, n, ni, mode)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(1, 2000), st.sampled_from([2, 4, 8, 16]),
+           st.integers(0, 4), st.sampled_from(["tensor", "chunk", "row"]))
+    def test_compressed_bytes_levels_property(total, n, log_ni, mode):
+        ni = 2 ** log_ni
+        if ni > n:
+            ni = n
+        _check_levels((total,), n, ni, mode)
+else:
+    @pytest.mark.parametrize("seed", range(24))
+    def test_compressed_bytes_levels_property(seed):
+        rng = np.random.RandomState(seed)
+        total = int(rng.randint(1, 2000))
+        n = int(rng.choice([2, 4, 8, 16]))
+        ni = int(min(2 ** rng.randint(0, 5), n))
+        mode = str(rng.choice(["tensor", "chunk", "row"]))
+        _check_levels((total,), n, ni, mode)
+
+
+def test_flat_accounting_unchanged():
+    """n_inner=1 keeps the historical flat numbers byte-for-byte."""
+    for shape, n in [((13, 9), 4), ((100,), 16)]:
+        lo = C.make_layout(shape, None, n)
+        chunk_packed = int(np.prod(lo.chunk_shape)) // 8
+        expect = (n - 1) * (2 * chunk_packed + 4 * 2)
+        assert C.compressed_bytes(lo, "tensor") == expect

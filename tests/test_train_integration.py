@@ -63,10 +63,7 @@ def test_microbatch_grad_equivalence():
                                    rtol=5e-4, atol=5e-5)
 
 
-def test_moe_ep_sim_matches_single_worker_routing():
-    """Sim-mode EP (experts split over 4 workers, a2a dispatch) must agree
-    with single-worker MoE on the same global batch at init (fwd loss)."""
-    cfg = get("llama4-scout-17b-a16e").smoke
+def _moe_losses(cfg):
     data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=16,
                                   global_batch=8, seed=3))
     batch = data.batch(0)
@@ -76,10 +73,43 @@ def test_moe_ep_sim_matches_single_worker_routing():
     p4, s4 = tr4.sim_init(jax.random.PRNGKey(0))
     _, _, m1 = tr1.single_step_fn()(p1, s1, batch)
     _, _, m4 = tr4.sim_step_fn()(p4, s4, batch)
-    l1 = float(np.asarray(m1["loss"]).reshape(-1)[0])
-    l4 = float(np.asarray(m4["loss"]).reshape(-1)[0])
-    # same params, same data; capacity-drop patterns may differ slightly
+    return (float(np.asarray(m1["loss"]).reshape(-1)[0]),
+            float(np.asarray(m4["loss"]).reshape(-1)[0]))
+
+
+def test_moe_ep_sim_matches_single_worker_routing():
+    """Sim-mode EP (experts split over 4 workers, a2a dispatch) must agree
+    with single-worker MoE on the same global batch at init (fwd loss).
+
+    Tolerance rationale: the capacity router allots each expert
+    ``cf*T_local*k/E`` slots *per worker*. The EP regime therefore drops a
+    token whenever one worker's local batch overfills an expert, even if
+    the expert has global headroom — single-worker evaluation only drops on
+    global overflow. At init routing is near-uniform, so the differing drop
+    patterns move the loss by well under 0.05; anything larger indicates a
+    dispatch bug, not capacity noise.
+    """
+    l1, l4 = _moe_losses(get("llama4-scout-17b-a16e").smoke)
     assert abs(l1 - l4) < 0.05, (l1, l4)
+
+
+def test_moe_ep_sim_exact_when_no_drops():
+    """With capacity large enough that no tokens drop in either regime the
+    a2a dispatch must route every token to the same expert output — this
+    pins the routing itself, with the capacity-drop divergence excluded.
+
+    The residual gap is the Switch aux loss: it is quadratic in the routing
+    histogram, and the EP regime averages per-worker-local histograms while
+    the single worker uses the global one (E[f·p] != E[f]·E[p]) — a few
+    1e-4 at init-uniform routing. The LM cross-entropy itself matches to
+    f32 accumulation noise, so 2e-3 cleanly separates "statistics of the
+    aux term" from "tokens routed to the wrong expert" (which moves the
+    loss by >1e-2 even for a single misrouted token at this scale)."""
+    import dataclasses
+    cfg = dataclasses.replace(get("llama4-scout-17b-a16e").smoke,
+                              capacity_factor=8.0)
+    l1, l4 = _moe_losses(cfg)
+    assert abs(l1 - l4) < 2e-3, (l1, l4)
 
 
 def test_checkpoint_roundtrip(tmp_path):
