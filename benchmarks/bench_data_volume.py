@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.configs import get
 from repro.core import (Hierarchy, OptimizerConfig, comm_accounting,
-                        make_optimizer)
+                        build_optimizer)
 from repro.core import schedules as S
 from repro.models.layers import abstract_params, param_specs
 from repro.models import transformer as T
@@ -77,7 +77,7 @@ def run(arch="bert-large", total_steps=100_000, warmup_frac=0.125,
             var_policy=S.AdaptiveFreezePolicy(kappa=16),
             sync_policy=sync_pol,
             onebit_warmup=int(0.16 * total_steps))
-        opt = make_optimizer(ocfg, shapes, specs=specs, n_workers=16)
+        opt = build_optimizer(ocfg, shapes, specs=specs, n_workers=16)
         acct = comm_accounting(opt)
         d = acct["dp_params"]
         comp_one_way = acct["compressed_bytes_per_sync"] / 2  # send side
@@ -122,7 +122,7 @@ def hier_levels(arch="bert-large", workers=32, inner=16):
     def acct_for(h, comm_dtype):
         ocfg = OptimizerConfig(name="zero_one_adam", hierarchy=h,
                                comm_dtype=comm_dtype)
-        opt = make_optimizer(ocfg, shapes, specs=specs, n_workers=workers)
+        opt = build_optimizer(ocfg, shapes, specs=specs, n_workers=workers)
         return comm_accounting(opt)
 
     h = Hierarchy(inner=inner)

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (OptimizerConfig, make_optimizer, sim_comm,
+from repro.core import (OptimizerConfig, build_optimizer, sim_comm,
                         schedules as S)
 from repro.data import SyntheticClassify
 
@@ -50,7 +50,7 @@ def run_one(optimizer, task):
                                                double_every=200,
                                                max_interval=4),
         onebit_warmup=150)
-    opt = make_optimizer(cfg, params, n_workers=N)
+    opt = build_optimizer(cfg, params, n_workers=N)
     state = jax.vmap(lambda _: opt.init(params))(jnp.arange(N))
     xs = jax.tree.map(lambda x: jnp.broadcast_to(x, (N,) + x.shape) + 0,
                       params)

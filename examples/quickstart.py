@@ -2,28 +2,36 @@
 
 The full paper machinery runs here — adaptive variance freezing (T_v),
 learning-rate-proportional local steps (T_u), error-feedback 1-bit
-compressed sync — just at CPU scale.
+compressed sync — just at CPU scale. Built with the composable API: a base
+step (``adam_base``) wrapped by the ``compressed_dp`` combinator; swap the
+base for ``lamb_base()`` / ``momentum_sgd_base()`` to get 0/1-LAMB or
+0/1-SGD with the identical sync machinery.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
+
 import jax
 import numpy as np
 
 from repro.configs import get
-from repro.core import OptimizerConfig, comm_accounting, schedules as S
+from repro.core import adam_base, comm_accounting, compressed_dp, \
+    schedules as S
 from repro.data import DataConfig, SyntheticLM
 from repro.train import Trainer
 
+STEPS = int(os.environ.get("REPRO_EXAMPLE_STEPS", "40"))
+
 cfg = get("gpt2").smoke
-opt_cfg = OptimizerConfig(
-    name="zero_one_adam",
+opt = compressed_dp(
+    adam_base(beta1=0.9, beta2=0.999),
     lr=S.LinearWarmupExpDecay(peak_lr=2e-3, warmup_steps=10,
                               decay=0.97, decay_period=20),
     var_policy=S.AdaptiveFreezePolicy(kappa=4),
     sync_policy=S.LrProportionalSyncPolicy(warmup_steps=10, double_every=20,
                                            max_interval=4),
 )
-trainer = Trainer(cfg, opt_cfg, n_workers=4)
+trainer = Trainer(cfg, opt, n_workers=4)
 acct = comm_accounting(trainer.opt)
 print(f"model={cfg.name}  DP params={acct['dp_params']/1e6:.2f}M  "
       f"compressed sync: {acct['bits_per_param_sync']/2:.2f} bits/param "
@@ -32,7 +40,7 @@ print(f"model={cfg.name}  DP params={acct['dp_params']/1e6:.2f}M  "
 params, state = trainer.sim_init(jax.random.PRNGKey(0))
 step = trainer.sim_step_fn()
 data = SyntheticLM(DataConfig(vocab=64, seq_len=32, global_batch=8))
-for t in range(40):
+for t in range(STEPS):
     params, state, met = step(params, state, data.batch(t))
     if t % 5 == 0:
         print(f"step {t:3d}  loss {float(np.asarray(met['loss'])[0]):.4f}  "

@@ -3,6 +3,15 @@
 Single-host NPZ-based storage with an atomic rename — adequate for the
 CPU-scale examples/tests here; a production multi-pod deployment would swap
 in orbax/tensorstore behind the same interface (noted in DESIGN.md).
+
+Format (manifest ``version`` 2): one array entry per pytree leaf
+(``leaf_{i}`` in flatten order) plus a JSON ``__manifest__`` carrying the
+step, user meta, leaf count, and per-leaf tree paths/shapes/dtypes.
+``restore`` validates the checkpoint against the caller's ``like`` tree and
+names the first mismatched leaf by its tree path — a resumed run can never
+silently load state into the wrong slot. Version-1 checkpoints (no
+``version`` / ``leaf_paths`` fields) are still readable; they get the same
+count/shape validation with positional leaf names.
 """
 from __future__ import annotations
 
@@ -14,15 +23,27 @@ from typing import Any, Dict, Tuple
 import jax
 import numpy as np
 
+FORMAT_VERSION = 2
+
+
+def _leaf_paths(tree) -> list:
+    paths_and_leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(path) for path, _ in paths_and_leaves]
+
 
 def save(path: str, tree: Any, step: int = 0, meta: Dict | None = None):
     leaves, treedef = jax.tree.flatten(tree)
     arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    ordered = [arrays[f"leaf_{i}"] for i in range(len(leaves))]
     payload = {
+        "version": FORMAT_VERSION,
         "step": step,
         "meta": meta or {},
         "treedef": str(treedef),
         "n_leaves": len(leaves),
+        "leaf_paths": _leaf_paths(tree),
+        "leaf_shapes": [list(a.shape) for a in ordered],
+        "leaf_dtypes": [str(a.dtype) for a in ordered],
     }
     d = os.path.dirname(os.path.abspath(path))
     os.makedirs(d, exist_ok=True)
@@ -38,22 +59,54 @@ def save(path: str, tree: Any, step: int = 0, meta: Dict | None = None):
 
 
 def restore(path: str, like: Any) -> Tuple[Any, int, Dict]:
-    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    """Restore into the structure of ``like``.
+
+    The manifest is validated against ``like`` before anything is
+    materialized: leaf count, per-leaf tree paths (version >= 2), and
+    per-leaf shapes must all match, and the first mismatch raises a
+    ``ValueError`` naming the offending leaf's tree path.
+    """
     with np.load(path, allow_pickle=False) as z:
         manifest = json.loads(str(z["__manifest__"]))
+        version = manifest.get("version", 1)
+        if version > FORMAT_VERSION:
+            raise ValueError(
+                f"checkpoint {path!r} has format version {version}; this "
+                f"build reads up to version {FORMAT_VERSION}")
         leaves_like, treedef = jax.tree.flatten(like)
+        like_paths = _leaf_paths(like)
         if manifest["n_leaves"] != len(leaves_like):
             raise ValueError(
-                f"checkpoint has {manifest['n_leaves']} leaves, "
-                f"expected {len(leaves_like)}")
+                f"checkpoint has {manifest['n_leaves']} leaves, expected "
+                f"{len(leaves_like)} — the optimizer/model structure does "
+                f"not match the checkpoint")
+        ckpt_paths = manifest.get("leaf_paths")
+        if ckpt_paths is not None:
+            for i, (cp, lp) in enumerate(zip(ckpt_paths, like_paths)):
+                if cp != lp:
+                    raise ValueError(
+                        f"checkpoint leaf {i} is {cp!r} but the target "
+                        f"tree has {lp!r} at that position — tree "
+                        f"structures diverge")
+        # Shape validation: manifest against `like`, and the stored array
+        # against the manifest (catches truncated/tampered payloads whose
+        # manifest still matches); first mismatch names the leaf path.
+        shapes = manifest.get("leaf_shapes")
         out = []
         for i, ref in enumerate(leaves_like):
-            arr = z[f"leaf_{i}"]
-            if tuple(arr.shape) != tuple(ref.shape):
+            name = (ckpt_paths[i] if ckpt_paths is not None
+                    else like_paths[i])
+            stored = tuple(z[f"leaf_{i}"].shape)
+            shape = tuple(shapes[i]) if shapes is not None else stored
+            if shape != tuple(ref.shape):
                 raise ValueError(
-                    f"leaf {i}: checkpoint shape {arr.shape} != "
-                    f"expected {ref.shape}")
-            out.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+                    f"leaf {i} ({name!r}): checkpoint shape {shape} != "
+                    f"expected {tuple(ref.shape)}")
+            if stored != shape:
+                raise ValueError(
+                    f"leaf {i} ({name!r}): stored array shape {stored} != "
+                    f"manifest shape {shape} — corrupt checkpoint")
+            out.append(jax.numpy.asarray(z[f"leaf_{i}"], dtype=ref.dtype))
     return (jax.tree.unflatten(treedef, out), manifest["step"],
             manifest["meta"])
 

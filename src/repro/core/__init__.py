@@ -1,13 +1,22 @@
 """The paper's primary contribution: 0/1 Adam and its communication substrate.
 
 Public surface:
-  - make_optimizer / OptimizerConfig        (api.py)
+  - compressed_dp + base steps (composable optimizer API)
+                                            (compressed.py / base_steps.py)
+  - build_optimizer / make_optimizer (shim) / OptimizerConfig / REGISTRY_NAMES
+                                            (api.py)
   - Comm / sim_comm / mesh_comm             (comm.py)
   - schedules: T_v / T_u policies + lr      (schedules.py)
   - onebit_allreduce_view (Algorithm 2)     (onebit_allreduce.py)
   - 1-bit EF compressor + comm-view layouts (compressor.py)
 """
-from repro.core.api import OptimizerConfig, make_optimizer, comm_accounting
+from repro.core.api import (OptimizerConfig, make_optimizer, build_optimizer,
+                            transform_from_config, comm_accounting,
+                            REGISTRY_NAMES, LEGACY_NAMES)
+from repro.core.base_steps import (adam_base, lamb_base, momentum_sgd_base,
+                                   AdamBase, LambBase, MomentumSgdBase)
+from repro.core.compressed import (CompressedDP, CompressedDPState,
+                                   compressed_dp)
 from repro.core.comm import (Comm, Hierarchy, mesh_comm, sim_comm,
                              run_simulated)
 from repro.core import schedules
@@ -15,7 +24,12 @@ from repro.core import compressor
 from repro.core import onebit_allreduce
 
 __all__ = [
-    "OptimizerConfig", "make_optimizer", "comm_accounting",
+    "OptimizerConfig", "make_optimizer", "build_optimizer",
+    "transform_from_config", "comm_accounting", "REGISTRY_NAMES",
+    "LEGACY_NAMES",
+    "adam_base", "lamb_base", "momentum_sgd_base",
+    "AdamBase", "LambBase", "MomentumSgdBase",
+    "CompressedDP", "CompressedDPState", "compressed_dp",
     "Comm", "Hierarchy", "mesh_comm", "sim_comm", "run_simulated",
     "schedules", "compressor", "onebit_allreduce",
 ]

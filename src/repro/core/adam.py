@@ -6,6 +6,11 @@ shared by all three optimizers here so comparisons are step-for-step clean).
 All optimizers operate over flattened leaf lists (treedef captured at
 construction) so that heterogeneous per-leaf auxiliary state (layouts, error
 feedback, DP masks) never has to align as a pytree.
+
+.. deprecated:: Superseded by the composable API —
+   ``compressed_dp(adam_base(...), style="mean", ...)`` is the same
+   distributed Adam (tests/test_composed_equivalence.py). Retained as the
+   frozen reference implementation those equivalence tests pin against.
 """
 from __future__ import annotations
 
@@ -14,7 +19,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import api as _api
+from repro.core import leafwise
 from repro.core.comm import Comm
 
 
@@ -28,16 +33,15 @@ class Adam:
     def __init__(self, cfg, param_shapes, specs, dp_mask, n_workers,
                  model_axis_sizes=None):
         self.cfg = cfg
-        self.n = n_workers
-        self.model_axes = tuple((model_axis_sizes or {}).keys())
-        leaves, self.treedef = jax.tree.flatten(param_shapes)
-        self.specs = self.treedef.flatten_up_to(specs)
-        self.dp_mask = self.treedef.flatten_up_to(dp_mask)
-        self.layouts = [  # kept for comm accounting parity
-            _api.C.make_layout(l.shape, s, n_workers)
-            for l, s in zip(leaves, self.specs)]
-        self.vspecs = [_api.C.view_spec_entries(lo, sp)
-                       for lo, sp in zip(self.layouts, self.specs)]
+        plan = leafwise.make_plan(param_shapes, specs, dp_mask, n_workers,
+                                  model_axis_sizes, cfg.hierarchy)
+        self.n = plan.n
+        self.model_axes = plan.model_axes
+        self.treedef = plan.treedef
+        self.specs = plan.specs
+        self.dp_mask = plan.dp_mask
+        self.layouts = plan.layouts
+        self.vspecs = plan.vspecs
 
     def flat(self, tree):
         return self.treedef.flatten_up_to(tree)

@@ -1,9 +1,12 @@
-"""Optimizer factory + shared plumbing.
+"""Optimizer registry, config, and shared accounting.
 
-All optimizers in this package share one interface::
+The canonical way to build an optimizer is the composable transform API::
 
-    opt = make_optimizer(cfg, param_shapes, specs=..., dp_mask=..., n_workers=n)
-    state = opt.init(params)                       # or jax.eval_shape(opt.init, ...)
+    from repro.core import compressed_dp, adam_base, lamb_base
+
+    opt = compressed_dp(lamb_base(), lr=..., sync_policy=..., var_policy=...)(
+        param_shapes, specs=..., dp_mask=..., n_workers=n)
+    state = opt.init(params)                       # or jax.eval_shape(...)
     params', state', metrics = opt.step(comm, params, grads, state)
 
 ``step`` is written *per worker*: inside a partial-manual ``shard_map`` the
@@ -11,16 +14,27 @@ worker axes are the manual mesh axes and ``comm`` wraps real collectives;
 under ``jax.vmap(axis_name=...)`` the same code runs n simulated workers on
 one device (how the tests exercise the algorithms).
 
+Name-based construction goes through the registry: ``build_optimizer``
+accepts either an unbound :class:`~repro.core.compressed.CompressedDP`
+transform or an :class:`OptimizerConfig` whose ``name`` selects a composed
+pipeline (see ``REGISTRY_NAMES``). ``make_optimizer`` is kept as a
+deprecation shim: the legacy names ("adam", "one_bit_adam",
+"zero_one_adam") still work but emit a ``DeprecationWarning`` pointing at
+the compositional spelling; they return the composed equivalent (bitwise
+for the compressed pipelines — see tests/test_composed_equivalence.py).
+
 ``dp_mask`` marks which leaves are data-parallel replicated (True, default):
 those participate in the paper's compressed sync + variance AllReduce.
 Leaves marked False (e.g. expert-parallel MoE experts, which exist exactly
 once across the worker axis and therefore have no DP gradient exchange to
-compress) are updated with plain local Adam; their gradients are pre-scaled
-by 1/n to match the global-mean-loss convention (see train/step.py).
+compress) are updated with plain local base steps; their gradients are
+pre-scaled by 1/n to match the global-mean-loss convention (see
+train/step.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -28,22 +42,24 @@ import jax.numpy as jnp
 
 from repro.core import compressor as C
 from repro.core import schedules as S
+from repro.core.base_steps import adam_base, lamb_base, momentum_sgd_base
 from repro.core.comm import Comm, Hierarchy
+from repro.core.compressed import CompressedDP, compressed_dp
 
 
 @dataclasses.dataclass(frozen=True)
 class OptimizerConfig:
-    name: str = "zero_one_adam"         # adam | one_bit_adam | zero_one_adam
+    name: str = "zero_one_adam"         # any REGISTRY_NAMES entry
     lr: Callable = S.ConstantLr(1e-3)
     beta1: float = 0.9
     beta2: float = 0.999
     eps: float = 1e-8
     weight_decay: float = 0.0
-    # 0/1 Adam policies
+    # 0/1 policies (T_u local steps / T_v variance freezing)
     var_policy: Any = S.AdaptiveFreezePolicy(kappa=16)
     sync_policy: Any = S.LrProportionalSyncPolicy(
         warmup_steps=12500, double_every=32768, max_interval=16)
-    # 1-bit Adam full-precision stage length
+    # 1-bit full-precision stage length
     onebit_warmup: int = 16000
     # compression
     scale_mode: C.ScaleMode = "tensor"   # paper-faithful; "row" = optimized
@@ -68,6 +84,86 @@ class OptimizerConfig:
                                          # = flat (single-level) exchange.
 
 
+# ---------------------------------------------------------------------------
+# Registry: name -> composed transform
+# ---------------------------------------------------------------------------
+
+def _shared_kwargs(cfg: OptimizerConfig) -> Dict[str, Any]:
+    return dict(lr=cfg.lr, weight_decay=cfg.weight_decay,
+                scale_mode=cfg.scale_mode, quantize=cfg.quantize,
+                store_anchor=cfg.store_anchor, comm_dtype=cfg.comm_dtype,
+                state_dtype=cfg.state_dtype, use_pallas=cfg.use_pallas,
+                hierarchy=cfg.hierarchy)
+
+
+def _adam(cfg):
+    return adam_base(cfg.beta1, cfg.beta2, cfg.eps)
+
+
+def _lamb(cfg):
+    return lamb_base(cfg.beta1, cfg.beta2, cfg.eps)
+
+
+def _zero_one(base_fn):
+    def build(cfg):
+        return compressed_dp(base_fn(cfg), style="accumulate",
+                             sync_policy=cfg.sync_policy,
+                             var_policy=cfg.var_policy,
+                             **_shared_kwargs(cfg))
+    return build
+
+
+def _one_bit(base_fn):
+    def build(cfg):
+        return compressed_dp(base_fn(cfg), style="gradient",
+                             var_policy=S.FixedWarmupPolicy(
+                                 cfg.onebit_warmup),
+                             **_shared_kwargs(cfg))
+    return build
+
+
+def _mean(base_fn):
+    def build(cfg):
+        return compressed_dp(base_fn(cfg), style="mean",
+                             **_shared_kwargs(cfg))
+    return build
+
+
+_BUILDERS: Dict[str, Callable[[OptimizerConfig], CompressedDP]] = {
+    # uncompressed DP baselines (full-precision mean every step)
+    "adam": _mean(_adam),
+    "lamb": _mean(_lamb),
+    "momentum_sgd": _mean(lambda c: momentum_sgd_base(c.beta1)),
+    # 1-bit two-stage (full-precision warmup, then EF-compressed gradients)
+    "one_bit_adam": _one_bit(_adam),
+    "one_bit_lamb": _one_bit(_lamb),
+    # 0/1 local-step pipelines (paper Algorithm 1 over each base)
+    "zero_one_adam": _zero_one(_adam),
+    "zero_one_lamb": _zero_one(_lamb),
+    "zero_one_sgd": _zero_one(lambda c: momentum_sgd_base(c.beta1)),
+}
+
+REGISTRY_NAMES = tuple(sorted(_BUILDERS))
+
+# names predating the composable API; make_optimizer warns on these
+LEGACY_NAMES = ("adam", "one_bit_adam", "zero_one_adam")
+
+_LEGACY_SPELLING = {
+    "adam": 'compressed_dp(adam_base(...), style="mean", ...)',
+    "one_bit_adam": ('compressed_dp(adam_base(...), style="gradient", '
+                     'var_policy=FixedWarmupPolicy(T0), ...)'),
+    "zero_one_adam": 'compressed_dp(adam_base(...), ...)',
+}
+
+
+def transform_from_config(cfg: OptimizerConfig) -> CompressedDP:
+    """Resolve a registry name to its unbound composed transform."""
+    if cfg.name not in _BUILDERS:
+        raise ValueError(f"unknown optimizer {cfg.name!r}; "
+                         f"choose from {list(REGISTRY_NAMES)}")
+    return _BUILDERS[cfg.name](cfg)
+
+
 def tree_layouts(shapes, specs, n: int):
     """Per-leaf comm layouts. ``shapes`` is a tree of arrays or ShapeDtypeStructs."""
     def mk(x, spec):
@@ -80,23 +176,43 @@ def fill_like(tree, value):
     return jax.tree.map(lambda _: value, tree)
 
 
-def make_optimizer(cfg: OptimizerConfig, param_shapes, *, specs=None,
-                   dp_mask=None, n_workers: int, model_axis_sizes=None):
-    from repro.core import adam, one_bit_adam, zero_one_adam
-    if specs is None:
-        specs = fill_like(param_shapes, None)
-    if dp_mask is None:
-        dp_mask = fill_like(param_shapes, True)
-    ctors = {
-        "adam": adam.Adam,
-        "one_bit_adam": one_bit_adam.OneBitAdam,
-        "zero_one_adam": zero_one_adam.ZeroOneAdam,
-    }
-    if cfg.name not in ctors:
-        raise ValueError(f"unknown optimizer {cfg.name!r}; "
-                         f"choose from {sorted(ctors)}")
-    return ctors[cfg.name](cfg, param_shapes, specs, dp_mask, n_workers,
-                           model_axis_sizes)
+def build_optimizer(cfg, param_shapes, *, specs=None, dp_mask=None,
+                    n_workers: int, model_axis_sizes=None):
+    """Bind a transform (or a registry-named config) to a parameter tree.
+
+    ``cfg`` is either an unbound ``compressed_dp(...)`` transform or an
+    :class:`OptimizerConfig`. Never warns — this is the entry point the
+    trainer and new code use.
+    """
+    transform = (cfg if isinstance(cfg, CompressedDP)
+                 else transform_from_config(cfg))
+    return transform(param_shapes, specs=specs, dp_mask=dp_mask,
+                     n_workers=n_workers, model_axis_sizes=model_axis_sizes)
+
+
+def make_optimizer(cfg, param_shapes, *, specs=None, dp_mask=None,
+                   n_workers: int, model_axis_sizes=None):
+    """Deprecation shim for name-based construction.
+
+    Legacy names keep working but emit a ``DeprecationWarning`` pointing at
+    the composed spelling; the returned optimizer *is* the composed
+    equivalent (bitwise-identical trajectories for the compressed
+    pipelines). New code should call :func:`build_optimizer` or the
+    combinator directly.
+    """
+    if isinstance(cfg, CompressedDP):
+        return build_optimizer(cfg, param_shapes, specs=specs,
+                               dp_mask=dp_mask, n_workers=n_workers,
+                               model_axis_sizes=model_axis_sizes)
+    if cfg.name in LEGACY_NAMES:
+        warnings.warn(
+            f"make_optimizer(name={cfg.name!r}) is deprecated; build the "
+            f"composed transform instead: {_LEGACY_SPELLING[cfg.name]} "
+            f"(see repro.core.compressed)", DeprecationWarning,
+            stacklevel=2)
+    return build_optimizer(cfg, param_shapes, specs=specs, dp_mask=dp_mask,
+                           n_workers=n_workers,
+                           model_axis_sizes=model_axis_sizes)
 
 
 # ---------------------------------------------------------------------------

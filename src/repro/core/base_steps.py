@@ -1,0 +1,174 @@
+"""Base optimizer steps for the composable optimizer API.
+
+A *base step* describes the local, per-leaf half of an optimizer — the
+momentum update, the preconditioner that maps an accumulated buffer to a
+parameter movement, and the (optional) second-moment refresh — while the
+:func:`repro.core.compressed.compressed_dp` combinator owns everything
+distributed: comm-view layouts, error-feedback state, the T_u/T_v policy
+machines, anchors, hierarchy, and the Algorithm-2 compressed exchange.
+
+The contract that makes 0/1-style local stepping work for any base is
+*linearity of the preconditioner in its buffer argument* while the carried
+slots are frozen between syncs:
+
+    precond(a·x + b·y, slots) == a·precond(x, slots) + b·precond(y, slots)
+
+Under that contract ``x_{t+1/2} = x_{t'} − precond(u_{t+1/2})`` holds
+exactly between syncs, which is what lets the combinator sync the
+accumulated buffer ``u`` instead of the parameters (paper Algorithm 1,
+generalized). Adam satisfies it with ``buf / sqrt(v+eps)`` (v frozen by
+T_v), momentum-SGD trivially with the identity, and LAMB with a per-leaf
+trust-ratio scalar that is refreshed only at syncs (the 1-bit LAMB trick of
+freezing the layerwise scaling factors between full exchanges).
+
+Bases are plain frozen dataclasses — hashable, jit-static, and comparable,
+so they can key kernel dispatch (``kind``) and live inside combinator
+configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import compressor as C
+
+
+def _global_l2(x, model_axes) -> jnp.ndarray:
+    """L2 norm of a (natural-shape) leaf, correct under manual TP sharding."""
+    sq = jnp.sum(x.astype(jnp.float32) * x.astype(jnp.float32))
+    return jnp.sqrt(C._psum_model(sq, model_axes))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamBase:
+    """Adam's local half-step (no bias correction — paper Eq. 3 convention)."""
+
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+
+    kind: ClassVar[str] = "adam"
+    has_variance: ClassVar[bool] = True      # participates in T_v refreshes
+    has_trust: ClassVar[bool] = False        # layerwise trust-ratio scaling
+    needs_anchor: ClassVar[bool] = False
+    sync_slot_names: ClassVar[Tuple[str, ...]] = ()
+
+    def slot_specs(self) -> Dict[str, Tuple[str, float]]:
+        """name -> (shape kind, init value). ``view``: comm-view (DP) or
+        natural (non-DP) array per leaf; ``scalar``: per-leaf scalar,
+        DP leaves only."""
+        return {"m": ("view", 0.0), "v": ("view", 0.0)}
+
+    def precond_raw(self, buf, slots):
+        """Trust-free linear preconditioner (shared by every style)."""
+        return buf / jnp.sqrt(slots["v"] + self.eps)
+
+    def precond(self, buf, slots):
+        """Map a momentum-like buffer to a parameter movement. Linear in
+        ``buf``; uses only frozen slots."""
+        return self.precond_raw(buf, slots)
+
+    def update_variance(self, v, g):
+        return self.beta2 * v + (1 - self.beta2) * g * g
+
+    def refresh_sync_slots(self, slots, anchor_nat, ubar_view, gamma_total,
+                           layout, model_axes) -> Dict[str, jnp.ndarray]:
+        """Slot updates applied at a sync, before the synced movement is
+        taken with :meth:`precond` (e.g. LAMB's trust refresh). Default:
+        nothing."""
+        del slots, anchor_nat, ubar_view, gamma_total, layout, model_axes
+        return {}
+
+
+@dataclasses.dataclass(frozen=True)
+class LambBase(AdamBase):
+    """LAMB: Adam preconditioning scaled by a layerwise trust ratio
+    ``clip(||x|| / ||update||)`` (You et al., 2020; 1-bit LAMB: Li et al.,
+    2021).
+
+    In one-shot styles (``mean`` / ``gradient``) the trust ratio is
+    recomputed every step from the current parameters — plain (1-bit) LAMB.
+    In the ``accumulate`` (0/1) style it is a carried per-leaf slot frozen
+    between syncs and refreshed at each sync from the anchor ``x_{t'}`` and
+    the *rate-normalized* aggregate ``ū/(Σγ·sqrt(v+eps))`` — normalizing by
+    ``Σγ`` keeps the lr schedule in charge of the step size (otherwise the
+    trust ratio would cancel the accumulated lr). Requires
+    ``store_anchor=True``.
+    """
+
+    min_trust: float = 0.0
+    max_trust: float = 10.0
+
+    kind: ClassVar[str] = "lamb"
+    has_trust: ClassVar[bool] = True
+    needs_anchor: ClassVar[bool] = True
+    sync_slot_names: ClassVar[Tuple[str, ...]] = ("trust",)
+
+    def slot_specs(self):
+        return {"m": ("view", 0.0), "v": ("view", 0.0),
+                "trust": ("scalar", 1.0)}
+
+    def precond(self, buf, slots):
+        return slots["trust"] * self.precond_raw(buf, slots)
+
+    def trust_ratio(self, x_nat, upd_nat, model_axes):
+        """phi(||x||)/||upd|| clipped; 1.0 whenever either norm vanishes."""
+        xn = _global_l2(x_nat, model_axes)
+        un = _global_l2(upd_nat, model_axes)
+        ratio = jnp.clip(xn / jnp.where(un > 0, un, 1.0),
+                         self.min_trust, self.max_trust)
+        return jnp.where((xn > 0) & (un > 0), ratio, jnp.ones_like(ratio))
+
+    def refresh_sync_slots(self, slots, anchor_nat, ubar_view, gamma_total,
+                           layout, model_axes):
+        r = ubar_view / jnp.sqrt(slots["v"] + self.eps)
+        upd_nat = C.from_view(r, layout) / gamma_total
+        return {"trust": self.trust_ratio(anchor_nat, upd_nat, model_axes)}
+
+
+@dataclasses.dataclass(frozen=True)
+class MomentumSgdBase:
+    """Momentum SGD: the APMSqueeze/1-bit-SGD family's base step. No second
+    moment — composing it with ``compressed_dp`` skips T_v entirely (zero
+    variance AllReduce traffic)."""
+
+    beta1: float = 0.9
+
+    kind: ClassVar[str] = "sgd"
+    has_variance: ClassVar[bool] = False
+    has_trust: ClassVar[bool] = False
+    needs_anchor: ClassVar[bool] = False
+    sync_slot_names: ClassVar[Tuple[str, ...]] = ()
+
+    def slot_specs(self):
+        return {"m": ("view", 0.0)}
+
+    def precond_raw(self, buf, slots):
+        del slots
+        return buf
+
+    def precond(self, buf, slots):
+        del slots
+        return buf
+
+    def refresh_sync_slots(self, slots, anchor_nat, ubar_view, gamma_total,
+                           layout, model_axes):
+        del slots, anchor_nat, ubar_view, gamma_total, layout, model_axes
+        return {}
+
+
+def adam_base(beta1: float = 0.9, beta2: float = 0.999,
+              eps: float = 1e-8) -> AdamBase:
+    return AdamBase(beta1=beta1, beta2=beta2, eps=eps)
+
+
+def lamb_base(beta1: float = 0.9, beta2: float = 0.999, eps: float = 1e-8,
+              min_trust: float = 0.0, max_trust: float = 10.0) -> LambBase:
+    return LambBase(beta1=beta1, beta2=beta2, eps=eps,
+                    min_trust=min_trust, max_trust=max_trust)
+
+
+def momentum_sgd_base(beta1: float = 0.9) -> MomentumSgdBase:
+    return MomentumSgdBase(beta1=beta1)

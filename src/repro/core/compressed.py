@@ -1,0 +1,548 @@
+"""``compressed_dp``: compressed data-parallel sync as a composable transform.
+
+The paper's 0/1 Adam recipe — stale-state linearization + error-feedback
+1-bit sync + local steps — is not Adam-specific. This module factors the
+recipe into a combinator over *base steps* (:mod:`repro.core.base_steps`):
+
+    opt = compressed_dp(adam_base(), lr=..., sync_policy=..., var_policy=...)(
+        param_shapes, specs=specs, dp_mask=dp_mask, n_workers=n)
+    state = opt.init(params)
+    params, state, metrics = opt.step(comm, params, grads, state)
+
+Every bound optimizer implements the same **GradientTransform protocol**
+(``init`` / ``step`` written per worker, exactly like the legacy classes),
+so trainers, checkpointing, and the benchmarks are base-agnostic.
+
+Three sync styles, all owning the same layouts / EF state / hierarchy:
+
+* ``"accumulate"`` — paper Algorithm 1 generalized: local linearized
+  half-steps accumulate ``u``; on T_u steps ``u`` is 1-bit AllReduced
+  (Algorithm 2) and parameters re-anchor; on T_v steps the variance is
+  refreshed from a full-precision gradient mean. With ``adam_base`` this is
+  bitwise-identical to the legacy ``ZeroOneAdam`` (asserted in
+  tests/test_composed_equivalence.py); with ``lamb_base`` / ``momentum_sgd_base``
+  it yields 0/1-LAMB and 0/1-SGD.
+* ``"gradient"`` — the 1-bit Adam two-stage schedule (Algorithm 4):
+  full-precision gradient AllReduce while ``var_policy`` fires (the warmup
+  stage), EF-1-bit gradient AllReduce with frozen variance afterwards.
+  Bitwise-identical to the legacy ``OneBitAdam`` with
+  ``var_policy=FixedWarmupPolicy(onebit_warmup)`` at ``weight_decay=0``
+  (the legacy class never applied decay; this style does).
+* ``"mean"`` — the uncompressed baseline: full-precision gradient mean every
+  step, variance every step. ``compressed_dp(adam_base(), style="mean")``
+  is distributed Adam; with the other bases, distributed LAMB /
+  momentum-SGD.
+
+State is carried per leaf in comm-view shape for DP leaves (natural shape
+for ``dp_mask=False`` leaves, which take plain local base steps). The
+``slots`` dict holds whatever the base declares ("m", optionally "v",
+optionally per-leaf "trust" scalars), so one state type serves every base.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressor as C
+from repro.core import leafwise
+from repro.core import onebit_allreduce as AR
+from repro.core import schedules as S
+from repro.core.comm import Comm, Hierarchy
+
+STYLES = ("accumulate", "gradient", "mean")
+
+
+class CompressedDPState(NamedTuple):
+    step: jnp.ndarray
+    gamma_acc: jnp.ndarray    # sum of gamma since the last sync (accumulate)
+    sync_pstate: tuple        # T_u policy carried state (accumulate)
+    var_pstate: tuple         # T_v policy carried state
+    slots: Dict[str, list]    # base slots: "m" (+"v", +"trust"), per leaf
+    u: list                   # accumulated update views (accumulate style)
+    err_w: list               # worker-side EF (layout.ef_worker_shape)
+    err_s: list               # server-side EF (chunk shape)
+    anchor: list              # x_{t'} copies (accumulate + store_anchor)
+
+    # Convenience accessors so slot-based state reads like the legacy one.
+    @property
+    def m(self):
+        return self.slots["m"]
+
+    @property
+    def v(self):
+        return self.slots.get("v")
+
+
+@dataclasses.dataclass(frozen=True)
+class StateKind:
+    """Tag describing one optimizer-state leaf, for generic sharding-spec /
+    abstract-shape derivation (see train/sharding.py).
+
+    tags: ``scalar`` (replicated scalar), ``view`` (comm view for DP leaves,
+    natural for non-DP), ``chunk`` (server chunk, DP only), ``natural``
+    (param-shaped, DP only — anchors), ``leaf_scalar`` (per-worker scalar,
+    DP only — trust ratios). ``leaf`` indexes the flat param leaf."""
+
+    tag: str
+    leaf: Optional[int] = None
+
+
+_SCALAR = StateKind("scalar")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedDP:
+    """Unbound transform: a base step plus the distributed-sync policy.
+
+    Calling it on a parameter tree returns the bound
+    :class:`ComposedOptimizer` (the GradientTransform). Field defaults are
+    the paper's production values, mirroring ``OptimizerConfig``.
+    """
+
+    base: Any
+    style: str = "accumulate"
+    lr: Callable = S.ConstantLr(1e-3)
+    sync_policy: Any = S.LrProportionalSyncPolicy(
+        warmup_steps=12500, double_every=32768, max_interval=16)
+    var_policy: Any = S.AdaptiveFreezePolicy(kappa=16)
+    weight_decay: float = 0.0
+    scale_mode: C.ScaleMode = "tensor"
+    quantize: bool = True
+    store_anchor: bool = True
+    comm_dtype: Any = jnp.bfloat16
+    state_dtype: Any = jnp.float32
+    use_pallas: bool = False
+    hierarchy: Optional[Hierarchy] = None
+
+    def __post_init__(self):
+        if self.style not in STYLES:
+            raise ValueError(f"style={self.style!r}; choose from {STYLES}")
+        if (self.style == "accumulate" and self.base.needs_anchor
+                and not self.store_anchor):
+            raise ValueError(
+                f"{type(self.base).__name__} refreshes slots at syncs and "
+                f"therefore requires store_anchor=True in the accumulate "
+                f"style (the anchor recovery path assumes a fixed "
+                f"preconditioner between syncs)")
+        if self.style == "accumulate" and self.weight_decay:
+            raise ValueError(
+                "weight_decay is not supported in the accumulate style: a "
+                "decay term makes the local step affine in x, breaking the "
+                "u-linearization that lets syncs exchange the accumulated "
+                "buffer (x_{t+1/2} = x_{t'} - precond(u) no longer holds). "
+                "Use decoupled decay outside the optimizer, or the "
+                "gradient/mean styles.")
+
+    def __call__(self, param_shapes, *, specs=None, dp_mask=None,
+                 n_workers: int, model_axis_sizes=None):
+        return ComposedOptimizer(self, param_shapes, specs, dp_mask,
+                                 n_workers, model_axis_sizes)
+
+
+def compressed_dp(base, **kwargs) -> CompressedDP:
+    """Compose a base step with the compressed-DP sync machinery."""
+    return CompressedDP(base=base, **kwargs)
+
+
+class ComposedOptimizer:
+    """``compressed_dp(...)`` bound to a parameter tree (GradientTransform)."""
+
+    def __init__(self, cfg: CompressedDP, param_shapes, specs, dp_mask,
+                 n_workers, model_axis_sizes=None):
+        self.cfg = cfg
+        self.base = cfg.base
+        plan = leafwise.make_plan(param_shapes, specs, dp_mask, n_workers,
+                                  model_axis_sizes, cfg.hierarchy)
+        self.plan = plan
+        self.n = plan.n
+        self.hierarchy = plan.hierarchy
+        self.model_axes = plan.model_axes
+        self.treedef = plan.treedef
+        self.specs = plan.specs
+        self.dp_mask = plan.dp_mask
+        self.layouts = plan.layouts
+        self.vspecs = plan.vspecs
+        self.ar_cfg = leafwise.make_ar_cfg(
+            plan, scale_mode=cfg.scale_mode, quantize=cfg.quantize,
+            use_pallas=cfg.use_pallas, comm_dtype=cfg.comm_dtype)
+        self._slot_specs = self.base.slot_specs()
+        self._use_sync_policy = cfg.style == "accumulate"
+        self._use_var_policy = (cfg.style in ("accumulate", "gradient")
+                                and self.base.has_variance)
+        self._has_u = cfg.style == "accumulate"
+        self._has_ef = cfg.style in ("accumulate", "gradient")
+        self._has_anchor = self._has_u and cfg.store_anchor
+
+    def flat(self, tree):
+        return self.treedef.flatten_up_to(tree)
+
+    # ------------------------------------------------------------------ #
+    # state
+    # ------------------------------------------------------------------ #
+    def init(self, params) -> CompressedDPState:
+        cfg = self.cfg
+        sd = cfg.state_dtype
+        los, dps = self.layouts, self.dp_mask
+        ps = self.flat(params)
+
+        def slot(skind, init_val, p, lo, dp):
+            if skind == "scalar":
+                return (jnp.full((), init_val, jnp.float32) if dp else None)
+            return jnp.full(lo.view_shape if dp else p.shape, init_val, sd)
+
+        slots = {name: [slot(sk, iv, p, lo, dp)
+                        for p, lo, dp in zip(ps, los, dps)]
+                 for name, (sk, iv) in self._slot_specs.items()}
+        return CompressedDPState(
+            step=jnp.zeros((), jnp.int32),
+            gamma_acc=jnp.zeros((), jnp.float32),
+            sync_pstate=(cfg.sync_policy.init()
+                         if self._use_sync_policy else ()),
+            var_pstate=(cfg.var_policy.init()
+                        if self._use_var_policy else ()),
+            slots=slots,
+            u=[jnp.zeros(lo.view_shape, sd) if (dp and self._has_u) else None
+               for lo, dp in zip(los, dps)],
+            err_w=[jnp.zeros(lo.ef_worker_shape, sd)
+                   if (dp and self._has_ef) else None
+                   for lo, dp in zip(los, dps)],
+            err_s=[jnp.zeros(lo.chunk_shape, sd)
+                   if (dp and self._has_ef) else None
+                   for lo, dp in zip(los, dps)],
+            anchor=[(p * 1.0).astype(p.dtype)
+                    if (dp and self._has_anchor) else None
+                    for p, dp in zip(ps, dps)],
+        )
+
+    def state_kinds(self) -> CompressedDPState:
+        """Pytree mirroring the state treedef with :class:`StateKind`
+        leaves (same ``None`` placements as :meth:`init`)."""
+        cfg = self.cfg
+        dps = self.dp_mask
+        slots = {}
+        for name, (sk, _) in self._slot_specs.items():
+            if sk == "scalar":
+                slots[name] = [StateKind("leaf_scalar", i) if dp else None
+                               for i, dp in enumerate(dps)]
+            else:
+                slots[name] = [StateKind("view", i)
+                               for i in range(len(dps))]
+        return CompressedDPState(
+            step=_SCALAR, gamma_acc=_SCALAR,
+            sync_pstate=tuple(_SCALAR for _ in (
+                cfg.sync_policy.init() if self._use_sync_policy else ())),
+            var_pstate=tuple(_SCALAR for _ in (
+                cfg.var_policy.init() if self._use_var_policy else ())),
+            slots=slots,
+            u=[StateKind("view", i) if (dp and self._has_u) else None
+               for i, dp in enumerate(dps)],
+            err_w=[StateKind("view", i) if (dp and self._has_ef) else None
+                   for i, dp in enumerate(dps)],
+            err_s=[StateKind("chunk", i) if (dp and self._has_ef) else None
+                   for i, dp in enumerate(dps)],
+            anchor=[StateKind("natural", i)
+                    if (dp and self._has_anchor) else None
+                    for i, dp in enumerate(dps)],
+        )
+
+    def _slots32(self, slots, i):
+        return {name: (slots[name][i].astype(jnp.float32)
+                       if slots[name][i] is not None else None)
+                for name in slots}
+
+    # ------------------------------------------------------------------ #
+    # step
+    # ------------------------------------------------------------------ #
+    def step(self, comm: Comm, params, grads, state: CompressedDPState,
+             worker_index=None):
+        if self.cfg.style == "accumulate":
+            return self._step_accumulate(comm, params, grads, state,
+                                         worker_index)
+        return self._step_sync(comm, params, grads, state, worker_index)
+
+    # --- accumulate: paper Algorithm 1, generalized over bases ---------- #
+    def _step_accumulate(self, comm, params, grads, state, worker_index):
+        cfg, base = self.cfg, self.base
+        t = state.step
+        lr = cfg.lr(t).astype(jnp.float32)
+
+        do_sync, sync_ps, interval = cfg.sync_policy.step(state.sync_pstate,
+                                                          t)
+        if self._use_var_policy:
+            do_var, var_ps = cfg.var_policy.step(state.var_pstate, t,
+                                                 interval)
+        else:
+            do_var, var_ps = jnp.asarray(False), state.var_pstate
+
+        los, dps = self.layouts, self.dp_mask
+        xs, gs = self.flat(params), self.flat(grads)
+        gv = [C.constrain(C.to_view(g.astype(jnp.float32), lo), vs) if dp
+              else g.astype(jnp.float32)
+              for g, lo, dp, vs in zip(gs, los, dps, self.vspecs)]
+        gamma_total = state.gamma_acc + lr     # sum of gamma over [t', t]
+
+        # --- local half-step for every leaf ----------------------------
+        # DP leaves with use_pallas route the elementwise chain through the
+        # fused kernel (keyed on the base kind); the unfused jnp chain is
+        # f32-identical.
+        if cfg.use_pallas:
+            from repro.kernels import dispatch as K
+        x_half, m_half, u_half = [], [], []
+        for i, (x, g, lo, dp, vs) in enumerate(zip(xs, gv, los, dps,
+                                                   self.vspecs)):
+            s32 = self._slots32(state.slots, i)
+            m32 = s32["m"]
+            u = state.u[i]
+            if dp and cfg.use_pallas and K.kernel_safe(vs):
+                mh, u_new, delta = K.fused_local_step_view(
+                    g, m32, u.astype(jnp.float32), s32.get("v"), lr,
+                    base.beta1, getattr(base, "eps", 0.0), lo,
+                    kind=base.kind)
+                if base.has_trust:
+                    delta = s32["trust"] * delta
+                delta_nat = C.from_view(delta, lo)
+            else:
+                mh = base.beta1 * m32 + (1 - base.beta1) * g
+                if not dp and base.has_trust:
+                    # non-DP leaves never sync: plain local base step with a
+                    # per-step trust ratio (ordinary LAMB behaviour)
+                    upd = base.precond_raw(mh, s32)
+                    trust = base.trust_ratio(x.astype(jnp.float32), upd,
+                                             self.model_axes)
+                    delta = lr * trust * upd
+                else:
+                    delta = base.precond(lr * mh, s32)
+                delta_nat = C.from_view(delta, lo) if dp else delta
+                u_new = (u.astype(jnp.float32) + lr * mh) if dp else None
+            x_half.append((x.astype(jnp.float32) - delta_nat).astype(x.dtype))
+            m_half.append(mh)
+            u_half.append(u_new)
+
+        dp_idx = [i for i, dp in enumerate(dps) if dp]
+        use_anchor = cfg.store_anchor
+        sync_names = tuple(base.sync_slot_names)
+
+        # --- T_u branch: 1-bit sync of the accumulated buffer ----------
+        def sync_branch(op):
+            xh, mh, uh, ew, es, anc = op[:6]
+            extra_in = op[6:]
+            nx, nm, nu, nw, ns = list(xh), list(mh), [None] * len(uh), \
+                list(ew), list(es)
+            na = list(anc)
+            nextra = [list(lst) for lst in extra_in]
+            for k, i in enumerate(dp_idx):
+                lo = self.layouts[i]
+                ubar, ef = AR.onebit_allreduce_view(
+                    comm, uh[k], AR.EFState(ew[k], es[k]), lo, self.ar_cfg,
+                    vspec=self.vspecs[i], worker_index=worker_index)
+                ubar = ubar.astype(jnp.float32)
+                nm[k] = ubar / gamma_total
+                s32 = self._slots32(state.slots, i)
+                anc32 = (anc[k].astype(jnp.float32) if use_anchor else None)
+                s32 = {**s32, **base.refresh_sync_slots(
+                    s32, anc32, ubar, gamma_total, lo, self.model_axes)}
+                if use_anchor:
+                    # x_{t+1} = x_{t'} - precond(ubar): bitwise identical on
+                    # all workers (ubar, the anchor, and the slots are
+                    # replicated).
+                    nx[k] = (anc32
+                             - C.from_view(base.precond(ubar, s32), lo)
+                             ).astype(xh[k].dtype)
+                    na[k] = nx[k]
+                else:
+                    corr = base.precond(uh[k] - ubar, s32)
+                    nx[k] = (xh[k].astype(jnp.float32)
+                             + C.from_view(corr, lo)).astype(xh[k].dtype)
+                nu[k] = jnp.zeros_like(uh[k])
+                nw[k], ns[k] = ef.err_worker, ef.err_server
+                for j, name in enumerate(sync_names):
+                    nextra[j][k] = s32[name]
+            return tuple([nx, nm, nu, nw, ns, na] + nextra)
+
+        def local_branch(op):
+            return tuple(list(lst) for lst in op)
+
+        op = tuple([[x_half[i] for i in dp_idx],
+                    [m_half[i] for i in dp_idx],
+                    [u_half[i] for i in dp_idx],
+                    [state.err_w[i] for i in dp_idx],
+                    [state.err_s[i] for i in dp_idx],
+                    [state.anchor[i] for i in dp_idx]]
+                   + [[state.slots[name][i].astype(jnp.float32)
+                       for i in dp_idx] for name in sync_names])
+        res = jax.lax.cond(do_sync, sync_branch, local_branch, op)
+        sx, sm, su, sw, ss, sa = res[:6]
+        s_extra = res[6:]
+
+        new_x, new_m = list(x_half), list(m_half)
+        new_u = list(u_half)
+        new_ew, new_es = list(state.err_w), list(state.err_s)
+        new_anchor = list(state.anchor)
+        new_sync_slots = {name: list(state.slots[name])
+                          for name in sync_names}
+        for k, i in enumerate(dp_idx):
+            new_x[i], new_m[i], new_u[i] = sx[k], sm[k], su[k]
+            new_ew[i], new_es[i] = sw[k], ss[k]
+            new_anchor[i] = sa[k]
+            for j, name in enumerate(sync_names):
+                new_sync_slots[name][i] = s_extra[j][k]
+
+        # --- T_v branch: full-precision variance refresh ----------------
+        if base.has_variance:
+            def var_branch(vop):
+                out = []
+                for k, i in enumerate(dp_idx):
+                    gbar = AR.fullprec_allreduce_view(
+                        comm, gv[i], cfg.comm_dtype, vspec=self.vspecs[i],
+                        hierarchy=self.hierarchy, layout=self.layouts[i])
+                    out.append(base.update_variance(
+                        vop[k].astype(jnp.float32), gbar))
+                return out
+
+            def keep_branch(vop):
+                return [v.astype(jnp.float32) for v in vop]
+
+            v_dp = jax.lax.cond(do_var, var_branch, keep_branch,
+                                [state.slots["v"][i] for i in dp_idx])
+            new_v = list(state.slots["v"])
+            for k, i in enumerate(dp_idx):
+                new_v[i] = v_dp[k].astype(state.slots["v"][i].dtype)
+            # non-DP leaves: plain local base step (v every step)
+            for i, dp in enumerate(dps):
+                if dp:
+                    continue
+                v32 = state.slots["v"][i].astype(jnp.float32)
+                new_v[i] = base.update_variance(v32, gv[i]).astype(
+                    state.slots["v"][i].dtype)
+        else:
+            new_v = None
+
+        new_gamma = jnp.where(do_sync, 0.0, gamma_total)
+        sd = cfg.state_dtype
+        new_slots = dict(state.slots)
+        new_slots["m"] = [m.astype(sd) for m in new_m]
+        if new_v is not None:
+            new_slots["v"] = new_v
+        for name in sync_names:
+            new_slots[name] = new_sync_slots[name]
+        new_state = CompressedDPState(
+            step=t + 1,
+            gamma_acc=new_gamma,
+            sync_pstate=sync_ps,
+            var_pstate=var_ps,
+            slots=new_slots,
+            u=[u.astype(sd) if u is not None else None for u in new_u],
+            err_w=[w.astype(sd) if w is not None else None for w in new_ew],
+            err_s=[s.astype(sd) if s is not None else None for s in new_es],
+            anchor=new_anchor,
+        )
+        metrics = {"lr": lr, "synced": do_sync, "var_round": do_var,
+                   "interval": interval}
+        return jax.tree.unflatten(self.treedef, new_x), new_state, metrics
+
+    # --- gradient / mean: sync the gradient itself every step ----------- #
+    def _step_sync(self, comm, params, grads, state, worker_index):
+        cfg, base = self.cfg, self.base
+        t = state.step
+        lr = cfg.lr(t).astype(jnp.float32)
+
+        los, dps = self.layouts, self.dp_mask
+        xs, gs = self.flat(params), self.flat(grads)
+        gv = [C.constrain(C.to_view(g.astype(jnp.float32), lo), vs) if dp
+              else g.astype(jnp.float32)
+              for g, lo, dp, vs in zip(gs, los, dps, self.vspecs)]
+        dp_idx = [i for i, dp in enumerate(dps) if dp]
+
+        def full(gs_dp):
+            return [AR.fullprec_allreduce_view(comm, g, cfg.comm_dtype,
+                                               vspec=self.vspecs[i],
+                                               hierarchy=self.hierarchy,
+                                               layout=self.layouts[i])
+                    for g, i in zip(gs_dp, dp_idx)]
+
+        if cfg.style == "gradient":
+            if self._use_var_policy:
+                do_var, var_ps = cfg.var_policy.step(
+                    state.var_pstate, t, jnp.ones((), jnp.int32))
+            else:
+                do_var, var_ps = jnp.asarray(False), state.var_pstate
+
+            def full_branch(op):
+                gs_dp, ew, es = op
+                return full(gs_dp), ew, es
+
+            def onebit_branch(op):
+                gs_dp, ew, es = op
+                outs, news_w, news_s = [], [], []
+                for g, w, s, i in zip(gs_dp, ew, es, dp_idx):
+                    o, ef = AR.onebit_allreduce_view(
+                        comm, g, AR.EFState(w, s), self.layouts[i],
+                        self.ar_cfg, vspec=self.vspecs[i],
+                        worker_index=worker_index)
+                    outs.append(o.astype(jnp.float32))
+                    news_w.append(ef.err_worker)
+                    news_s.append(ef.err_server)
+                return outs, news_w, news_s
+
+            op = ([gv[i] for i in dp_idx],
+                  [state.err_w[i] for i in dp_idx],
+                  [state.err_s[i] for i in dp_idx])
+            agg_dp, new_ew_dp, new_es_dp = jax.lax.cond(
+                do_var, full_branch, onebit_branch, op)
+            new_ew, new_es = list(state.err_w), list(state.err_s)
+            for k, i in enumerate(dp_idx):
+                new_ew[i], new_es[i] = new_ew_dp[k], new_es_dp[k]
+        else:  # mean: uncompressed baseline, no EF state at all
+            do_var = jnp.asarray(base.has_variance)
+            var_ps = state.var_pstate
+            agg_dp = full([gv[i] for i in dp_idx])
+            new_ew, new_es = list(state.err_w), list(state.err_s)
+
+        gbar = list(gv)
+        for k, i in enumerate(dp_idx):
+            gbar[i] = agg_dp[k]
+
+        wd = cfg.weight_decay
+        new_x = []
+        new_slots = {name: list(vals) for name, vals in state.slots.items()}
+        for i, (x, g, lo, dp) in enumerate(zip(xs, gbar, los, dps)):
+            s32 = self._slots32(state.slots, i)
+            m32 = s32["m"]
+            nm = base.beta1 * m32 + (1 - base.beta1) * g
+            if base.has_variance:
+                v32 = s32["v"]
+                if dp and cfg.style == "gradient":
+                    nv = jnp.where(do_var, base.update_variance(v32, g), v32)
+                else:  # mean style / local leaves: v every step
+                    nv = base.update_variance(v32, g)
+                new_slots["v"][i] = nv.astype(state.slots["v"][i].dtype)
+            x32 = x.astype(jnp.float32)
+            if base.has_trust:
+                # LAMB: trust ratio from the *unscaled* update so the lr
+                # schedule keeps control of the step size
+                upd = base.precond_raw(nm, s32)
+                upd = C.from_view(upd, lo) if dp else upd
+                if wd:
+                    upd = upd + wd * x32
+                trust = base.trust_ratio(x32, upd, self.model_axes)
+                delta = lr * trust * upd
+            else:
+                delta = base.precond(lr * nm, s32)
+                delta = C.from_view(delta, lo) if dp else delta
+                if wd:
+                    delta = delta + lr * wd * x32
+            new_x.append((x32 - delta).astype(x.dtype))
+            new_slots["m"][i] = nm.astype(state.slots["m"][i].dtype)
+
+        metrics = {"lr": lr, "synced": jnp.asarray(True),
+                   "var_round": do_var,
+                   "interval": jnp.ones((), jnp.int32)}
+        new_state = CompressedDPState(
+            step=t + 1, gamma_acc=state.gamma_acc,
+            sync_pstate=state.sync_pstate, var_pstate=var_ps,
+            slots=new_slots, u=list(state.u), err_w=new_ew, err_s=new_es,
+            anchor=list(state.anchor))
+        return jax.tree.unflatten(self.treedef, new_x), new_state, metrics

@@ -2,6 +2,12 @@
 ``T_v = {0..T0-1}``: a full-precision stage that pre-conditions the variance,
 then a compression stage with frozen variance and error-feedback 1-bit
 AllReduce of the gradients.
+
+.. deprecated:: Superseded by the composable API —
+   ``compressed_dp(adam_base(...), style="gradient",
+   var_policy=FixedWarmupPolicy(T0), ...)`` reproduces this class bitwise
+   (tests/test_composed_equivalence.py). Retained as the frozen reference
+   implementation those equivalence tests pin against.
 """
 from __future__ import annotations
 
@@ -11,8 +17,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compressor as C
+from repro.core import leafwise
 from repro.core import onebit_allreduce as AR
-from repro.core.comm import Comm, norm_hierarchy
+from repro.core.comm import Comm
 
 
 class OneBitAdamState(NamedTuple):
@@ -27,29 +34,19 @@ class OneBitAdam:
     def __init__(self, cfg, param_shapes, specs, dp_mask, n_workers,
                  model_axis_sizes=None):
         self.cfg = cfg
-        self.n = n_workers
-        self.model_axes = tuple((model_axis_sizes or {}).keys())
-        self.hierarchy = norm_hierarchy(getattr(cfg, "hierarchy", None),
-                                        n_workers)
-        leaves, self.treedef = jax.tree.flatten(param_shapes)
-        self.specs = self.treedef.flatten_up_to(specs)
-        self.dp_mask = self.treedef.flatten_up_to(dp_mask)
-        self.layouts = [
-            C.make_layout(l.shape, s, n_workers,
-                          rest_factor=C.spec_model_factor(
-                              s, model_axis_sizes or {}),
-                          force_flatten=bool(model_axis_sizes),
-                          n_inner=self.hierarchy.inner if self.hierarchy
-                          else 1)
-            for l, s in zip(leaves, self.specs)]
-        self.vspecs = [C.view_spec_entries(lo, sp)
-                       for lo, sp in zip(self.layouts, self.specs)]
-        self.ar_cfg = AR.OneBitConfig(scale_mode=cfg.scale_mode,
-                                      quantize=cfg.quantize,
-                                      model_axes=self.model_axes,
-                                      use_pallas=cfg.use_pallas,
-                                      hierarchy=self.hierarchy,
-                                      comm_dtype=cfg.comm_dtype)
+        plan = leafwise.make_plan(param_shapes, specs, dp_mask, n_workers,
+                                  model_axis_sizes, cfg.hierarchy)
+        self.n = plan.n
+        self.model_axes = plan.model_axes
+        self.hierarchy = plan.hierarchy
+        self.treedef = plan.treedef
+        self.specs = plan.specs
+        self.dp_mask = plan.dp_mask
+        self.layouts = plan.layouts
+        self.vspecs = plan.vspecs
+        self.ar_cfg = leafwise.make_ar_cfg(
+            plan, scale_mode=cfg.scale_mode, quantize=cfg.quantize,
+            use_pallas=cfg.use_pallas, comm_dtype=cfg.comm_dtype)
 
     def flat(self, tree):
         return self.treedef.flatten_up_to(tree)

@@ -217,16 +217,27 @@ def decompress_view(packed, scales, layout: C.LeafLayout,
 
 
 def fused_local_step_view(g, m, u, v, lr, beta1, eps,
-                          layout: C.LeafLayout):
-    """Fused 0/1 Adam local half-step over one leaf's comm view.
+                          layout: C.LeafLayout, kind: str = "adam"):
+    """Fused local half-step over one leaf's comm view, keyed on the base
+    kind ("adam" | "lamb" | "sgd" — see repro.core.base_steps).
 
     Returns (m', u', delta) in view shape — identical math to the unfused
-    three-sweep XLA chain, in one VMEM pass.
+    three-sweep XLA chain, in one VMEM pass. "adam" and "lamb" share the
+    variance-preconditioned kernel (``v`` required; the caller applies the
+    LAMB trust scalar to ``delta`` afterwards); "sgd" uses the no-variance
+    kernel (``v`` ignored, may be None).
     """
     rows, cols = C.view_rows_cols(layout)
     vs = layout.view_shape
     r2 = lambda a: a.reshape(rows, cols)
     block = (_largest_divisor(rows, 8), _largest_divisor(cols, 1024))
-    mh2, uh2, d2 = ops.fused_local_step(r2(g), r2(m), r2(u), r2(v), lr,
-                                        beta1, eps, block=block)
+    if kind == "sgd":
+        mh2, uh2, d2 = ops.fused_local_step_sgd(r2(g), r2(m), r2(u), lr,
+                                                beta1, block=block)
+    elif kind in ("adam", "lamb"):
+        mh2, uh2, d2 = ops.fused_local_step(r2(g), r2(m), r2(u), r2(v), lr,
+                                            beta1, eps, block=block)
+    else:
+        raise ValueError(f"unknown base kind {kind!r} for the fused "
+                         f"local step")
     return mh2.reshape(vs), uh2.reshape(vs), d2.reshape(vs)

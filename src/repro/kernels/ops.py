@@ -71,3 +71,12 @@ def fused_local_step(g, m, u, v, lr, beta1: float = 0.9, eps: float = 1e-8,
         interpret = _interpret_default()
     return _fa.fused_local_step(g, m, u, v, lr, beta1, eps=eps, block=block,
                                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("beta1", "block", "interpret"))
+def fused_local_step_sgd(g, m, u, lr, beta1: float = 0.9,
+                         block=(8, 1024), interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _fa.fused_local_step_sgd(g, m, u, lr, beta1, block=block,
+                                    interpret=interpret)

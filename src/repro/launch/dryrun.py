@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ALL_SHAPES, ASSIGNED, get, list_archs
-from repro.core import OptimizerConfig, schedules as S
+from repro.core import OptimizerConfig, REGISTRY_NAMES, schedules as S
 from repro.launch import shapes as SH
 from repro.launch.mesh import make_production_mesh, worker_axes
 from repro.models import transformer as T
@@ -400,7 +400,7 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--optimizer", default="zero_one_adam",
-                    choices=["adam", "one_bit_adam", "zero_one_adam"])
+                    choices=list(REGISTRY_NAMES))
     ap.add_argument("--scale-mode", default="tensor",
                     choices=["tensor", "chunk", "row"])
     ap.add_argument("--micro", type=int, default=None)

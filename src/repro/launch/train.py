@@ -23,8 +23,8 @@ import numpy as np
 
 from repro.checkpointing import io as ckpt_io
 from repro.configs import get
-from repro.core import (Hierarchy, OptimizerConfig, comm_accounting,
-                        schedules as S)
+from repro.core import (Hierarchy, OptimizerConfig, REGISTRY_NAMES,
+                        comm_accounting, schedules as S)
 from repro.data import DataConfig, SyntheticLM
 from repro.train import Trainer, TrainerConfig
 
@@ -53,7 +53,7 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke config (CPU-friendly)")
     ap.add_argument("--optimizer", default="zero_one_adam",
-                    choices=["adam", "one_bit_adam", "zero_one_adam"])
+                    choices=list(REGISTRY_NAMES))
     ap.add_argument("--mode", default="single",
                     choices=["single", "sim", "mesh"])
     ap.add_argument("--workers", type=int, default=4)

@@ -15,18 +15,21 @@ Storage layout:
 ``inner_*`` variants keep only the worker axes (what shard_map in_specs
 are allowed to mention); model-axis sharding rides along on the argument
 shardings (partial-manual shard_map).
+
+State specs are derived *generically* from the optimizer's
+``state_kinds()`` tree (see repro.core.compressed.StateKind): every state
+leaf carries a tag — scalar / view / chunk / natural / leaf_scalar — plus
+the flat param-leaf index it belongs to, so one derivation serves every
+composed optimizer (any base, any style) with no per-class branching.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import compressor as C
-from repro.core.adam import Adam, AdamState
-from repro.core.one_bit_adam import OneBitAdam, OneBitAdamState
-from repro.core.zero_one_adam import ZeroOneAdam, ZeroOneAdamState
 
 
 def _entries(spec) -> Tuple:
@@ -58,11 +61,6 @@ def param_inner_spec(dp: bool, ep_axis: Optional[int], W: Tuple,
     return P(*((None,) * ax + (ep_axes,)))
 
 
-def _drop_model(spec: P) -> P:
-    """Keep only worker-axis entries (for shard_map in/out specs)."""
-    return spec
-
-
 class TreeSpecs:
     """Per-leaf spec derivation shared by trainer and dry-run."""
 
@@ -89,106 +87,46 @@ class TreeSpecs:
         shard_map: worker axes are already manual in the outer context)."""
         return [P(*pd.spec) if pd.spec else P() for pd in self.pds]
 
+    # ---- optimizer state (generic over state_kinds) ----------------------
+    def _leaf_model_entries(self, kind):
+        pd = self.pds[kind.leaf]
+        spec = tuple(pd.spec) if pd.spec else None
+        lo = self.opt.layouts[kind.leaf]
+        if not pd.dp or kind.tag == "natural":
+            return _entries(spec)
+        if kind.tag == "view":
+            return C.view_spec_entries(lo, spec)
+        if kind.tag == "chunk":
+            return C.chunk_spec_entries(lo, spec)
+        return ()  # leaf_scalar
+
     def state_model_specs(self):
         """Model-axis-only specs matching the optimizer state structure."""
-        opt = self.opt
+        def f(k):
+            if k.tag in ("scalar", "leaf_scalar"):
+                return P()
+            return P(*self._leaf_model_entries(k))
 
-        def view_e(i):
-            return P(*C.view_spec_entries(opt.layouts[i],
-                                          tuple(self.pds[i].spec)
-                                          if self.pds[i].spec else None))
+        return jax.tree.map(f, self.opt.state_kinds())
 
-        def chunk_e(i):
-            return P(*C.chunk_spec_entries(opt.layouts[i],
-                                           tuple(self.pds[i].spec)
-                                           if self.pds[i].spec else None))
-
-        def nat_e(i):
-            pd = self.pds[i]
-            return P(*pd.spec) if pd.spec else P()
-
-        n = len(self.pds)
-        mv = [view_e(i) if self.pds[i].dp else nat_e(i) for i in range(n)]
-        u = [view_e(i) if self.pds[i].dp else None for i in range(n)]
-        es = [chunk_e(i) if self.pds[i].dp else None for i in range(n)]
-        if isinstance(opt, Adam):
-            nat = [nat_e(i) for i in range(n)]
-            return AdamState(step=P(), m=nat, v=nat)
-        if isinstance(opt, OneBitAdam):
-            return OneBitAdamState(step=P(), m=mv, v=mv, err_w=u, err_s=es)
-        if isinstance(opt, ZeroOneAdam):
-            ps = opt.cfg.sync_policy.init()
-            vs = opt.cfg.var_policy.init()
-            anc = [nat_e(i) if (self.pds[i].dp and opt.cfg.store_anchor)
-                   else None for i in range(n)]
-            return ZeroOneAdamState(
-                step=P(), gamma_acc=P(),
-                sync_pstate=tuple(P() for _ in ps),
-                var_pstate=tuple(P() for _ in vs),
-                m=mv, v=mv, u=u, err_w=u, err_s=es, anchor=anc)
-        raise TypeError(type(opt))
-
-    # ---- optimizer state -------------------------------------------------
-    def _leaf_state_specs(self, kind: str):
-        """kind: view | chunk | natural — full and inner specs per leaf."""
-        full, inner = [], []
-        for pd, lo in zip(self.pds, self.opt.layouts):
-            spec = tuple(pd.spec) if pd.spec else None
-            if pd.dp:
-                if kind == "view":
-                    e = C.view_spec_entries(lo, spec)
-                elif kind == "chunk":
-                    e = C.chunk_spec_entries(lo, spec)
-                else:
-                    e = _entries(spec)
-                full.append(P(self.W, *e))
-                inner.append(P(self.W))
-            else:
-                full.append(param_full_spec(spec, False, pd.ep_axis, self.W,
-                                            self.ep_axes))
-                inner.append(param_inner_spec(False, pd.ep_axis, self.W,
-                                              self.ep_axes))
-        return full, inner
+    def _spec_pair(self, k):
+        """(full, inner) specs for one tagged state leaf."""
+        if k.tag == "scalar":
+            return P(), P()
+        pd = self.pds[k.leaf]
+        if pd.dp:
+            # per-worker state: leading worker axis, model entries ride along
+            return (P(self.W, *self._leaf_model_entries(k)), P(self.W))
+        spec = tuple(pd.spec) if pd.spec else None
+        return (param_full_spec(spec, False, pd.ep_axis, self.W,
+                                self.ep_axes),
+                param_inner_spec(False, pd.ep_axis, self.W, self.ep_axes))
 
     def state_specs(self):
         """(full_specs, inner_specs) trees matching the optimizer state."""
-        opt = self.opt
-        mv_f, mv_i = self._leaf_state_specs("view")
-        nat_f, nat_i = self._leaf_state_specs("natural")
-        ch_f, ch_i = self._leaf_state_specs("chunk")
-
-        def dp_only(lst):
-            return [x if pd.dp else None
-                    for x, pd in zip(lst, self.pds)]
-
-        if isinstance(opt, Adam):
-            full = AdamState(step=P(), m=nat_f, v=nat_f)
-            inner = AdamState(step=P(), m=nat_i, v=nat_i)
-        elif isinstance(opt, OneBitAdam):
-            full = OneBitAdamState(step=P(), m=mv_f, v=mv_f,
-                                   err_w=dp_only(mv_f), err_s=dp_only(ch_f))
-            inner = OneBitAdamState(step=P(), m=mv_i, v=mv_i,
-                                    err_w=dp_only(mv_i),
-                                    err_s=dp_only(ch_i))
-        elif isinstance(opt, ZeroOneAdam):
-            ps = opt.cfg.sync_policy.init()
-            vs = opt.cfg.var_policy.init()
-            sync_spec = tuple(P() for _ in ps)
-            var_spec = tuple(P() for _ in vs)
-            anchor_f = [nat_f[i] if (pd.dp and opt.cfg.store_anchor)
-                        else None for i, pd in enumerate(self.pds)]
-            anchor_i = [nat_i[i] if (pd.dp and opt.cfg.store_anchor)
-                        else None for i, pd in enumerate(self.pds)]
-            full = ZeroOneAdamState(
-                step=P(), gamma_acc=P(), sync_pstate=sync_spec,
-                var_pstate=var_spec, m=mv_f, v=mv_f, u=dp_only(mv_f),
-                err_w=dp_only(mv_f), err_s=dp_only(ch_f), anchor=anchor_f)
-            inner = ZeroOneAdamState(
-                step=P(), gamma_acc=P(), sync_pstate=sync_spec,
-                var_pstate=var_spec, m=mv_i, v=mv_i, u=dp_only(mv_i),
-                err_w=dp_only(mv_i), err_s=dp_only(ch_i), anchor=anchor_i)
-        else:
-            raise TypeError(type(opt))
+        kinds = self.opt.state_kinds()
+        full = jax.tree.map(lambda k: self._spec_pair(k)[0], kinds)
+        inner = jax.tree.map(lambda k: self._spec_pair(k)[1], kinds)
         return full, inner
 
     # ---- convenience -----------------------------------------------------

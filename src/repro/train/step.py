@@ -63,9 +63,10 @@ class Trainer:
         # Two-level (intra-pod x inter-pod) topology for the compressed
         # optimizer exchange. In mesh mode the hierarchy must name a split
         # of the worker axes; in sim mode both levels are materialized as
-        # nested vmap axes carrying the same names.
-        self.hierarchy = norm_hierarchy(getattr(opt_cfg, "hierarchy", None),
-                                        self.n_workers)
+        # nested vmap axes carrying the same names. (opt_cfg is either an
+        # OptimizerConfig or an unbound compressed_dp transform — both
+        # always carry the hierarchy field.)
+        self.hierarchy = norm_hierarchy(opt_cfg.hierarchy, self.n_workers)
         if self.hierarchy is not None:
             h = self.hierarchy
             if mesh is not None:
@@ -115,7 +116,7 @@ class Trainer:
         self.inner_abstract = self._inner_abstract()
         specs_tree = param_specs(self.template)
         dpm_tree = tmpl_dp_mask(self.template)
-        self.opt = opt_api.make_optimizer(
+        self.opt = opt_api.build_optimizer(
             opt_cfg, self.inner_abstract, specs=specs_tree,
             dp_mask=dpm_tree, n_workers=self.n_workers,
             model_axis_sizes=self.model_sizes)
@@ -503,13 +504,17 @@ class Trainer:
     def _stack_state_abstract(self, state_local):
         """Globalize abstract state: grow model-sharded dims back to global,
         add the worker axis to per-worker (DP) leaves, re-globalize the
-        expert axis of EP leaves."""
+        expert axis of EP leaves. Fully generic: driven by the optimizer's
+        ``state_kinds()`` tags, so any composed optimizer (any base, any
+        style) globalizes without per-class branching."""
         n = self.n_workers
+        kinds = self.opt.state_kinds()
         model_specs = self.tree_specs.state_model_specs()
 
-        def glob(x, ms, pd):
-            if x is None:
-                return None
+        def glob(x, k, ms):
+            if k.tag == "scalar":
+                return x
+            pd = self.pd_leaves[k.leaf]
             shape = self._grow_model(x.shape, tuple(ms) if ms else None)
             if pd.dp:
                 return jax.ShapeDtypeStruct((n,) + shape, x.dtype)
@@ -518,31 +523,7 @@ class Trainer:
             shape[ax] = shape[ax] * self.ep_degree
             return jax.ShapeDtypeStruct(tuple(shape), x.dtype)
 
-        def stack_list(lst, ms_list):
-            return [glob(x, ms, pd)
-                    for x, ms, pd in zip(lst, ms_list, self.pd_leaves)]
-
-        from repro.core.adam import AdamState
-        from repro.core.one_bit_adam import OneBitAdamState
-        from repro.core.zero_one_adam import ZeroOneAdamState
-        s, m = state_local, model_specs
-        if isinstance(s, AdamState):
-            return AdamState(step=s.step, m=stack_list(s.m, m.m),
-                             v=stack_list(s.v, m.v))
-        if isinstance(s, OneBitAdamState):
-            return OneBitAdamState(
-                step=s.step, m=stack_list(s.m, m.m),
-                v=stack_list(s.v, m.v), err_w=stack_list(s.err_w, m.err_w),
-                err_s=stack_list(s.err_s, m.err_s))
-        if isinstance(s, ZeroOneAdamState):
-            return ZeroOneAdamState(
-                step=s.step, gamma_acc=s.gamma_acc,
-                sync_pstate=s.sync_pstate, var_pstate=s.var_pstate,
-                m=stack_list(s.m, m.m), v=stack_list(s.v, m.v),
-                u=stack_list(s.u, m.u), err_w=stack_list(s.err_w, m.err_w),
-                err_s=stack_list(s.err_s, m.err_s),
-                anchor=stack_list(s.anchor, m.anchor))
-        raise TypeError(type(s))
+        return jax.tree.map(glob, state_local, kinds, model_specs)
 
     # ------------------------------------------------------------------ #
     # single-worker mode (CPU smoke)

@@ -1,0 +1,174 @@
+"""Checkpoint manifest validation + save->restore->resume round trips for
+full optimizer state, on both the legacy reference classes and the
+composed path."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing import io as ckpt_io
+from repro.configs import get
+from repro.core import (OptimizerConfig, build_optimizer, sim_comm,
+                        schedules as S)
+from repro.core.zero_one_adam import ZeroOneAdam
+from repro.data import DataConfig, SyntheticLM
+from repro.train import Trainer
+
+N = 4
+OPT = OptimizerConfig(
+    name="zero_one_adam",
+    lr=S.LinearWarmupExpDecay(peak_lr=2e-3, warmup_steps=4, decay=0.97,
+                              decay_period=20),
+    var_policy=S.AdaptiveFreezePolicy(kappa=2),
+    sync_policy=S.LrProportionalSyncPolicy(warmup_steps=2, double_every=3,
+                                           max_interval=2))
+
+
+# --------------------------------------------------------------------- #
+# manifest validation
+# --------------------------------------------------------------------- #
+
+def test_manifest_carries_version_and_paths(tmp_path):
+    path = os.path.join(tmp_path, "ck.npz")
+    tree = {"a": jnp.ones((2, 3)), "b": {"c": jnp.zeros((4,))}}
+    ckpt_io.save(path, tree, step=3)
+    with np.load(path, allow_pickle=False) as z:
+        man = json.loads(str(z["__manifest__"]))
+    assert man["version"] == ckpt_io.FORMAT_VERSION
+    assert man["n_leaves"] == 2
+    assert man["leaf_paths"] == ["['a']", "['b']['c']"]
+    assert man["leaf_shapes"] == [[2, 3], [4]]
+
+
+def test_restore_rejects_leaf_count_mismatch(tmp_path):
+    path = os.path.join(tmp_path, "ck.npz")
+    ckpt_io.save(path, {"a": jnp.ones((2,)), "b": jnp.ones((2,))})
+    with pytest.raises(ValueError, match="2 leaves, expected 1"):
+        ckpt_io.restore(path, {"a": jnp.ones((2,))})
+
+
+def test_restore_names_first_mismatched_leaf_shape(tmp_path):
+    path = os.path.join(tmp_path, "ck.npz")
+    ckpt_io.save(path, {"a": jnp.ones((2, 3)), "b": {"c": jnp.zeros((4,))}})
+    like = {"a": jnp.ones((2, 3)), "b": {"c": jnp.zeros((5,))}}
+    with pytest.raises(ValueError, match=r"\['b'\]\['c'\].*\(4,\).*\(5,\)"):
+        ckpt_io.restore(path, like)
+
+
+def test_restore_names_diverged_tree_path(tmp_path):
+    path = os.path.join(tmp_path, "ck.npz")
+    ckpt_io.save(path, {"a": jnp.ones((2,)), "b": jnp.ones((3,))})
+    like = {"a": jnp.ones((2,)), "z": jnp.ones((3,))}
+    with pytest.raises(ValueError, match=r"\['b'\].*\['z'\]"):
+        ckpt_io.restore(path, like)
+
+
+def test_restore_reads_version1_checkpoints(tmp_path):
+    """Pre-version-field checkpoints (count+shape manifest only) stay
+    readable, with the same shape validation."""
+    path = os.path.join(tmp_path, "v1.npz")
+    tree = {"a": jnp.arange(6.0).reshape(2, 3)}
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {"step": 11, "meta": {"arch": "x"}, "treedef": str(treedef),
+               "n_leaves": len(leaves)}
+    with open(path, "wb") as f:
+        np.savez(f, __manifest__=json.dumps(payload),
+                 **{f"leaf_{i}": np.asarray(l)
+                    for i, l in enumerate(leaves)})
+    restored, step, meta = ckpt_io.restore(path, tree)
+    assert step == 11 and meta["arch"] == "x"
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    with pytest.raises(ValueError, match="shape"):
+        ckpt_io.restore(path, {"a": jnp.ones((3, 3))})
+
+
+def test_restore_rejects_future_version(tmp_path):
+    path = os.path.join(tmp_path, "vN.npz")
+    payload = {"version": ckpt_io.FORMAT_VERSION + 1, "step": 0, "meta": {},
+               "treedef": "", "n_leaves": 1}
+    with open(path, "wb") as f:
+        np.savez(f, __manifest__=json.dumps(payload),
+                 leaf_0=np.zeros((1,)))
+    with pytest.raises(ValueError, match="format version"):
+        ckpt_io.restore(path, {"a": jnp.zeros((1,))})
+
+
+# --------------------------------------------------------------------- #
+# save -> restore -> resume round trips (full optimizer state)
+# --------------------------------------------------------------------- #
+
+def _trainer_roundtrip(tmp_path, opt_cfg):
+    cfg = get("gpt2").smoke
+    tr = Trainer(cfg, opt_cfg, n_workers=N)
+    params, state = tr.sim_init(jax.random.PRNGKey(0))
+    fn = tr.sim_step_fn()
+    data = SyntheticLM(DataConfig(vocab=64, seq_len=16, global_batch=8,
+                                  seed=5))
+    for t in range(3):
+        params, state, _ = fn(params, state, data.batch(t))
+
+    path = os.path.join(tmp_path, "resume.npz")
+    ckpt_io.save(path, {"params": params, "state": state}, step=3)
+    like = {"params": jax.tree.map(jnp.zeros_like, params),
+            "state": jax.tree.map(jnp.zeros_like, state)}
+    restored, step, _ = ckpt_io.restore(path, like)
+    assert step == 3
+
+    # resume both the live and the restored copies: bitwise-identical run
+    p_live, s_live = params, state
+    p_res, s_res = restored["params"], restored["state"]
+    for t in range(3, 5):
+        b = data.batch(t)
+        p_live, s_live, _ = fn(p_live, s_live, b)
+        p_res, s_res, _ = fn(p_res, s_res, b)
+    for a, b in zip(jax.tree.leaves((p_live, s_live)),
+                    jax.tree.leaves((p_res, s_res))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_composed_full_state_roundtrip_resume(tmp_path):
+    """Composed path (slots-dict state): save mid-run, restore, resume —
+    bitwise identical to the uninterrupted trajectory."""
+    _trainer_roundtrip(tmp_path, OPT)
+
+
+def test_composed_sgd_state_roundtrip_resume(tmp_path):
+    import dataclasses
+    _trainer_roundtrip(tmp_path, dataclasses.replace(OPT,
+                                                     name="zero_one_sgd"))
+
+
+def test_legacy_state_roundtrip(tmp_path):
+    """Old-path (legacy ZeroOneAdam NamedTuple) optimizer state survives a
+    save/restore unchanged, leaf for leaf."""
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (6, 16)),
+              "b": jnp.zeros((5,))}
+    opt = ZeroOneAdam(OPT, params, jax.tree.map(lambda _: None, params),
+                      jax.tree.map(lambda _: True, params), N)
+    comm = sim_comm("w")
+    state = jax.vmap(lambda _: opt.init(params))(jnp.arange(N))
+    xs = jax.tree.map(lambda x: jnp.broadcast_to(x, (N,) + x.shape) + 0,
+                      params)
+    key = jax.random.PRNGKey(2)
+    for _ in range(4):
+        key, sk = jax.random.split(key)
+        ks = jax.random.split(sk, N)
+        grads = jax.vmap(lambda kk, x: jax.tree.map(
+            lambda l: jax.random.normal(jax.random.fold_in(kk, 7), l.shape),
+            x))(ks, xs)
+        xs, state, _ = jax.vmap(
+            lambda x, g, s: opt.step(comm, x, g, s),
+            axis_name="w")(xs, grads, state)
+    path = os.path.join(tmp_path, "legacy.npz")
+    ckpt_io.save(path, {"params": xs, "state": state}, step=4)
+    restored, step, _ = ckpt_io.restore(
+        path, {"params": jax.tree.map(jnp.zeros_like, xs),
+               "state": jax.tree.map(jnp.zeros_like, state)})
+    assert step == 4
+    for a, b in zip(jax.tree.leaves(restored),
+                    jax.tree.leaves({"params": xs, "state": state})):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

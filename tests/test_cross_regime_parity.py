@@ -32,9 +32,9 @@ SCRIPT = textwrap.dedent("""
     from repro.launch.mesh import make_debug_mesh
     from repro.train import Trainer, TrainerConfig
 
-    def opt_cfg(h, pallas):
+    def opt_cfg(h, pallas, name):
         return OptimizerConfig(
-            name="zero_one_adam",
+            name=name,
             lr=S.LinearWarmupExpDecay(peak_lr=2e-3, warmup_steps=10,
                                       decay=0.97, decay_period=20),
             var_policy=S.AdaptiveFreezePolicy(kappa=2),
@@ -60,11 +60,12 @@ SCRIPT = textwrap.dedent("""
 
     import sys
     topology, kernels = sys.argv[1].split("-")
+    opt_name = sys.argv[2] if len(sys.argv) > 2 else "zero_one_adam"
     COMBOS = [(sys.argv[1],
                Hierarchy(inner=2) if topology == "hier" else None,
                kernels == "pallas")]
     for tag, h, pallas in COMBOS:
-        oc = opt_cfg(h, pallas)
+        oc = opt_cfg(h, pallas, opt_name)
         tr_sim = Trainer(cfg, oc, n_workers=4)
         p, s = tr_sim.sim_init(jax.random.PRNGKey(0))
         tr_mesh = Trainer(cfg, oc, mesh=mesh,
@@ -108,11 +109,8 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
-@pytest.mark.slow
-@pytest.mark.parametrize("combo", ["flat-jnp", "hier-jnp",
-                                   "flat-pallas", "hier-pallas"])
-def test_mesh_matches_sim_zero_one_adam(combo):
-    r = subprocess.run([sys.executable, "-c", SCRIPT, combo],
+def _run_combo(combo, opt_name):
+    r = subprocess.run([sys.executable, "-c", SCRIPT, combo, opt_name],
                        capture_output=True, text=True, timeout=1200,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
                             "HOME": "/root"})
@@ -123,3 +121,17 @@ def test_mesh_matches_sim_zero_one_adam(combo):
     # NOTE a SKIP (future-jax state-layout divergence, see module
     # docstring) is accepted per combo; the jnp combos always compare on
     # the supported platforms, keeping the test non-vacuous
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("combo", ["flat-jnp", "hier-jnp",
+                                   "flat-pallas", "hier-pallas"])
+def test_mesh_matches_sim_zero_one_adam(combo):
+    _run_combo(combo, "zero_one_adam")
+
+
+@pytest.mark.slow
+def test_mesh_matches_sim_zero_one_lamb():
+    """0/1-LAMB carries per-leaf trust scalars (state kind "leaf_scalar");
+    this pins their mesh-regime sharding/stacking against sim."""
+    _run_combo("flat-jnp", "zero_one_lamb")

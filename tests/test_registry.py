@@ -1,0 +1,221 @@
+"""Registry + deprecation-shim coverage, and convergence of the new
+composed variants (0/1-LAMB, 0/1-SGD) that the combinator unlocks."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LEGACY_NAMES, OptimizerConfig, REGISTRY_NAMES,
+                        build_optimizer, compressed_dp, lamb_base,
+                        make_optimizer, momentum_sgd_base, sim_comm,
+                        schedules as S)
+from repro.core.compressed import ComposedOptimizer
+
+N = 4
+COMM = sim_comm("w")
+PARAMS = {"w": jax.random.normal(jax.random.PRNGKey(0), (6, 16)),
+          "b": jnp.zeros((5,))}
+
+
+# --------------------------------------------------------------------- #
+# deprecation shim
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("name", list(LEGACY_NAMES))
+def test_legacy_names_warn_and_return_composed(name):
+    cfg = OptimizerConfig(name=name, lr=S.ConstantLr(1e-2))
+    with pytest.warns(DeprecationWarning, match="compressed_dp"):
+        opt = make_optimizer(cfg, PARAMS, n_workers=N)
+    assert isinstance(opt, ComposedOptimizer)
+    # ... and the composed equivalent actually steps
+    grads = jax.tree.map(jnp.ones_like, PARAMS)
+
+    def one(x, g, s):
+        return opt.step(COMM, x, g, s)
+
+    xs, state, met = jax.vmap(one, axis_name="w")(
+        jax.tree.map(lambda x: jnp.broadcast_to(x, (N,) + x.shape) + 0,
+                     PARAMS),
+        jax.tree.map(lambda x: jnp.broadcast_to(x, (N,) + x.shape) + 0,
+                     grads),
+        jax.vmap(lambda _: opt.init(PARAMS))(jnp.arange(N)))
+    assert np.isfinite(np.asarray(jax.tree.leaves(xs)[0])).all()
+
+
+@pytest.mark.parametrize("name", ["zero_one_lamb", "zero_one_sgd",
+                                  "one_bit_lamb", "lamb", "momentum_sgd"])
+def test_new_names_do_not_warn(name):
+    cfg = OptimizerConfig(name=name, lr=S.ConstantLr(1e-2))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        opt = make_optimizer(cfg, PARAMS, n_workers=N)
+    assert isinstance(opt, ComposedOptimizer)
+
+
+def test_build_optimizer_never_warns():
+    for name in REGISTRY_NAMES:
+        cfg = OptimizerConfig(name=name, lr=S.ConstantLr(1e-2))
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            build_optimizer(cfg, PARAMS, n_workers=N)
+
+
+def test_unknown_name_error_lists_full_registry():
+    cfg = OptimizerConfig(name="adamw_8bit")
+    with pytest.raises(ValueError) as ei:
+        make_optimizer(cfg, PARAMS, n_workers=N)
+    msg = str(ei.value)
+    for name in REGISTRY_NAMES:
+        assert name in msg, f"{name} missing from the unknown-name error"
+    assert "zero_one_lamb" in msg and "zero_one_sgd" in msg
+
+
+def test_make_optimizer_accepts_unbound_transform():
+    t = compressed_dp(momentum_sgd_base(), lr=S.ConstantLr(1e-2),
+                      sync_policy=S.EveryStepSyncPolicy())
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        opt = make_optimizer(t, PARAMS, n_workers=N)
+    assert isinstance(opt, ComposedOptimizer)
+
+
+def test_lamb_requires_anchor_in_accumulate_style():
+    with pytest.raises(ValueError, match="store_anchor"):
+        compressed_dp(lamb_base(), store_anchor=False)
+
+
+def test_accumulate_style_rejects_weight_decay():
+    """A decay term breaks the u-linearization the 0/1 sync relies on;
+    the combinator must refuse it loudly instead of silently ignoring it
+    (which is what the legacy class did)."""
+    from repro.core import adam_base
+    with pytest.raises(ValueError, match="weight_decay"):
+        compressed_dp(adam_base(), weight_decay=0.01)
+    with pytest.raises(ValueError, match="weight_decay"):
+        build_optimizer(OptimizerConfig(name="zero_one_adam",
+                                        weight_decay=0.01),
+                        PARAMS, n_workers=N)
+    # gradient / mean styles support it
+    compressed_dp(adam_base(), style="mean", weight_decay=0.01)
+    build_optimizer(OptimizerConfig(name="adam", weight_decay=0.01),
+                    PARAMS, n_workers=N)
+
+
+# --------------------------------------------------------------------- #
+# the new variants actually optimize
+# --------------------------------------------------------------------- #
+
+_TEST_LR = S.LinearWarmupExpDecay(peak_lr=1e-2, warmup_steps=30,
+                                  decay=0.9, decay_period=50)
+
+
+def _quadratic_grads(target):
+    def g(xs, k):
+        ks = jax.random.split(k, N)
+
+        def per(kk, x):
+            return jax.tree.map(
+                lambda l, t: (l - t) + 0.3 * jax.random.normal(
+                    jax.random.fold_in(kk, 3), l.shape),
+                x, target)
+        return jax.vmap(per)(ks, xs)
+    return g
+
+
+def _run_steps(opt, params, grad_fn, steps, key):
+    state = jax.vmap(lambda _: opt.init(params))(jnp.arange(N))
+    xs = jax.tree.map(lambda x: jnp.broadcast_to(x, (N,) + x.shape) + 0,
+                      params)
+
+    @jax.jit
+    def one(xs, state, k):
+        grads = grad_fn(xs, k)
+        return jax.vmap(lambda x, g, s: opt.step(COMM, x, g, s),
+                        axis_name="w")(xs, grads, state)
+
+    for _ in range(steps):
+        key, sk = jax.random.split(key)
+        xs, state, met = one(xs, state, sk)
+    return xs, state, met
+
+
+# LAMB takes norm-proportional steps (||dx|| = lr·||x|| per sync), ~3x
+# Adam's effective step on this single-tensor toy, so the 1-bit direction
+# noise floor sits proportionally higher — row-granular scales and a wider
+# contraction bound reflect that. (With quantize=False it reaches 0.07;
+# the LM-scale parity evidence lives in benchmarks/bench_convergence.py.)
+_VARIANTS = [("zero_one_lamb", "row", 1.2), ("zero_one_sgd", "tensor", 0.8),
+             ("one_bit_lamb", "tensor", 0.8), ("lamb", "tensor", 0.8),
+             ("momentum_sgd", "tensor", 0.8)]
+
+
+@pytest.mark.parametrize("opt_name,scale_mode,bound", _VARIANTS)
+def test_new_variant_quadratic_convergence(opt_name, scale_mode, bound):
+    key = jax.random.PRNGKey(1)
+    params = {"w": jax.random.normal(key, (8, 8)) * 3}
+    target = {"w": jnp.ones((8, 8))}
+    cfg = OptimizerConfig(
+        name=opt_name, lr=_TEST_LR, scale_mode=scale_mode,
+        var_policy=S.AdaptiveFreezePolicy(kappa=4),
+        sync_policy=S.LrProportionalSyncPolicy(warmup_steps=20,
+                                               double_every=40,
+                                               max_interval=4),
+        onebit_warmup=20)
+    opt = build_optimizer(cfg, params, n_workers=N)
+    xs, _, _ = _run_steps(opt, params, _quadratic_grads(target), 300,
+                          jax.random.PRNGKey(7))
+    err = float(jnp.abs(xs["w"][0] - 1.0).mean())
+    # initial distance ~2.5; every variant must contract substantially
+    assert err < bound, f"{opt_name} failed to approach optimum: {err}"
+
+
+def test_zero_one_sgd_skips_variance_rounds():
+    """momentum_sgd_base has no second moment: T_v must never fire and the
+    state must carry no variance slot at all."""
+    cfg = OptimizerConfig(name="zero_one_sgd", lr=S.ConstantLr(1e-2),
+                          sync_policy=S.EveryStepSyncPolicy())
+    opt = build_optimizer(cfg, PARAMS, n_workers=N)
+    state = opt.init(PARAMS)
+    assert "v" not in state.slots
+    xs, state, met = _run_steps(
+        opt, PARAMS, lambda xs, k: jax.vmap(lambda x: jax.tree.map(
+            jnp.ones_like, x))(xs), 3, jax.random.PRNGKey(0))
+    assert not bool(np.asarray(met["var_round"]).reshape(-1)[0])
+
+
+def test_zero_one_lamb_consensus_at_syncs():
+    """0/1-LAMB inherits the anchor-mode bitwise consensus guarantee: the
+    trust ratio is refreshed from replicated quantities only."""
+    cfg = OptimizerConfig(
+        name="zero_one_lamb", lr=S.ConstantLr(1e-2),
+        var_policy=S.AdaptiveFreezePolicy(kappa=2),
+        sync_policy=S.LrProportionalSyncPolicy(warmup_steps=3,
+                                               double_every=3,
+                                               max_interval=2))
+    opt = build_optimizer(cfg, PARAMS, n_workers=N)
+    state = jax.vmap(lambda _: opt.init(PARAMS))(jnp.arange(N))
+    xs = jax.tree.map(lambda x: jnp.broadcast_to(x, (N,) + x.shape) + 0,
+                      PARAMS)
+    key = jax.random.PRNGKey(5)
+
+    @jax.jit
+    def one(xs, state, k):
+        ks = jax.random.split(k, N)
+        grads = jax.vmap(lambda kk, x: jax.tree.map(
+            lambda l: jax.random.normal(jax.random.fold_in(kk, 7), l.shape),
+            x))(ks, xs)
+        return jax.vmap(lambda x, g, s: opt.step(COMM, x, g, s),
+                        axis_name="w")(xs, grads, state)
+
+    saw = 0
+    for _ in range(10):
+        key, sk = jax.random.split(key)
+        xs, state, met = one(xs, state, sk)
+        if bool(np.asarray(met["synced"])[0]):
+            for leaf in jax.tree.leaves(xs):
+                arr = np.asarray(leaf)
+                assert (arr == arr[:1]).all(), "workers diverged at sync"
+            saw += 1
+    assert saw >= 3
