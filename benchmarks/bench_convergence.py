@@ -24,7 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get
-from repro.core import OptimizerConfig, REGISTRY_NAMES, schedules as S
+from repro.core import (CODEC_NAMES, OptimizerConfig, REGISTRY_NAMES,
+                        schedules as S)
 from repro.data import DataConfig, SyntheticLM
 from repro.train import Trainer, TrainerConfig
 
@@ -49,7 +50,8 @@ BASE_OF = {
 PARITY_TOL = 0.25
 
 
-def run_one(optimizer: str, steps: int = STEPS):
+def run_one(optimizer: str, steps: int = STEPS, codec: str = "sign1bit",
+            codec_arg=None):
     cfg = get("gpt2").smoke
     lr = S.LinearWarmupExpDecay(peak_lr=2e-3, warmup_steps=20,
                                 decay=0.97, decay_period=20)
@@ -58,7 +60,7 @@ def run_one(optimizer: str, steps: int = STEPS):
         var_policy=S.AdaptiveFreezePolicy(kappa=4),
         sync_policy=S.LrProportionalSyncPolicy(
             warmup_steps=30, double_every=40, max_interval=4),
-        onebit_warmup=30)
+        onebit_warmup=30, codec=codec, codec_arg=codec_arg)
     tr = Trainer(cfg, ocfg, n_workers=WORKERS)
     params, state = tr.sim_init(jax.random.PRNGKey(0))
     fn = tr.sim_step_fn()
@@ -76,9 +78,12 @@ def _tail(curve):
     return float(np.mean(curve[-10:]))
 
 
-def run_parity(optimizers, steps: int):
+def run_parity(optimizers, steps: int, codec: str = "sign1bit",
+               codec_arg=None):
     """Each compressed pipeline against its uncompressed base; returns
-    bench rows and prints the loss-vs-samples table."""
+    bench rows and prints the loss-vs-samples table. ``codec`` selects the
+    wire format of the compressed pipelines (the uncompressed bases ignore
+    it), so the same parity gate covers every codec."""
     t0 = time.time()
     names = []
     for o in optimizers:
@@ -89,7 +94,9 @@ def run_parity(optimizers, steps: int):
             names.append(o)
     curves = {}
     for o in names:
-        curves[o] = run_one(o, steps)
+        curves[o] = run_one(o, steps,
+                            codec=codec if o in BASE_OF else "sign1bit",
+                            codec_arg=codec_arg if o in BASE_OF else None)
         print(f"# {o}: start {curves[o][0]:.3f} -> "
               f"final(avg last 10) {_tail(curves[o]):.3f}")
     print("step," + ",".join(names))
@@ -104,10 +111,12 @@ def run_parity(optimizers, steps: int):
         gap = _tail(curves[o]) - _tail(curves[base])
         within = gap <= PARITY_TOL
         ok = ok and within
-        print(f"# {o} final-loss gap vs {base}: {gap:+.4f} nats "
+        print(f"# {o} (codec={codec}) final-loss gap vs {base}: "
+              f"{gap:+.4f} nats "
               f"(gap <= {PARITY_TOL} -> parity "
               f"{'OK' if within else 'FAILED'})")
-        rows.append((f"convergence_{o}_vs_{base}", 0.0, f"gap={gap:.4f}"))
+        rows.append((f"convergence_{o}_vs_{base}", 0.0,
+                     f"codec={codec};gap={gap:.4f}"))
     print(f"# elapsed {time.time()-t0:.1f}s")
     if not ok:
         raise AssertionError("sample-wise parity exceeded tolerance; see "
@@ -122,9 +131,16 @@ def main(argv=None):
                     help="pipeline(s) to check against their uncompressed "
                          "base (repeatable); default: the classic trio")
     ap.add_argument("--steps", type=int, default=STEPS)
+    ap.add_argument("--codec", default="sign1bit",
+                    choices=list(CODEC_NAMES),
+                    help="wire format of the compressed pipelines "
+                         "(the uncompressed bases are unaffected)")
+    ap.add_argument("--codec-arg", type=float, default=None,
+                    help="parameter for parameterized codecs (topk density)")
     args = ap.parse_args(argv)
     optimizers = args.optimizer or ["one_bit_adam", "zero_one_adam"]
-    return run_parity(optimizers, args.steps)
+    return run_parity(optimizers, args.steps, codec=args.codec,
+                      codec_arg=args.codec_arg)
 
 
 if __name__ == "__main__":

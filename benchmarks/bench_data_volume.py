@@ -146,11 +146,41 @@ def hier_levels(arch="bert-large", workers=32, inner=16):
     }
 
 
+def codec_sweep(arch="bert-large", workers=16):
+    """Per-codec bytes of one zero_one_adam sync over the real per-leaf
+    layouts — the volume/fidelity menu the pluggable-codec API opens.
+
+    Returns JSON-ready records (one per codec) with per-level byte counts
+    and bits/param, so the BENCH output tracks the bytes trajectory of
+    every wire format, not just sign1bit.
+    """
+    cfg = get(arch).config
+    tmpl = T.model_template(cfg)
+    shapes = abstract_params(tmpl)
+    specs = param_specs(tmpl)
+    out = []
+    for codec, arg in (("sign1bit", None), ("topk", 0.01), ("topk", 0.1),
+                       ("qint8", None), ("qint4", None), ("identity", None)):
+        ocfg = OptimizerConfig(name="zero_one_adam", codec=codec,
+                               codec_arg=arg)
+        opt = build_optimizer(ocfg, shapes, specs=specs, n_workers=workers)
+        acct = comm_accounting(opt)
+        out.append({
+            "bench": "codec_volume", "arch": arch, "workers": workers,
+            "codec": codec, "codec_arg": arg,
+            "bits_per_param_sync": acct["bits_per_param_sync"],
+            "sync_bytes_per_worker": acct["compressed_bytes_per_sync"],
+            "fullprec_bytes_per_round": acct["fullprec_bytes_per_round"],
+        })
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None,
-                    help="append JSONL records (per-optimizer rows + the "
-                         "hierarchical per-level record) here")
+                    help="append JSONL records (per-optimizer rows, the "
+                         "hierarchical per-level record, and the per-codec "
+                         "sweep) here")
     args = ap.parse_args(argv)
     t0 = time.time()
     results = []
@@ -200,6 +230,19 @@ def main(argv=None):
           f"uncompressed={hl['inner_uncompressed']}")
     results.append(("hier_outer_sync_vs_fullprec",
                     hl["outer_sync_vs_fullprec"], ""))
+
+    # per-codec sync-volume sweep (the pluggable wire formats)
+    cs = codec_sweep("bert-large", workers=16)
+    records.extend(cs)
+    print("# Codec sweep — bert-large, 16 workers, one zero_one_adam sync:")
+    print("codec,codec_arg,bits_per_param_sync,sync_MiB_per_worker")
+    for r in cs:
+        print(f"{r['codec']},{r['codec_arg']},"
+              f"{r['bits_per_param_sync']:.3f},"
+              f"{r['sync_bytes_per_worker']/2**20:.2f}")
+    s1 = next(r for r in cs if r["codec"] == "sign1bit")
+    results.append(("codec_sweep_sign1bit_bits_per_param",
+                    s1["bits_per_param_sync"], ""))
     if args.json:
         with open(args.json, "a") as f:
             for rec in records:

@@ -8,11 +8,13 @@ Public surface:
   - Comm / sim_comm / mesh_comm             (comm.py)
   - schedules: T_v / T_u policies + lr      (schedules.py)
   - onebit_allreduce_view (Algorithm 2)     (onebit_allreduce.py)
+  - pluggable exchange codecs               (codecs.py)
   - 1-bit EF compressor + comm-view layouts (compressor.py)
 """
 from repro.core.api import (OptimizerConfig, make_optimizer, build_optimizer,
                             transform_from_config, comm_accounting,
                             REGISTRY_NAMES, LEGACY_NAMES)
+from repro.core.codecs import (Codec, CODEC_NAMES, make_codec)
 from repro.core.base_steps import (adam_base, lamb_base, momentum_sgd_base,
                                    AdamBase, LambBase, MomentumSgdBase)
 from repro.core.compressed import (CompressedDP, CompressedDPState,
@@ -20,6 +22,7 @@ from repro.core.compressed import (CompressedDP, CompressedDPState,
 from repro.core.comm import (Comm, Hierarchy, mesh_comm, sim_comm,
                              run_simulated)
 from repro.core import schedules
+from repro.core import codecs
 from repro.core import compressor
 from repro.core import onebit_allreduce
 
@@ -27,6 +30,7 @@ __all__ = [
     "OptimizerConfig", "make_optimizer", "build_optimizer",
     "transform_from_config", "comm_accounting", "REGISTRY_NAMES",
     "LEGACY_NAMES",
+    "Codec", "CODEC_NAMES", "make_codec", "codecs",
     "adam_base", "lamb_base", "momentum_sgd_base",
     "AdamBase", "LambBase", "MomentumSgdBase",
     "CompressedDP", "CompressedDPState", "compressed_dp",

@@ -63,7 +63,16 @@ class OptimizerConfig:
     onebit_warmup: int = 16000
     # compression
     scale_mode: C.ScaleMode = "tensor"   # paper-faithful; "row" = optimized
-    quantize: bool = True                # False -> exact chunked allreduce
+    quantize: bool = True                # deprecated: False -> the identity
+                                         # codec (exact chunked allreduce);
+                                         # emits a DeprecationWarning when the
+                                         # optimizer is built
+    codec: Any = "sign1bit"              # wire format of the EF exchange: any
+                                         # repro.core.codecs.CODEC_NAMES entry
+                                         # (sign1bit | topk | qint8 | qint4 |
+                                         # identity) or a Codec instance
+    codec_arg: Optional[float] = None    # parameter for parameterized codecs
+                                         # (topk: density, default 0.01)
     store_anchor: bool = True            # True: keep x_{t'} copy -> bitwise
                                          # worker consensus at syncs. False:
                                          # recover the anchor from u (saves a
@@ -79,9 +88,18 @@ class OptimizerConfig:
                                          # identical to the unfused XLA path
     hierarchy: Optional[Hierarchy] = None  # two-level (intra-pod x inter-pod)
                                          # topology: reduce uncompressed over
-                                         # the fast inner axes, run the 1-bit
-                                         # EF exchange only across pods. None
-                                         # = flat (single-level) exchange.
+                                         # the fast inner axes, run the
+                                         # compressed EF exchange only across
+                                         # pods. None = flat (single-level)
+                                         # exchange.
+
+    def __post_init__(self):
+        # fail fast, with the valid options listed, instead of deep inside
+        # _scales / the exchange (ScaleMode is a plain str; a typo like
+        # "rows" used to surface steps later)
+        C.validate_scale_mode(self.scale_mode)
+        from repro.core.codecs import make_codec
+        make_codec(self.codec, self.codec_arg)   # validates name + arg
 
 
 # ---------------------------------------------------------------------------
@@ -91,6 +109,7 @@ class OptimizerConfig:
 def _shared_kwargs(cfg: OptimizerConfig) -> Dict[str, Any]:
     return dict(lr=cfg.lr, weight_decay=cfg.weight_decay,
                 scale_mode=cfg.scale_mode, quantize=cfg.quantize,
+                codec=cfg.codec, codec_arg=cfg.codec_arg,
                 store_anchor=cfg.store_anchor, comm_dtype=cfg.comm_dtype,
                 state_dtype=cfg.state_dtype, use_pallas=cfg.use_pallas,
                 hierarchy=cfg.hierarchy)
@@ -177,13 +196,48 @@ def fill_like(tree, value):
 
 
 def build_optimizer(cfg, param_shapes, *, specs=None, dp_mask=None,
-                    n_workers: int, model_axis_sizes=None):
+                    n_workers: int, model_axis_sizes=None,
+                    codec=None, codec_arg=None):
     """Bind a transform (or a registry-named config) to a parameter tree.
 
     ``cfg`` is either an unbound ``compressed_dp(...)`` transform or an
     :class:`OptimizerConfig`. Never warns — this is the entry point the
     trainer and new code use.
+
+    ``codec`` / ``codec_arg`` override the config's wire format in place,
+    so every registry optimizer runs over any codec without rebuilding the
+    config: ``build_optimizer(cfg, ..., codec="topk", codec_arg=0.01)``.
+    A ``codec_arg`` alone re-parameterizes the config's codec; a ``codec``
+    alone keeps the stored ``codec_arg`` only when it names the same codec
+    (switching codecs resets the arg to that codec's default).
     """
+    if codec is not None or codec_arg is not None:
+        old_codec = getattr(cfg, "codec", None)
+        old_name = getattr(old_codec, "name", old_codec)  # instance -> name
+        repl = {}
+        if codec is None:
+            # codec_arg-only: re-parameterize the configured codec
+            codec = old_name
+        else:
+            if codec_arg is None and codec == old_name:
+                # same-name override: keep the configured codec itself —
+                # an instance carries its parameters (TopKCodec(0.2))
+                # even when the codec_arg field is None
+                codec = old_codec
+                codec_arg = getattr(cfg, "codec_arg", None)
+            # an override HERE is unambiguously explicit (unlike a config
+            # field, where "sign1bit" is indistinguishable from the
+            # default), so it also clears the deprecated quantize=False
+            # flag — otherwise the config's __post_init__ would rewrite an
+            # explicit sign1bit override to identity
+            if not getattr(cfg, "quantize", True):
+                warnings.warn(
+                    f"quantize=False is deprecated and overridden by the "
+                    f"explicit codec={codec!r} argument",
+                    DeprecationWarning, stacklevel=2)
+                repl["quantize"] = True
+        cfg = dataclasses.replace(cfg, codec=codec, codec_arg=codec_arg,
+                                  **repl)
     transform = (cfg if isinstance(cfg, CompressedDP)
                  else transform_from_config(cfg))
     return transform(param_shapes, specs=specs, dp_mask=dp_mask,
@@ -229,11 +283,16 @@ def comm_accounting(opt) -> Dict[str, float]:
     ``fullprec_bytes_per_round`` keeps the historical true-parameter ring
     convention for flat layouts and becomes the per-level sum (padded-view
     based, like every other number here) when a hierarchy is configured.
+
+    Sync volume delegates to the optimizer's codec (``codec.wire_bytes``),
+    so the numbers stay honest per wire format; ``codec`` in the returned
+    dict names it.
     """
     import numpy as np
     layouts = jax.tree.leaves(opt.layouts)
     masks = jax.tree.leaves(opt.dp_mask)
     wire = jnp.dtype(opt.cfg.comm_dtype).itemsize
+    codec = getattr(getattr(opt, "ar_cfg", None), "codec", None)
     total_params = 0
     comp_inner = comp_outer = 0
     full_inner = full_outer = 0
@@ -243,7 +302,7 @@ def comm_accounting(opt) -> Dict[str, float]:
             continue
         total_params += int(np.prod(lo.shape)) if lo.shape else 1
         lv = C.compressed_bytes_levels(lo, opt.cfg.scale_mode,
-                                       inner_itemsize=wire)
+                                       inner_itemsize=wire, codec=codec)
         comp_inner += lv["inner"]
         comp_outer += lv["outer"]
         fv = C.fullprec_bytes_levels(lo, wire)
@@ -257,8 +316,10 @@ def comm_accounting(opt) -> Dict[str, float]:
     full = (full_inner + full_outer if n_inner > 1
             else ring * total_params * wire)
     compressed = comp_inner + comp_outer
+    from repro.core.codecs import make_codec
     return {
         "dp_params": float(total_params),
+        "codec": make_codec("sign1bit" if codec is None else codec).name,
         "compressed_bytes_per_sync": float(compressed),
         "compressed_bytes_per_sync_inner": float(comp_inner),
         "compressed_bytes_per_sync_outer": float(comp_outer),

@@ -1,0 +1,445 @@
+"""Pluggable compression codecs for the error-feedback exchange.
+
+The Algorithm-2 sync machinery (worker EF-compress -> all_to_all -> server
+average + EF-compress -> all_gather, see ``onebit_allreduce``) is agnostic
+to the *wire format* of what it exchanges: 1-bit-BytePS (Zhong et al.) and
+APMSqueeze (Tang et al.) run the same schedule over sign bits, top-k
+sparsification, and low-bit integer quantization. This module factors that
+wire format out as a first-class :class:`Codec`:
+
+* ``encode_worker(z, err, layout, mode, mask, ...) -> (payload, err')`` —
+  one EF compression pass over this worker's buffer (the full comm view on
+  a flat topology, the owned reduce-scatter slice on a hierarchy). The
+  *payload* is a pytree of arrays whose leading axis enumerates the outer
+  chunks, so the exchange can map collectives over its leaves without
+  knowing the format.
+* ``encode_server(avg, err, layout, mode, mask, widx, ...) -> (payload,
+  err')`` — the server-side pass over the single chunk this worker serves
+  (payload leaves carry leading dim 1 for the tiled all_gather).
+* ``decode(payload, layout, dtype) -> dense`` — payload -> dense values,
+  leading chunk axis preserved.
+* ``wire_bytes(layout, mode) -> {"scatter": int, "gather": int}`` — bytes
+  of ONE chunk's payload in each exchange phase, feeding the static
+  data-volume accounting (``compressor.compressed_bytes_levels``).
+
+Capability flags: ``needs_ef`` (identity is exact — no error-feedback
+state is touched) and ``has_pallas`` (only the sign-1-bit format has fused
+Pallas kernels; other codecs stay on the jnp path — see
+``kernels.dispatch.kernel_codec``).
+
+Implementations:
+
+* ``sign1bit`` — the paper's compressor (packed sign bits + L1-mean
+  scales), extracted from the pre-refactor exchange bit-identically; the
+  default everywhere.
+* ``topk`` — EF sparsification: the ``density`` fraction of largest-|z|
+  elements per chunk ship as (int32 index, f32 value) pairs; everything
+  else stays in the error buffer.
+* ``qint8`` / ``qint4`` — integer quantization with one max-abs scale per
+  chunk and deterministic-dither stochastic rounding (the dither is a hash
+  of the value bits, so runs are reproducible); qint4 packs two codes per
+  byte.
+* ``identity`` — the exact mean at full precision (absorbs the legacy
+  ``quantize=False`` knob; the degenerate-equivalence tests and the
+  no-compression ablation).
+
+Every codec is EF-compatible: ``decode(encode(z)) + err' == z`` restricted
+to real (non-padded) elements, and padded positions contribute exactly
+zero to payloads, scales, and errors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressor as C
+
+
+def _ident(x):
+    return x
+
+
+def _chunk_elems(layout: C.LeafLayout) -> int:
+    return int(np.prod(layout.chunk_shape)) if layout.chunk_shape else 1
+
+
+class Codec:
+    """Base class / protocol for exchange wire formats (see module doc)."""
+
+    name: str = "?"
+    has_pallas: bool = False   # fused Pallas kernels exist for this format
+    needs_ef: bool = True      # False -> exact codec, EF state untouched
+
+    def encode_worker(self, z, err, layout: C.LeafLayout, mode: str, mask,
+                      model_axes=(), inner_index=None, use_pallas=False,
+                      cst=None) -> Tuple[Dict[str, jnp.ndarray], Any]:
+        raise NotImplementedError
+
+    def encode_server(self, avg, err, layout: C.LeafLayout, mode: str, mask,
+                      worker_index, model_axes=(), use_pallas=False,
+                      cst=None) -> Tuple[Dict[str, jnp.ndarray], Any]:
+        raise NotImplementedError
+
+    def decode(self, payload, layout: C.LeafLayout, dtype=jnp.float32,
+               use_pallas=False) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def wire_bytes(self, layout: C.LeafLayout, mode: str) -> Dict[str, int]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# sign1bit — the paper's compressor, extracted bit-identically
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Sign1BitCodec(Codec):
+    """Packed sign bits + L1-mean magnitudes (paper Eq. 4 / Algorithm 2).
+
+    Payload: ``{"packed": uint8 bit-packed signs, "scales": f32}`` with the
+    scales broadcast to one row per chunk so both leaves route through the
+    same all_to_all. Scale granularity follows ``scale_mode`` exactly as
+    the pre-refactor exchange did (including the 2-D-view row-mode
+    degeneracies on each side).
+    """
+
+    name = "sign1bit"
+    has_pallas = True
+
+    def encode_worker(self, z, err, layout, mode, mask, model_axes=(),
+                      inner_index=None, use_pallas=False, cst=None):
+        cst = cst or _ident
+        if use_pallas:
+            from repro.kernels import dispatch as K
+            packed, scales, err_w = K.ef_compress_view(
+                z, err.astype(z.dtype), layout, mode, model_axes,
+                inner_index=inner_index)
+        else:
+            zw = cst(z + err.astype(z.dtype))
+            if inner_index is None:
+                packed, scales, err_w = C.ef_compress(zw, layout, mode,
+                                                      mask, model_axes)
+            else:
+                packed, scales, err_w = C.ef_compress_slice(
+                    zw, layout, mode, mask, inner_index, model_axes)
+        # broadcast "tensor"/"chunk" scales to chunk rows so each receiver
+        # gets the proper per-sender magnitude after the all_to_all
+        bscales = jnp.broadcast_to(
+            scales, (z.shape[0],) + scales.shape[1:]).astype(jnp.float32)
+        return {"packed": packed, "scales": bscales}, err_w
+
+    def encode_server(self, avg, err, layout, mode, mask, worker_index,
+                      model_axes=(), use_pallas=False, cst=None):
+        cst = cst or _ident
+        k_ok = use_pallas and not (mode == "row"
+                                   and len(layout.view_shape) == 2)
+        if k_ok:
+            from repro.kernels import dispatch as K
+            packed_s, scales_s, err_s = K.server_compress_view(
+                cst(avg[None]), err.astype(avg.dtype)[None], layout, mode,
+                worker_index, model_axes)
+        else:
+            y = avg + err.astype(avg.dtype)
+            packed_s, scales_s, err_s = _server_compress(
+                cst(y[None]), layout, mode, mask, model_axes)
+        return ({"packed": packed_s, "scales": scales_s.astype(jnp.float32)},
+                cst(err_s)[0])
+
+    def decode(self, payload, layout, dtype=jnp.float32, use_pallas=False):
+        packed, scales = payload["packed"], payload["scales"]
+        # row granularity on 2-D (flatten) views degenerates to per-element
+        # scales on the server side (trailing dim > 1); the fused kernel
+        # consumes per-row scales only, so that case stays on jnp — the
+        # same split the pre-refactor k_server flag made.
+        if use_pallas and scales.shape[-1] == 1:
+            from repro.kernels import dispatch as K
+            return K.decompress_view(packed, scales, layout, dtype)
+        vals = C.unpack_signs(packed, layout.pack_count, dtype)
+        return vals * scales.astype(dtype)
+
+    def wire_bytes(self, layout, mode):
+        chunk_packed = _chunk_elems(layout) // 8
+        if mode in ("tensor", "chunk"):
+            scatter_scales = gather_scales = 1
+        elif len(layout.view_shape) == 2:
+            # row granularity degenerates on flatten views: the worker side
+            # falls back to chunk scales (see compressor._scales), the
+            # server side to per-element scales (see _server_compress).
+            scatter_scales, gather_scales = 1, layout.view_shape[1]
+        else:
+            scatter_scales = gather_scales = layout.view_shape[1]
+        return {"scatter": chunk_packed + 4 * scatter_scales,
+                "gather": chunk_packed + 4 * gather_scales}
+
+
+def _server_compress(y, layout, mode, mask, model_axes=()):
+    """EF-compress one server chunk (leading dim 1) — sign-1-bit format.
+
+    The chunk shares the leaf layout but its scale granularity reuses the
+    chunk level of the configured mode (one scale for tensor/chunk, one
+    per row for row mode — degenerating to per-element on 2-D views).
+    """
+    az = jnp.abs(y)
+    if mask is not None:
+        az = az * mask
+    rest = layout.rest_factor
+    for s in y.shape[2:]:
+        rest *= s
+    if mode == "row":
+        axes = tuple(range(2, y.ndim))
+        cnt = max(rest, 1)
+        s = (C._psum_model(az.sum(axis=axes), model_axes) / cnt
+             if y.ndim > 2 else az)
+        scales = s.reshape(y.shape[:2] + (1,) * (y.ndim - 2))
+    else:  # tensor / chunk -> one scale for this chunk
+        denom = (az.size * layout.rest_factor if mask is None
+                 else jnp.maximum(mask.sum() * rest, 1.0))
+        denom = jnp.asarray(denom, y.dtype)
+        scales = (C._psum_model(az.sum(), model_axes)
+                  / denom).reshape((1,) * y.ndim)
+    packed = C.pack_signs(y)
+    signs = jnp.where(y >= 0, 1.0, -1.0).astype(y.dtype)
+    err = y - signs * scales.astype(y.dtype)
+    if mask is not None:
+        err = err * mask.astype(err.dtype)
+    return packed, scales, err
+
+
+def resolve_with_quantize(codec, quantize: bool):
+    """The shared ``quantize=False`` back-compat rule (ONE place, called
+    from both ``CompressedDP.__post_init__`` and
+    ``OneBitConfig.__post_init__`` so the composed and legacy paths can
+    never disagree): ``None`` resolves to the default for the flag;
+    the deprecated ``quantize=False`` forces the exact mean unless a
+    NON-default codec is set — an explicit ``"sign1bit"``, by name or
+    instance, is indistinguishable from the default and is rewritten too,
+    since the old knob always meant "exact mean"."""
+    if codec is None:
+        return "sign1bit" if quantize else "identity"
+    if not quantize and getattr(codec, "name", codec) == "sign1bit":
+        return "identity"
+    return codec
+
+
+# ---------------------------------------------------------------------------
+# identity — exact mean (absorbs the legacy quantize=False branch)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IdentityCodec(Codec):
+    """Exact (uncompressed) exchange: payload is the raw buffer.
+
+    ``needs_ef=False``: the exchange leaves the EF state untouched, exactly
+    like the historical ``quantize=False`` branch it replaces."""
+
+    name = "identity"
+    needs_ef = False
+
+    def encode_worker(self, z, err, layout, mode, mask, model_axes=(),
+                      inner_index=None, use_pallas=False, cst=None):
+        return {"values": z}, None
+
+    def encode_server(self, avg, err, layout, mode, mask, worker_index,
+                      model_axes=(), use_pallas=False, cst=None):
+        return {"values": avg[None]}, None
+
+    def decode(self, payload, layout, dtype=jnp.float32, use_pallas=False):
+        # deliberately NOT cast: the exact mean accumulates in the buffer's
+        # own dtype (the exchange casts the final result to compute_dtype),
+        # matching the pre-refactor quantize=False branch bitwise
+        return payload["values"]
+
+    def wire_bytes(self, layout, mode):
+        ce = _chunk_elems(layout) * 4          # f32 wire
+        return {"scatter": ce, "gather": ce}
+
+
+# ---------------------------------------------------------------------------
+# dense-EF codecs: topk sparsification, qint8/qint4 quantization
+# ---------------------------------------------------------------------------
+
+class _DenseEFCodec(Codec):
+    """Shared EF wrapper for codecs defined by a plain masked
+    ``_encode(z, layout, mask) -> (payload, err)`` over a (lead, *chunk)
+    buffer: the worker pass folds the incoming error into the buffer, the
+    server pass additionally adds the chunk-leading axis. A third dense-EF
+    codec only implements ``_encode`` / ``decode`` / ``wire_bytes``."""
+
+    def _encode(self, z, layout, mask):
+        raise NotImplementedError
+
+    def encode_worker(self, z, err, layout, mode, mask, model_axes=(),
+                      inner_index=None, use_pallas=False, cst=None):
+        return self._encode(z + err.astype(z.dtype), layout, mask)
+
+    def encode_server(self, avg, err, layout, mode, mask, worker_index,
+                      model_axes=(), use_pallas=False, cst=None):
+        y = (avg + err.astype(avg.dtype))[None]
+        payload, e = self._encode(y, layout, mask)
+        return payload, e[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCodec(_DenseEFCodec):
+    """Ship the ``density`` fraction of largest-magnitude elements per
+    chunk as (index, value) pairs; the rest stays in the error buffer.
+
+    ``k`` is static per layout (``ceil(density * chunk_elems)``), so shapes
+    and byte counts are compile-time constants. Padded positions are masked
+    to zero before selection — they can only be picked when a chunk has
+    fewer than ``k`` real elements, and then carry exact zeros."""
+
+    density: float = 0.01
+    name = "topk"
+
+    def __post_init__(self):
+        if not 0.0 < self.density <= 1.0:
+            raise ValueError(
+                f"topk density must be in (0, 1], got {self.density}")
+
+    def k_for(self, layout: C.LeafLayout) -> int:
+        ce = _chunk_elems(layout)
+        return max(1, min(ce, int(math.ceil(self.density * ce))))
+
+    def _encode(self, z, layout, mask):
+        lead, ce = z.shape[0], _chunk_elems(layout)
+        if mask is not None:
+            z = z * mask.astype(z.dtype)
+        zf = z.reshape(lead, ce)
+        k = self.k_for(layout)
+        _, idx = jax.lax.top_k(jnp.abs(zf), k)
+        val = jnp.take_along_axis(zf, idx, axis=1)
+        # the residual is zf with the shipped elements zeroed — one
+        # scatter, no dense decode buffer
+        err = zf.at[jnp.arange(lead)[:, None], idx].set(0.0).reshape(z.shape)
+        return {"idx": idx.astype(jnp.int32), "val": val}, err
+
+    def decode(self, payload, layout, dtype=jnp.float32, use_pallas=False):
+        idx, val = payload["idx"], payload["val"]
+        lead, ce = idx.shape[0], _chunk_elems(layout)
+        dense = jnp.zeros((lead, ce), dtype).at[
+            jnp.arange(lead)[:, None], idx].set(val.astype(dtype))
+        return dense.reshape((lead,) + layout.chunk_shape)
+
+    def wire_bytes(self, layout, mode):
+        per = self.k_for(layout) * (4 + 4)      # int32 index + f32 value
+        return {"scatter": per, "gather": per}
+
+
+# ---------------------------------------------------------------------------
+# qint8 / qint4 — low-bit integer quantization with stochastic rounding
+# ---------------------------------------------------------------------------
+
+def _hash_dither(x: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic U[0,1) dither from the value's own bits (Knuth
+    multiplicative hash + xor-fold). Stochastic rounding without threading
+    a PRNG key through the exchange; exact zeros dither to exactly 0, so
+    padded positions stay bit-zero through the quantizer."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    h = bits * jnp.uint32(2654435761)
+    h = h ^ (h >> jnp.uint32(16))
+    return (h >> jnp.uint32(8)).astype(jnp.float32) * (1.0 / (1 << 24))
+
+
+@dataclasses.dataclass(frozen=True)
+class QIntCodec(_DenseEFCodec):
+    """Integer quantization: one max-abs scale per chunk, codes in
+    ``[-qmax, qmax]`` via stochastic rounding (``floor(z/s + dither)``,
+    error < 1 ulp of the scale, bias absorbed by EF). ``bits=4`` packs two
+    offset-binary codes per byte."""
+
+    bits: int = 8
+
+    def __post_init__(self):
+        if self.bits not in (4, 8):
+            raise ValueError(f"qint bits must be 4 or 8, got {self.bits}")
+
+    @property
+    def name(self):
+        return f"qint{self.bits}"
+
+    @property
+    def qmax(self) -> int:
+        return 127 if self.bits == 8 else 7
+
+    def _encode(self, z, layout, mask):
+        lead, ce = z.shape[0], _chunk_elems(layout)
+        if mask is not None:
+            z = z * mask.astype(z.dtype)
+        zf = z.reshape(lead, ce).astype(jnp.float32)
+        qmax = float(self.qmax)
+        s = jnp.max(jnp.abs(zf), axis=1, keepdims=True) / qmax
+        s_safe = jnp.where(s > 0, s, 1.0)
+        q = jnp.clip(jnp.floor(zf / s_safe + _hash_dither(zf)), -qmax, qmax)
+        err = (zf - q * s).astype(z.dtype).reshape(z.shape)
+        if self.bits == 8:
+            payload = {"q": q.astype(jnp.int8), "scale": s}
+        else:
+            u = (q + qmax).astype(jnp.uint8)       # offset-binary in [0, 14]
+            pair = u.reshape(lead, ce // 2, 2)
+            payload = {"q": pair[..., 0] * 16 + pair[..., 1], "scale": s}
+        return payload, err
+
+    def decode(self, payload, layout, dtype=jnp.float32, use_pallas=False):
+        q, s = payload["q"], payload["scale"]
+        lead = q.shape[0]
+        if self.bits == 4:
+            hi, lo = q // 16, q % 16
+            q = jnp.stack([hi, lo], axis=-1).reshape(lead, -1)
+            q = q.astype(jnp.float32) - float(self.qmax)
+        return (q.astype(dtype) * s.astype(dtype)).reshape(
+            (lead,) + layout.chunk_shape)
+
+    def wire_bytes(self, layout, mode):
+        ce = _chunk_elems(layout)
+        per = (ce if self.bits == 8 else ce // 2) + 4   # codes + f32 scale
+        return {"scatter": per, "gather": per}
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_FACTORIES = {
+    "sign1bit": lambda arg: Sign1BitCodec(),
+    "topk": lambda arg: TopKCodec(density=0.01 if arg is None
+                                  else float(arg)),
+    "qint8": lambda arg: QIntCodec(bits=8),
+    "qint4": lambda arg: QIntCodec(bits=4),
+    "identity": lambda arg: IdentityCodec(),
+}
+
+CODEC_NAMES = tuple(sorted(_FACTORIES))
+
+# which codecs accept a ``codec_arg`` (and what it means)
+CODEC_ARGS = {"topk": "density in (0, 1] (default 0.01)"}
+
+
+def make_codec(spec, arg: Optional[float] = None) -> Codec:
+    """Resolve a codec name (plus optional argument) or pass through an
+    instance. Raises ``ValueError`` naming the registry on a bad name, and
+    on a ``codec_arg`` given to a codec that takes none. An instance plus
+    an ``arg`` re-parameterizes through the registry (so
+    ``codec=TopKCodec(), codec_arg=0.5`` means density 0.5, never a
+    silently ignored arg)."""
+    if isinstance(spec, Codec):
+        if arg is None:
+            return spec
+        if spec.name in _FACTORIES and spec.name in CODEC_ARGS:
+            return _FACTORIES[spec.name](arg)
+        raise ValueError(
+            f"codec {spec.name!r} takes no codec_arg (got {arg!r}); only "
+            f"{sorted(CODEC_ARGS)} are parameterized: {CODEC_ARGS}")
+    if not isinstance(spec, str) or spec not in _FACTORIES:
+        raise ValueError(
+            f"unknown codec {spec!r}; choose from {list(CODEC_NAMES)}")
+    if arg is not None and spec not in CODEC_ARGS:
+        raise ValueError(
+            f"codec {spec!r} takes no codec_arg (got {arg!r}); only "
+            f"{sorted(CODEC_ARGS)} are parameterized: {CODEC_ARGS}")
+    return _FACTORIES[spec](arg)

@@ -41,11 +41,13 @@ optionally per-leaf "trust" scalars), so one state type serves every base.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import codecs as CODECS
 from repro.core import compressor as C
 from repro.core import leafwise
 from repro.core import onebit_allreduce as AR
@@ -110,7 +112,12 @@ class CompressedDP:
     var_policy: Any = S.AdaptiveFreezePolicy(kappa=16)
     weight_decay: float = 0.0
     scale_mode: C.ScaleMode = "tensor"
-    quantize: bool = True
+    quantize: bool = True               # deprecated: False -> codec="identity"
+    codec: Any = "sign1bit"             # wire format of the EF exchange —
+                                        # a registry name (codecs.CODEC_NAMES)
+                                        # or a Codec instance
+    codec_arg: Optional[float] = None   # parameter for parameterized codecs
+                                        # (topk density)
     store_anchor: bool = True
     comm_dtype: Any = jnp.bfloat16
     state_dtype: Any = jnp.float32
@@ -120,6 +127,25 @@ class CompressedDP:
     def __post_init__(self):
         if self.style not in STYLES:
             raise ValueError(f"style={self.style!r}; choose from {STYLES}")
+        C.validate_scale_mode(self.scale_mode)
+        codec = self.codec
+        if not self.quantize:
+            warnings.warn(
+                "quantize=False is deprecated; use codec=\"identity\" "
+                "instead (the exact-mean exchange is now the identity "
+                "codec — see repro.core.codecs)", DeprecationWarning,
+                stacklevel=3)
+        # precedence (shared with OneBitConfig via
+        # codecs.resolve_with_quantize, so the legacy and composed paths
+        # can never disagree): the deprecated knob forces identity unless
+        # a NON-default codec is set — an explicit "sign1bit", name or
+        # instance, is indistinguishable from the default and is
+        # rewritten; any other explicit codec wins.
+        codec = CODECS.resolve_with_quantize(codec, self.quantize)
+        # resolve once, at config-build time: a bad codec name / codec_arg
+        # fails here with the registry listed, not deep inside the exchange
+        object.__setattr__(self, "codec",
+                           CODECS.make_codec(codec, self.codec_arg))
         if (self.style == "accumulate" and self.base.needs_anchor
                 and not self.store_anchor):
             raise ValueError(
@@ -167,7 +193,9 @@ class ComposedOptimizer:
         self.vspecs = plan.vspecs
         self.ar_cfg = leafwise.make_ar_cfg(
             plan, scale_mode=cfg.scale_mode, quantize=cfg.quantize,
-            use_pallas=cfg.use_pallas, comm_dtype=cfg.comm_dtype)
+            codec=cfg.codec, use_pallas=cfg.use_pallas,
+            comm_dtype=cfg.comm_dtype)
+        self.codec = self.ar_cfg.codec
         self._slot_specs = self.base.slot_specs()
         self._use_sync_policy = cfg.style == "accumulate"
         self._use_var_policy = (cfg.style in ("accumulate", "gradient")

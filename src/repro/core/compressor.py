@@ -35,6 +35,22 @@ import numpy as np
 
 ScaleMode = str  # "tensor" | "chunk" | "row"
 
+SCALE_MODES = ("tensor", "chunk", "row")
+
+
+def validate_scale_mode(mode: ScaleMode) -> ScaleMode:
+    """Fail fast on a bad scale mode, at config-build time.
+
+    ``ScaleMode`` is a plain string, so a typo like ``"rows"`` would
+    otherwise only surface deep inside ``_scales`` (or silently misroute a
+    branch that only checks equality). Every config object validates
+    through here in its ``__post_init__``.
+    """
+    if mode not in SCALE_MODES:
+        raise ValueError(
+            f"unknown scale_mode {mode!r}; choose from {list(SCALE_MODES)}")
+    return mode
+
 
 # ---------------------------------------------------------------------------
 # Leaf layouts
@@ -601,7 +617,7 @@ def decompress(packed: jnp.ndarray, scales: jnp.ndarray, count: int,
 
 
 def compressed_bytes_levels(layout: LeafLayout, mode: ScaleMode,
-                            inner_itemsize: int = 2) -> dict:
+                            inner_itemsize: int = 2, codec=None) -> dict:
     """Per-level bytes one worker SENDS on one hierarchical sync.
 
     ``inner``: the full-precision intra-pod phases — the reduce-scatter
@@ -610,39 +626,32 @@ def compressed_bytes_levels(layout: LeafLayout, mode: ScaleMode,
     n_inner − 1 pod-mates, both at the wire dtype (``inner_itemsize``).
 
     ``outer``: Algorithm 2's compressed exchange across pods over the owned
-    slice — scatter keeps the own chunk local, so (n_outer − 1) packed
+    slice — scatter keeps the own chunk local, so (n_outer − 1) encoded
     chunks go out, and the gather broadcasts this pod's compressed server
     chunk to the n_outer − 1 peers: the same (n_outer − 1) payloads again.
-    Scales ride along with identical replication in both phases: one f32
-    per chunk for tensor/chunk granularity, one per view row for row
-    granularity.
+    The payload size of one chunk in each phase is the *codec*'s
+    (``codec.wire_bytes``; default sign1bit: ``elems/8`` packed sign bytes
+    plus the scale-granularity-dependent f32 scales — one per chunk for
+    tensor/chunk granularity, one per view row for row granularity).
 
     A flat layout (``n_inner == 1``) has ``inner == 0`` and ``outer`` equal
     to the historical flat-path accounting.
     """
+    from repro.core.codecs import make_codec   # lazy: codecs imports us
+    codec = make_codec("sign1bit" if codec is None else codec)
     chunk_elems = int(np.prod(layout.chunk_shape))
-    chunk_packed = chunk_elems // 8                      # bytes per chunk
     ni, no = layout.n_inner, layout.n_outer
     inner = 2 * (ni - 1) * no * chunk_elems * inner_itemsize
-    if mode in ("tensor", "chunk"):
-        scatter_scales = gather_scales = 1
-    elif len(layout.view_shape) == 2:
-        # row granularity degenerates on flatten views: the worker side
-        # falls back to chunk scales (see _scales), the server side to
-        # per-element scales (see onebit_allreduce._server_compress).
-        scatter_scales, gather_scales = 1, layout.view_shape[1]
-    else:
-        scatter_scales = gather_scales = layout.view_shape[1]
-    outer = (no - 1) * (2 * chunk_packed
-                        + 4 * (scatter_scales + gather_scales))
+    wb = codec.wire_bytes(layout, mode)
+    outer = (no - 1) * (wb["scatter"] + wb["gather"])
     return {"inner": inner, "outer": outer}
 
 
 def compressed_bytes(layout: LeafLayout, mode: ScaleMode,
-                     inner_itemsize: int = 2) -> int:
+                     inner_itemsize: int = 2, codec=None) -> int:
     """Total bytes per worker SENT on one sync, across both levels (the
     flat path is the ``inner == 0`` special case)."""
-    lv = compressed_bytes_levels(layout, mode, inner_itemsize)
+    lv = compressed_bytes_levels(layout, mode, inner_itemsize, codec)
     return lv["inner"] + lv["outer"]
 
 

@@ -69,9 +69,19 @@ def make_plan(param_shapes, specs, dp_mask, n_workers: int,
 
 
 def make_ar_cfg(plan: LeafPlan, *, scale_mode, quantize, use_pallas,
-                comm_dtype) -> AR.OneBitConfig:
-    """Algorithm-2 exchange config bound to a plan's topology."""
+                comm_dtype, codec=None, codec_arg=None) -> AR.OneBitConfig:
+    """Algorithm-2 exchange config bound to a plan's topology.
+
+    ``codec`` is a wire-format name or instance (``repro.core.codecs``);
+    ``None`` keeps the historical rule: sign1bit, or identity when
+    ``quantize`` is False. A name is resolved here with ``codec_arg``
+    applied, so callers holding an unresolved (name, arg) pair — the
+    legacy optimizer classes — don't silently drop the arg."""
+    if codec is not None:
+        from repro.core.codecs import make_codec
+        codec = make_codec(codec, codec_arg)
     return AR.OneBitConfig(scale_mode=scale_mode, quantize=quantize,
+                           codec=codec,
                            model_axes=plan.model_axes,
                            use_pallas=use_pallas,
                            hierarchy=plan.hierarchy,

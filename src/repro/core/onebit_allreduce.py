@@ -1,20 +1,24 @@
-"""Error-feedback 1-bit AllReduce (paper Algorithm 2), TPU-native.
+"""Error-feedback compressed AllReduce (paper Algorithm 2), TPU-native.
 
 DeepSpeed implements Algorithm 2 as a custom two-phase NCCL/Gloo collective.
 The TPU-idiomatic equivalent used here is a chunked scatter-reduce /
-all-gather over the mesh worker axes, exchanging *bit-packed uint8* tensors:
+all-gather over the mesh worker axes, exchanging codec *payloads* (pytrees
+of arrays — bit-packed uint8 for the default sign-1-bit codec):
 
-  worker side   z = u + δ_w ;  (packed, scales, δ_w') = EF-compress(z)
-  scatter       all_to_all of packed chunks (+ scales): worker j receives
-                every worker's chunk j            — "send to server"
-  server side   avg = mean_i scale_i·sign_i ;  y = avg + δ_s ;
-                (packed', scale', δ_s') = EF-compress(y)
+  worker side   z = u + δ_w ;  (payload, δ_w') = codec.encode_worker(z)
+  scatter       all_to_all of payload leaves: worker j receives every
+                worker's chunk j                  — "send to server"
+  server side   avg = mean_i decode(payload_i) ;  y = avg + δ_s ;
+                (payload', δ_s') = codec.encode_server(y)
   gather        all_gather of the compressed chunk results — "broadcast"
 
-Per-worker traffic is ≈ d/8 + d/8 bytes versus 4·d for a bf16 ring
-AllReduce: the 32× volume reduction of the paper, visible verbatim in the
-lowered HLO as uint8 collectives (this is what the roofline's collective
-term reads).
+With the default ``sign1bit`` codec per-worker traffic is ≈ d/8 + d/8
+bytes versus 4·d for a bf16 ring AllReduce: the 32× volume reduction of
+the paper, visible verbatim in the lowered HLO as uint8 collectives (this
+is what the roofline's collective term reads). Other codecs
+(:mod:`repro.core.codecs`: top-k, qint8/qint4, identity) trade volume for
+fidelity on the same schedule; ``codec.wire_bytes`` keeps the accounting
+honest per format.
 
 All chunk bookkeeping is static (see ``compressor.make_layout``); every op
 other than the two collectives is chip-local.
@@ -22,12 +26,17 @@ other than the two collectives is chip-local.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import codecs as CODECS
 from repro.core import compressor as C
+from repro.core.codecs import _server_compress  # noqa: F401 (moved to
+                                                # codecs with the sign1bit
+                                                # codec; alias kept for the
+                                                # kernel-parity tests)
 from repro.core.comm import Comm, Hierarchy
 
 
@@ -57,18 +66,37 @@ def init_ef_state(layout: C.LeafLayout, dtype=jnp.float32) -> EFState:
 class OneBitConfig:
     scale_mode: C.ScaleMode = "tensor"   # paper-faithful default
     compute_dtype: jnp.dtype = jnp.float32
-    quantize: bool = True                # False -> exact chunked mean
-                                         # (identity compressor; tests/ablation)
+    quantize: bool = True                # deprecated alias: False forces the
+                                         # identity codec (exact chunked mean)
+    codec: Any = None                    # Codec instance or registry name;
+                                         # None -> "sign1bit" (resolved at
+                                         # construction, see __post_init__)
     model_axes: tuple = ()               # manual tensor-parallel axes when the
                                          # optimizer runs fully-manual (scales
                                          # psum over these)
     use_pallas: bool = False             # route EF-compress/decompress through
-                                         # the fused kernels (repro.kernels)
+                                         # the fused kernels (repro.kernels);
+                                         # only effective when codec.has_pallas
     hierarchy: Optional[Hierarchy] = None  # two-level topology: reduce
                                          # uncompressed over hierarchy.inner_axes,
-                                         # 1-bit-compress only over outer_axes
+                                         # compress only over outer_axes
     comm_dtype: jnp.dtype = jnp.bfloat16  # wire dtype of the uncompressed
                                          # intra-pod phases (hierarchy only)
+
+    def __post_init__(self):
+        C.validate_scale_mode(self.scale_mode)
+        # quantize=False back-compat precedence lives in ONE place
+        # (codecs.resolve_with_quantize), shared with CompressedDP so the
+        # legacy and composed paths can never disagree
+        codec = CODECS.resolve_with_quantize(self.codec, self.quantize)
+        object.__setattr__(self, "codec", CODECS.make_codec(codec))
+
+
+def _use_kernels(cfg: OneBitConfig, vspec) -> bool:
+    if not cfg.use_pallas:
+        return False
+    from repro.kernels import dispatch as K
+    return K.kernel_codec(cfg.codec) and K.kernel_safe(vspec)
 
 
 def onebit_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
@@ -85,89 +113,58 @@ def onebit_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
     With ``cfg.hierarchy`` set the same estimate is produced by the
     topology-aware two-level schedule (:func:`_hier_allreduce_view`); the
     flat code below is its exact ``n_inner == 1`` degenerate case.
+
+    The wire format is ``cfg.codec``'s (sign-1-bit by default): payloads
+    are pytrees whose leaves all carry the chunk-enumeration axis first, so
+    the two collectives simply map over them. Exact codecs
+    (``needs_ef=False``) leave the EF state untouched.
     """
     if cfg.hierarchy is not None:
         assert layout.n_inner == cfg.hierarchy.inner, (layout, cfg.hierarchy)
         return _hier_allreduce_view(comm, z_view, ef, layout, cfg, vspec)
+    codec = cfg.codec
     cst = lambda x: C.constrain(x, vspec)
-    if not cfg.quantize:
-        # Identity compressor: the exact same collective schedule exchanging
-        # uncompressed values. Used for the degenerate-equivalence tests and
-        # the "no compression" ablation.
-        recv = cst(comm.all_to_all(z_view, split_axis=0, concat_axis=0))
-        avg = recv.mean(axis=0)
-        out = cst(comm.all_gather(avg[None], axis=0, tiled=True))
-        return out.astype(cfg.compute_dtype), ef
+    mask = (C.pad_mask(layout, dtype=z_view.dtype)
+            if codec.needs_ef else None)
+    # Kernel dispatch: only codecs with fused kernels (sign1bit), and
+    # GSPMD-auto-sharded views stay on the constrained jnp path
+    # (dispatch.kernel_safe). The sign1bit server side of row-granularity
+    # on 2-D (flatten) views also stays on jnp — it degenerates to
+    # per-element scales (handled inside the codec).
+    use_k = _use_kernels(cfg, vspec)
 
-    mask = C.pad_mask(layout, dtype=z_view.dtype)
-    # Kernel dispatch: GSPMD-auto-sharded views stay on the constrained jnp
-    # path (dispatch.kernel_safe), as does the server side of
-    # row-granularity on 2-D (flatten) views, which degenerates to
-    # per-element scales (see dispatch.server_compress_view).
-    use_k = cfg.use_pallas
-    if use_k:
-        from repro.kernels import dispatch as K
-        use_k = K.kernel_safe(vspec)
-    k_server = use_k and not (cfg.scale_mode == "row"
-                              and len(layout.view_shape) == 2)
     # --- worker side -------------------------------------------------------
-    if use_k:
-        packed, scales, err_w = K.ef_compress_view(
-            cst(z_view), ef.err_worker.astype(z_view.dtype), layout,
-            cfg.scale_mode, cfg.model_axes)
-    else:
-        zw = cst(z_view + ef.err_worker.astype(z_view.dtype))
-        packed, scales, err_w = C.ef_compress(zw, layout, cfg.scale_mode,
-                                              mask, cfg.model_axes)
-    packed, err_w = cst(packed), cst(err_w)
+    payload, err_w = codec.encode_worker(
+        cst(z_view), ef.err_worker if codec.needs_ef else None, layout,
+        cfg.scale_mode, mask, cfg.model_axes, use_pallas=use_k, cst=cst)
 
     # --- scatter: worker j collects chunk j from everyone ------------------
-    # packed: (n, A/n, ..., C/8) uint8 -> rows become sender index.
-    recv = cst(comm.all_to_all(packed, split_axis=0, concat_axis=0))
-    # scales need the same routing; broadcast "tensor" scales to chunk rows
-    # first so each receiver gets the proper per-sender magnitude.
-    bscales = jnp.broadcast_to(
-        scales, (layout.n,) + scales.shape[1:]).astype(jnp.float32)
-    rscales = comm.all_to_all(bscales, split_axis=0, concat_axis=0)
+    # every payload leaf carries the chunk axis first -> rows become the
+    # sender index after the all_to_all.
+    recv = jax.tree.map(
+        lambda p: cst(comm.all_to_all(cst(p), split_axis=0, concat_axis=0)),
+        payload)
 
     # --- server side (this worker serves its chunk) -------------------------
-    if use_k:
-        vals = cst(K.decompress_view(recv, rscales, layout,
-                                     cfg.compute_dtype))
-    else:
-        vals = cst(C.unpack_signs(recv, layout.pack_count,
-                                  cfg.compute_dtype))
-        vals = vals * rscales.astype(cfg.compute_dtype)
-    avg = vals.mean(axis=0)                                   # (A/n, *rest)
+    vals = codec.decode(recv, layout, cfg.compute_dtype, use_pallas=use_k)
+    avg = cst(vals).mean(axis=0)                              # (A/n, *rest)
     widx = comm.index() if worker_index is None else worker_index
-    # Server-side compression shares the leaf layout but acts on one chunk;
-    # reuse the chunk-level granularity of the configured mode.
-    if k_server:
-        packed_s, scales_s, err_s = K.server_compress_view(
-            cst(avg[None]), ef.err_server.astype(cfg.compute_dtype)[None],
-            layout, cfg.scale_mode, widx, cfg.model_axes)
-    else:
-        y = avg + ef.err_server.astype(cfg.compute_dtype)
-        y_exp = cst(y[None])                                  # (1, A/n, *rest)
-        s_mask = None if mask is None else mask[widx][None]
-        packed_s, scales_s, err_s = _server_compress(
-            y_exp, layout, cfg.scale_mode, s_mask, cfg.model_axes)
-    packed_s = cst(packed_s)
-    err_s = cst(err_s)[0]
+    s_mask = None if mask is None else mask[widx][None]
+    payload_s, err_s = codec.encode_server(
+        avg, ef.err_server if codec.needs_ef else None, layout,
+        cfg.scale_mode, s_mask, widx, cfg.model_axes, use_pallas=use_k,
+        cst=cst)
 
     # --- gather: broadcast compressed chunk results -------------------------
-    gpacked = cst(comm.all_gather(packed_s, axis=0, tiled=True))
-    gscales = comm.all_gather(
-        scales_s.astype(jnp.float32), axis=0, tiled=True)
-    if k_server:
-        out = cst(K.decompress_view(gpacked, gscales, layout,
-                                    cfg.compute_dtype))
-    else:
-        out = cst(C.unpack_signs(gpacked, layout.pack_count,
-                                 cfg.compute_dtype))
-        out = out * gscales.astype(cfg.compute_dtype)
-    return out, EFState(err_worker=err_w.astype(ef.err_worker.dtype),
-                        err_server=err_s.astype(ef.err_server.dtype))
+    gathered = jax.tree.map(
+        lambda p: cst(comm.all_gather(cst(p), axis=0, tiled=True)),
+        payload_s)
+    out = cst(codec.decode(gathered, layout, cfg.compute_dtype,
+                           use_pallas=use_k))
+    if codec.needs_ef:
+        ef = EFState(err_worker=cst(err_w).astype(ef.err_worker.dtype),
+                     err_server=err_s.astype(ef.err_server.dtype))
+    return out.astype(cfg.compute_dtype), ef
 
 
 def _hier_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
@@ -181,19 +178,20 @@ def _hier_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
          over the fast inner axes of the view reshaped (n_inner, n_outer,
          A/n, *rest); the mean over senders leaves this worker owning the
          pod-mean of slice j.
-      2. **inter-pod Algorithm 2** on the owned slice: EF-compress (worker
-         error), all_to_all the packed bits across pods, server-average +
-         EF-compress the chunk this pod serves (server error), all_gather
+      2. **inter-pod Algorithm 2** on the owned slice: codec encode (worker
+         error), all_to_all the payload across pods, server-average +
+         codec encode the chunk this pod serves (server error), all_gather
          the compressed results. Identical to the flat path with n→n_outer.
-      3. **intra-pod all_gather** of the decompressed slice rebuilds the
+      3. **intra-pod all_gather** of the decoded slice rebuilds the
          full view.
 
-    Only step 2 crosses the slow inter-pod links — at 1 bit/element — while
-    the bulky uncompressed traffic of steps 1/3 stays inside the pod. With
-    ``n_inner == 1`` steps 1/3 are skipped entirely and step 2 *is* the flat
-    path (bitwise, including scale denominators), which the degenerate-
-    equivalence tests pin down.
+    Only step 2 crosses the slow inter-pod links — at the codec's wire
+    rate — while the bulky uncompressed traffic of steps 1/3 stays inside
+    the pod. With ``n_inner == 1`` steps 1/3 are skipped entirely and
+    step 2 *is* the flat path (bitwise, including scale denominators),
+    which the degenerate-equivalence tests pin down.
     """
+    codec = cfg.codec
     h = cfg.hierarchy
     ni, no = layout.n_inner, layout.n_outer
     vs = layout.view_shape
@@ -212,80 +210,48 @@ def _hier_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
         j = jnp.zeros((), jnp.int32)
     own = cst(own.astype(cfg.compute_dtype))
 
-    if not cfg.quantize:
-        # Identity compressor: the exact two-level collective schedule
-        # exchanging uncompressed values (degenerate-equivalence/ablation).
-        recv = cst(outer.all_to_all(own, split_axis=0, concat_axis=0))
-        avg = recv.mean(axis=0)
-        out_slice = cst(outer.all_gather(avg[None], axis=0, tiled=True))
-        new_ef = ef
+    mask_full = (C.pad_mask(layout, dtype=own.dtype)
+                 if codec.needs_ef else None)
+    if mask_full is not None:
+        m_slice = jnp.take(
+            mask_full.reshape((ni, no) + mask_full.shape[1:]), j, axis=0)
     else:
-        mask_full = C.pad_mask(layout, dtype=own.dtype)
-        if mask_full is not None:
-            m_slice = jnp.take(
-                mask_full.reshape((ni, no) + mask_full.shape[1:]), j, axis=0)
-        else:
-            m_slice = None
-        use_k = cfg.use_pallas
-        if use_k:
-            from repro.kernels import dispatch as K
-            use_k = K.kernel_safe(vspec)
-        k_server = use_k and not (cfg.scale_mode == "row" and len(vs) == 2)
+        m_slice = None
+    use_k = _use_kernels(cfg, vspec)
 
-        # --- 2a: worker-side EF-compress of the owned slice ----------------
-        if use_k:
-            packed, scales, err_w = K.ef_compress_view(
-                own, ef.err_worker.astype(own.dtype), layout,
-                cfg.scale_mode, cfg.model_axes, inner_index=j)
-        else:
-            zw = cst(own + ef.err_worker.astype(own.dtype))
-            packed, scales, err_w = C.ef_compress_slice(
-                zw, layout, cfg.scale_mode, m_slice, j, cfg.model_axes)
-        packed, err_w = cst(packed), cst(err_w)
+    # --- 2a: worker-side codec encode of the owned slice --------------------
+    payload, err_w = codec.encode_worker(
+        own, ef.err_worker if codec.needs_ef else None, layout,
+        cfg.scale_mode, m_slice, cfg.model_axes, inner_index=j,
+        use_pallas=use_k, cst=cst)
 
-        # --- 2b: inter-pod scatter: pod k collects sub-chunk k -------------
-        recv = cst(outer.all_to_all(packed, split_axis=0, concat_axis=0))
-        bscales = jnp.broadcast_to(
-            scales, (no,) + scales.shape[1:]).astype(jnp.float32)
-        rscales = outer.all_to_all(bscales, split_axis=0, concat_axis=0)
+    # --- 2b: inter-pod scatter: pod k collects sub-chunk k -------------------
+    recv = jax.tree.map(
+        lambda p: cst(outer.all_to_all(cst(p), split_axis=0, concat_axis=0)),
+        payload)
 
-        # --- 2c: server side (this pod serves full-view chunk j*no+k) ------
-        if use_k:
-            vals = cst(K.decompress_view(recv, rscales, layout,
-                                         cfg.compute_dtype))
-        else:
-            vals = cst(C.unpack_signs(recv, layout.pack_count,
-                                      cfg.compute_dtype))
-            vals = vals * rscales.astype(cfg.compute_dtype)
-        avg = vals.mean(axis=0)                            # (A/n, *rest)
-        k_idx = outer.index()
-        widx = j * no + k_idx
-        if k_server:
-            packed_s, scales_s, err_s = K.server_compress_view(
-                cst(avg[None]), ef.err_server.astype(cfg.compute_dtype)[None],
-                layout, cfg.scale_mode, widx, cfg.model_axes)
-        else:
-            y = avg + ef.err_server.astype(cfg.compute_dtype)
-            y_exp = cst(y[None])
-            s_mask = None if mask_full is None else mask_full[widx][None]
-            packed_s, scales_s, err_s = _server_compress(
-                y_exp, layout, cfg.scale_mode, s_mask, cfg.model_axes)
-        packed_s = cst(packed_s)
-        err_s = cst(err_s)[0]
+    # --- 2c: server side (this pod serves full-view chunk j*no+k) -----------
+    vals = codec.decode(recv, layout, cfg.compute_dtype, use_pallas=use_k)
+    avg = cst(vals).mean(axis=0)                           # (A/n, *rest)
+    k_idx = outer.index()
+    widx = j * no + k_idx
+    s_mask = None if mask_full is None else mask_full[widx][None]
+    payload_s, err_s = codec.encode_server(
+        avg, ef.err_server if codec.needs_ef else None, layout,
+        cfg.scale_mode, s_mask, widx, cfg.model_axes, use_pallas=use_k,
+        cst=cst)
 
-        # --- 2d: inter-pod gather of the compressed chunk results ----------
-        gpacked = cst(outer.all_gather(packed_s, axis=0, tiled=True))
-        gscales = outer.all_gather(
-            scales_s.astype(jnp.float32), axis=0, tiled=True)
-        if k_server:
-            out_slice = cst(K.decompress_view(gpacked, gscales, layout,
-                                              cfg.compute_dtype))
-        else:
-            out_slice = cst(C.unpack_signs(gpacked, layout.pack_count,
-                                           cfg.compute_dtype))
-            out_slice = out_slice * gscales.astype(cfg.compute_dtype)
-        new_ef = EFState(err_worker=err_w.astype(ef.err_worker.dtype),
+    # --- 2d: inter-pod gather of the compressed chunk results ---------------
+    gathered = jax.tree.map(
+        lambda p: cst(outer.all_gather(cst(p), axis=0, tiled=True)),
+        payload_s)
+    out_slice = cst(codec.decode(gathered, layout, cfg.compute_dtype,
+                                 use_pallas=use_k))
+    if codec.needs_ef:
+        new_ef = EFState(err_worker=cst(err_w).astype(ef.err_worker.dtype),
                          err_server=err_s.astype(ef.err_server.dtype))
+    else:
+        new_ef = ef
 
     # --- 3: intra-pod all_gather rebuilds the full view --------------------
     if ni > 1:
@@ -294,35 +260,6 @@ def _hier_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
     else:
         out = out_slice.reshape(vs)
     return cst(out).astype(cfg.compute_dtype), new_ef
-
-
-def _server_compress(y, layout, mode, mask, model_axes=()):
-    """EF-compress one server chunk (leading dim 1)."""
-    from repro.core.compressor import _psum_model
-    az = jnp.abs(y)
-    if mask is not None:
-        az = az * mask
-    rest = layout.rest_factor
-    for s in y.shape[2:]:
-        rest *= s
-    if mode == "row":
-        axes = tuple(range(2, y.ndim))
-        cnt = max(rest, 1)
-        s = (_psum_model(az.sum(axis=axes), model_axes) / cnt
-             if y.ndim > 2 else az)
-        scales = s.reshape(y.shape[:2] + (1,) * (y.ndim - 2))
-    else:  # tensor / chunk -> one scale for this chunk
-        denom = (az.size * layout.rest_factor if mask is None
-                 else jnp.maximum(mask.sum() * rest, 1.0))
-        denom = jnp.asarray(denom, y.dtype)
-        scales = (_psum_model(az.sum(), model_axes)
-                  / denom).reshape((1,) * y.ndim)
-    packed = C.pack_signs(y)
-    signs = jnp.where(y >= 0, 1.0, -1.0).astype(y.dtype)
-    err = y - signs * scales.astype(y.dtype)
-    if mask is not None:
-        err = err * mask.astype(err.dtype)
-    return packed, scales, err
 
 
 def fullprec_allreduce_view(comm: Comm, z_view: jnp.ndarray,

@@ -85,6 +85,7 @@ class ZeroOneAdam:
         self.vspecs = plan.vspecs
         self.ar_cfg = leafwise.make_ar_cfg(
             plan, scale_mode=cfg.scale_mode, quantize=cfg.quantize,
+            codec=cfg.codec, codec_arg=cfg.codec_arg,
             use_pallas=cfg.use_pallas, comm_dtype=cfg.comm_dtype)
 
     def flat(self, tree):

@@ -63,6 +63,17 @@ def _scales_to_rows(scales, lead_shape, rows):
     return s
 
 
+def kernel_codec(codec) -> bool:
+    """Whether the fused Pallas path exists for this wire format.
+
+    Only the sign-1-bit codec has kernels (this module mirrors its packed
+    signs + L1 scales bit-for-bit); every other codec declares
+    ``has_pallas=False`` and the exchange stays on the jnp path even when
+    ``use_pallas=True`` is configured.
+    """
+    return bool(getattr(codec, "has_pallas", False))
+
+
 def kernel_safe(vspec) -> bool:
     """Whether kernel dispatch may handle a view with this tensor-parallel
     spec. Pallas calls carry no GSPMD partitioning rules yet, so a view

@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ALL_SHAPES, ASSIGNED, get, list_archs
-from repro.core import OptimizerConfig, REGISTRY_NAMES, schedules as S
+from repro.core import (CODEC_NAMES, OptimizerConfig, REGISTRY_NAMES,
+                        schedules as S)
 from repro.launch import shapes as SH
 from repro.launch.mesh import make_production_mesh, worker_axes
 from repro.models import transformer as T
@@ -260,10 +261,12 @@ def collective_group_bytes(hlo_text: str, pod_span: Optional[int] = None):
 
 
 def default_opt_cfg(optimizer: str = "zero_one_adam", scale_mode="tensor",
-                    hierarchy_inner: int = 0):
+                    hierarchy_inner: int = 0, codec: str = "sign1bit",
+                    codec_arg=None):
     from repro.core import Hierarchy
     return OptimizerConfig(
         name=optimizer,
+        codec=codec, codec_arg=codec_arg,
         lr=S.LinearWarmupExpDecay(peak_lr=4e-4, warmup_steps=12500),
         var_policy=S.AdaptiveFreezePolicy(kappa=16),
         sync_policy=S.LrProportionalSyncPolicy(
@@ -281,7 +284,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
             optimizer: str = "zero_one_adam", scale_mode: str = "tensor",
             micro_override=None, window_cache: bool = False,
             mesh_shape=None, verbose: bool = True,
-            hierarchy: bool = False):
+            hierarchy: bool = False, codec: str = "sign1bit",
+            codec_arg=None):
     spec = get(arch)
     shape = SH.SHAPES[shape_name]
     if shape_name not in spec.shapes:
@@ -311,7 +315,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
                 raise ValueError("--hierarchy needs the multi-pod mesh")
             inner = mesh.shape["data"]
         tr = Trainer(cfg, default_opt_cfg(optimizer, scale_mode,
-                                          hierarchy_inner=inner), mesh=mesh,
+                                          hierarchy_inner=inner,
+                                          codec=codec,
+                                          codec_arg=codec_arg), mesh=mesh,
                      trainer_cfg=TrainerConfig(micro_batches=micro,
                                                worker_axes=W))
         fn, _ = tr.mesh_step_fn()
@@ -354,6 +360,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
                  else ("2x16x16" if multi_pod else "16x16")),
         "optimizer": optimizer if shape.kind == "train" else None,
         "scale_mode": scale_mode if shape.kind == "train" else None,
+        "codec": codec if shape.kind == "train" else None,
         "hierarchy": bool(hierarchy) if shape.kind == "train" else None,
         "micro": micro_override, "window_cache": window_cache,
         "kind": shape.kind,
@@ -403,6 +410,12 @@ def main():
                     choices=list(REGISTRY_NAMES))
     ap.add_argument("--scale-mode", default="tensor",
                     choices=["tensor", "chunk", "row"])
+    ap.add_argument("--codec", default="sign1bit",
+                    choices=list(CODEC_NAMES),
+                    help="wire format of the compressed EF exchange; "
+                         "non-sign1bit codecs lower through the jnp path")
+    ap.add_argument("--codec-arg", type=float, default=None,
+                    help="parameter for parameterized codecs (topk density)")
     ap.add_argument("--micro", type=int, default=None)
     ap.add_argument("--hierarchy", action="store_true",
                     help="two-level AllReduce: uncompressed intra-pod "
@@ -434,7 +447,8 @@ def main():
                           scale_mode=args.scale_mode,
                           micro_override=args.micro,
                           window_cache=args.window_cache,
-                          mesh_shape=ms, hierarchy=args.hierarchy)
+                          mesh_shape=ms, hierarchy=args.hierarchy,
+                          codec=args.codec, codec_arg=args.codec_arg)
         except Exception as e:  # noqa: BLE001 — report, keep going
             rec = {"arch": a, "shape": s,
                    "mesh": "2x16x16" if mp else "16x16",

@@ -23,8 +23,8 @@ import numpy as np
 
 from repro.checkpointing import io as ckpt_io
 from repro.configs import get
-from repro.core import (Hierarchy, OptimizerConfig, REGISTRY_NAMES,
-                        comm_accounting, schedules as S)
+from repro.core import (CODEC_NAMES, Hierarchy, OptimizerConfig,
+                        REGISTRY_NAMES, comm_accounting, schedules as S)
 from repro.data import DataConfig, SyntheticLM
 from repro.train import Trainer, TrainerConfig
 
@@ -42,6 +42,7 @@ def build_opt_cfg(args) -> OptimizerConfig:
             max_interval=args.max_interval),
         onebit_warmup=args.onebit_warmup,
         scale_mode=args.scale_mode,
+        codec=args.codec, codec_arg=args.codec_arg,
         use_pallas=args.use_pallas,
         hierarchy=(Hierarchy(inner=args.hierarchy)
                    if args.hierarchy else None))
@@ -69,6 +70,13 @@ def main():
     ap.add_argument("--onebit-warmup", type=int, default=20)
     ap.add_argument("--scale-mode", default="tensor",
                     choices=["tensor", "chunk", "row"])
+    ap.add_argument("--codec", default="sign1bit",
+                    choices=list(CODEC_NAMES),
+                    help="wire format of the compressed EF exchange "
+                         "(repro.core.codecs); sign1bit is the paper's")
+    ap.add_argument("--codec-arg", type=float, default=None,
+                    help="parameter for parameterized codecs "
+                         "(topk: density, default 0.01)")
     ap.add_argument("--use-pallas", action="store_true",
                     help="route the optimizer hot path through the fused "
                          "Pallas kernels (interpreted off-TPU)")
@@ -101,6 +109,7 @@ def main():
         micro_batches=args.micro_batches))
     acct = comm_accounting(tr.opt)
     print(f"arch={cfg.name} params(dp)={acct['dp_params']/1e6:.2f}M "
+          f"codec={acct['codec']} "
           f"bits/param/sync={acct['bits_per_param_sync']:.3f} "
           f"workers={n} optimizer={args.optimizer}")
     if acct["n_inner"] > 1:

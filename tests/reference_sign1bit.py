@@ -1,0 +1,318 @@
+"""FROZEN pre-refactor copy of the sign-1-bit EF exchange (regression pin).
+
+This module is a verbatim snapshot of ``repro.core.onebit_allreduce`` as it
+stood BEFORE the pluggable-codec refactor (PR 4): the worker/server phases
+hardwire packed sign bits + L1 scales. tests/test_codecs.py runs it side by
+side with the refactored, codec-parameterized exchange and asserts that
+``codec="sign1bit"`` (and the identity codec vs the old ``quantize=False``
+branch) reproduces this trajectory BITWISE — outputs and EF state — across
+flat / pallas / hierarchy configurations.
+
+Do not "fix" or modernize this file; its value is that it does not change.
+The only edits vs the original are this docstring and the imports of
+``EFState``/``OneBitConfig`` (re-used from the live module so state pytrees
+are interchangeable).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressor as C
+from repro.core.comm import Comm, Hierarchy  # noqa: F401 (signature compat)
+from repro.core.onebit_allreduce import EFState, OneBitConfig  # noqa: F401
+
+
+def onebit_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
+                          layout: C.LeafLayout, cfg: OneBitConfig,
+                          vspec=None, worker_index=None):
+    """Algorithm 2 over one leaf's comm view. Returns (mean estimate, EFState).
+
+    ``z_view``: this worker's buffer in view shape (n, A/n, *rest).
+    ``vspec``: tensor-parallel PartitionSpec entries of the view — threaded
+    through every shape-changing op so the compressed pipeline stays
+    model-sharded (see compressor.constrain).
+    The returned value estimates ``mean_i z_view^{(i)}`` in view shape.
+
+    With ``cfg.hierarchy`` set the same estimate is produced by the
+    topology-aware two-level schedule (:func:`_hier_allreduce_view`); the
+    flat code below is its exact ``n_inner == 1`` degenerate case.
+    """
+    if cfg.hierarchy is not None:
+        assert layout.n_inner == cfg.hierarchy.inner, (layout, cfg.hierarchy)
+        return _hier_allreduce_view(comm, z_view, ef, layout, cfg, vspec)
+    cst = lambda x: C.constrain(x, vspec)
+    if not cfg.quantize:
+        # Identity compressor: the exact same collective schedule exchanging
+        # uncompressed values. Used for the degenerate-equivalence tests and
+        # the "no compression" ablation.
+        recv = cst(comm.all_to_all(z_view, split_axis=0, concat_axis=0))
+        avg = recv.mean(axis=0)
+        out = cst(comm.all_gather(avg[None], axis=0, tiled=True))
+        return out.astype(cfg.compute_dtype), ef
+
+    mask = C.pad_mask(layout, dtype=z_view.dtype)
+    # Kernel dispatch: GSPMD-auto-sharded views stay on the constrained jnp
+    # path (dispatch.kernel_safe), as does the server side of
+    # row-granularity on 2-D (flatten) views, which degenerates to
+    # per-element scales (see dispatch.server_compress_view).
+    use_k = cfg.use_pallas
+    if use_k:
+        from repro.kernels import dispatch as K
+        use_k = K.kernel_safe(vspec)
+    k_server = use_k and not (cfg.scale_mode == "row"
+                              and len(layout.view_shape) == 2)
+    # --- worker side -------------------------------------------------------
+    if use_k:
+        packed, scales, err_w = K.ef_compress_view(
+            cst(z_view), ef.err_worker.astype(z_view.dtype), layout,
+            cfg.scale_mode, cfg.model_axes)
+    else:
+        zw = cst(z_view + ef.err_worker.astype(z_view.dtype))
+        packed, scales, err_w = C.ef_compress(zw, layout, cfg.scale_mode,
+                                              mask, cfg.model_axes)
+    packed, err_w = cst(packed), cst(err_w)
+
+    # --- scatter: worker j collects chunk j from everyone ------------------
+    # packed: (n, A/n, ..., C/8) uint8 -> rows become sender index.
+    recv = cst(comm.all_to_all(packed, split_axis=0, concat_axis=0))
+    # scales need the same routing; broadcast "tensor" scales to chunk rows
+    # first so each receiver gets the proper per-sender magnitude.
+    bscales = jnp.broadcast_to(
+        scales, (layout.n,) + scales.shape[1:]).astype(jnp.float32)
+    rscales = comm.all_to_all(bscales, split_axis=0, concat_axis=0)
+
+    # --- server side (this worker serves its chunk) -------------------------
+    if use_k:
+        vals = cst(K.decompress_view(recv, rscales, layout,
+                                     cfg.compute_dtype))
+    else:
+        vals = cst(C.unpack_signs(recv, layout.pack_count,
+                                  cfg.compute_dtype))
+        vals = vals * rscales.astype(cfg.compute_dtype)
+    avg = vals.mean(axis=0)                                   # (A/n, *rest)
+    widx = comm.index() if worker_index is None else worker_index
+    # Server-side compression shares the leaf layout but acts on one chunk;
+    # reuse the chunk-level granularity of the configured mode.
+    if k_server:
+        packed_s, scales_s, err_s = K.server_compress_view(
+            cst(avg[None]), ef.err_server.astype(cfg.compute_dtype)[None],
+            layout, cfg.scale_mode, widx, cfg.model_axes)
+    else:
+        y = avg + ef.err_server.astype(cfg.compute_dtype)
+        y_exp = cst(y[None])                                  # (1, A/n, *rest)
+        s_mask = None if mask is None else mask[widx][None]
+        packed_s, scales_s, err_s = _server_compress(
+            y_exp, layout, cfg.scale_mode, s_mask, cfg.model_axes)
+    packed_s = cst(packed_s)
+    err_s = cst(err_s)[0]
+
+    # --- gather: broadcast compressed chunk results -------------------------
+    gpacked = cst(comm.all_gather(packed_s, axis=0, tiled=True))
+    gscales = comm.all_gather(
+        scales_s.astype(jnp.float32), axis=0, tiled=True)
+    if k_server:
+        out = cst(K.decompress_view(gpacked, gscales, layout,
+                                    cfg.compute_dtype))
+    else:
+        out = cst(C.unpack_signs(gpacked, layout.pack_count,
+                                 cfg.compute_dtype))
+        out = out * gscales.astype(cfg.compute_dtype)
+    return out, EFState(err_worker=err_w.astype(ef.err_worker.dtype),
+                        err_server=err_s.astype(ef.err_server.dtype))
+
+
+def _hier_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
+                         layout: C.LeafLayout, cfg: OneBitConfig,
+                         vspec=None):
+    """Topology-aware two-level AllReduce (intra-pod × inter-pod).
+
+    Schedule, per worker (inner index j, outer index k):
+
+      1. **intra-pod reduce-scatter** (uncompressed, wire dtype): all_to_all
+         over the fast inner axes of the view reshaped (n_inner, n_outer,
+         A/n, *rest); the mean over senders leaves this worker owning the
+         pod-mean of slice j.
+      2. **inter-pod Algorithm 2** on the owned slice: EF-compress (worker
+         error), all_to_all the packed bits across pods, server-average +
+         EF-compress the chunk this pod serves (server error), all_gather
+         the compressed results. Identical to the flat path with n→n_outer.
+      3. **intra-pod all_gather** of the decompressed slice rebuilds the
+         full view.
+
+    Only step 2 crosses the slow inter-pod links — at 1 bit/element — while
+    the bulky uncompressed traffic of steps 1/3 stays inside the pod. With
+    ``n_inner == 1`` steps 1/3 are skipped entirely and step 2 *is* the flat
+    path (bitwise, including scale denominators), which the degenerate-
+    equivalence tests pin down.
+    """
+    h = cfg.hierarchy
+    ni, no = layout.n_inner, layout.n_outer
+    vs = layout.view_shape
+    cst = lambda x: C.constrain(x, vspec)
+    outer, inner = comm.split(h.outer_axes, h.inner_axes)
+
+    # --- 1: intra-pod reduce-scatter (slice j <- contiguous view rows) -----
+    zr = z_view.reshape((ni, no) + vs[1:])
+    if ni > 1:
+        recv = inner.all_to_all(zr.astype(cfg.comm_dtype),
+                                split_axis=0, concat_axis=0)
+        own = recv.astype(jnp.float32).mean(axis=0)        # (no, A/n, *rest)
+        j = inner.index()
+    else:
+        own = zr[0]
+        j = jnp.zeros((), jnp.int32)
+    own = cst(own.astype(cfg.compute_dtype))
+
+    if not cfg.quantize:
+        # Identity compressor: the exact two-level collective schedule
+        # exchanging uncompressed values (degenerate-equivalence/ablation).
+        recv = cst(outer.all_to_all(own, split_axis=0, concat_axis=0))
+        avg = recv.mean(axis=0)
+        out_slice = cst(outer.all_gather(avg[None], axis=0, tiled=True))
+        new_ef = ef
+    else:
+        mask_full = C.pad_mask(layout, dtype=own.dtype)
+        if mask_full is not None:
+            m_slice = jnp.take(
+                mask_full.reshape((ni, no) + mask_full.shape[1:]), j, axis=0)
+        else:
+            m_slice = None
+        use_k = cfg.use_pallas
+        if use_k:
+            from repro.kernels import dispatch as K
+            use_k = K.kernel_safe(vspec)
+        k_server = use_k and not (cfg.scale_mode == "row" and len(vs) == 2)
+
+        # --- 2a: worker-side EF-compress of the owned slice ----------------
+        if use_k:
+            packed, scales, err_w = K.ef_compress_view(
+                own, ef.err_worker.astype(own.dtype), layout,
+                cfg.scale_mode, cfg.model_axes, inner_index=j)
+        else:
+            zw = cst(own + ef.err_worker.astype(own.dtype))
+            packed, scales, err_w = C.ef_compress_slice(
+                zw, layout, cfg.scale_mode, m_slice, j, cfg.model_axes)
+        packed, err_w = cst(packed), cst(err_w)
+
+        # --- 2b: inter-pod scatter: pod k collects sub-chunk k -------------
+        recv = cst(outer.all_to_all(packed, split_axis=0, concat_axis=0))
+        bscales = jnp.broadcast_to(
+            scales, (no,) + scales.shape[1:]).astype(jnp.float32)
+        rscales = outer.all_to_all(bscales, split_axis=0, concat_axis=0)
+
+        # --- 2c: server side (this pod serves full-view chunk j*no+k) ------
+        if use_k:
+            vals = cst(K.decompress_view(recv, rscales, layout,
+                                         cfg.compute_dtype))
+        else:
+            vals = cst(C.unpack_signs(recv, layout.pack_count,
+                                      cfg.compute_dtype))
+            vals = vals * rscales.astype(cfg.compute_dtype)
+        avg = vals.mean(axis=0)                            # (A/n, *rest)
+        k_idx = outer.index()
+        widx = j * no + k_idx
+        if k_server:
+            packed_s, scales_s, err_s = K.server_compress_view(
+                cst(avg[None]), ef.err_server.astype(cfg.compute_dtype)[None],
+                layout, cfg.scale_mode, widx, cfg.model_axes)
+        else:
+            y = avg + ef.err_server.astype(cfg.compute_dtype)
+            y_exp = cst(y[None])
+            s_mask = None if mask_full is None else mask_full[widx][None]
+            packed_s, scales_s, err_s = _server_compress(
+                y_exp, layout, cfg.scale_mode, s_mask, cfg.model_axes)
+        packed_s = cst(packed_s)
+        err_s = cst(err_s)[0]
+
+        # --- 2d: inter-pod gather of the compressed chunk results ----------
+        gpacked = cst(outer.all_gather(packed_s, axis=0, tiled=True))
+        gscales = outer.all_gather(
+            scales_s.astype(jnp.float32), axis=0, tiled=True)
+        if k_server:
+            out_slice = cst(K.decompress_view(gpacked, gscales, layout,
+                                              cfg.compute_dtype))
+        else:
+            out_slice = cst(C.unpack_signs(gpacked, layout.pack_count,
+                                           cfg.compute_dtype))
+            out_slice = out_slice * gscales.astype(cfg.compute_dtype)
+        new_ef = EFState(err_worker=err_w.astype(ef.err_worker.dtype),
+                         err_server=err_s.astype(ef.err_server.dtype))
+
+    # --- 3: intra-pod all_gather rebuilds the full view --------------------
+    if ni > 1:
+        out = inner.all_gather(out_slice.astype(cfg.comm_dtype)[None],
+                               axis=0, tiled=True).reshape(vs)
+    else:
+        out = out_slice.reshape(vs)
+    return cst(out).astype(cfg.compute_dtype), new_ef
+
+
+def _server_compress(y, layout, mode, mask, model_axes=()):
+    """EF-compress one server chunk (leading dim 1)."""
+    from repro.core.compressor import _psum_model
+    az = jnp.abs(y)
+    if mask is not None:
+        az = az * mask
+    rest = layout.rest_factor
+    for s in y.shape[2:]:
+        rest *= s
+    if mode == "row":
+        axes = tuple(range(2, y.ndim))
+        cnt = max(rest, 1)
+        s = (_psum_model(az.sum(axis=axes), model_axes) / cnt
+             if y.ndim > 2 else az)
+        scales = s.reshape(y.shape[:2] + (1,) * (y.ndim - 2))
+    else:  # tensor / chunk -> one scale for this chunk
+        denom = (az.size * layout.rest_factor if mask is None
+                 else jnp.maximum(mask.sum() * rest, 1.0))
+        denom = jnp.asarray(denom, y.dtype)
+        scales = (_psum_model(az.sum(), model_axes)
+                  / denom).reshape((1,) * y.ndim)
+    packed = C.pack_signs(y)
+    signs = jnp.where(y >= 0, 1.0, -1.0).astype(y.dtype)
+    err = y - signs * scales.astype(y.dtype)
+    if mask is not None:
+        err = err * mask.astype(err.dtype)
+    return packed, scales, err
+
+
+def fullprec_allreduce_view(comm: Comm, z_view: jnp.ndarray,
+                            comm_dtype=jnp.bfloat16,
+                            vspec=None, hierarchy: Optional[Hierarchy] = None,
+                            layout: Optional[C.LeafLayout] = None
+                            ) -> jnp.ndarray:
+    """Full-precision mean over workers (used on T_v steps) at the wire
+    dtype, as the paper does with fp16 training.
+
+    Implemented as the chunked scatter-mean/all-gather (reduce-scatter +
+    all-gather decomposition of a ring AllReduce: identical per-device
+    traffic, ~2·d bytes). Besides matching the 1-bit path's transport, this
+    sidesteps an XLA CPU-backend crash on bf16 ``all-reduce`` inside
+    partial-manual shard_map (bf16 a2a/all-gather are fine; TPU unaffected).
+
+    With ``hierarchy`` (and its ``layout``) the same mean runs the two-level
+    schedule: intra-pod reduce-scatter, inter-pod exchange of the owned
+    slice (1/n_inner of the traffic crosses the slow links), intra-pod
+    all_gather — mirroring the 1-bit path's transport level for level.
+    """
+    acc = z_view.dtype
+    cst = lambda x: C.constrain(x, vspec)
+    if hierarchy is not None and layout is not None and layout.n_inner > 1:
+        ni, no = layout.n_inner, layout.n_outer
+        outer, inner = comm.split(hierarchy.outer_axes, hierarchy.inner_axes)
+        zr = z_view.astype(comm_dtype).reshape((ni, no) + layout.chunk_shape)
+        recv = inner.all_to_all(zr, split_axis=0, concat_axis=0)
+        own = recv.astype(jnp.float32).mean(axis=0).astype(comm_dtype)
+        recv2 = cst(outer.all_to_all(own, split_axis=0, concat_axis=0))
+        avg = recv2.astype(jnp.float32).mean(axis=0).astype(comm_dtype)
+        g1 = cst(outer.all_gather(avg[None], axis=0, tiled=True))
+        out = inner.all_gather(g1[None], axis=0, tiled=True)
+        return out.reshape(z_view.shape).astype(acc)
+    zc = cst(z_view.astype(comm_dtype))
+    recv = cst(comm.all_to_all(zc, split_axis=0, concat_axis=0))
+    avg = recv.astype(jnp.float32).mean(axis=0).astype(comm_dtype)
+    out = cst(comm.all_gather(avg[None], axis=0, tiled=True))
+    return out.astype(acc)
