@@ -6,9 +6,17 @@ actual per-round communication volumes (from the comm layouts) and round
 schedules. Reproduces the headline: 0/1 Adam reaches ~2x 1-bit Adam
 throughput on the bandwidth-starved Ethernet cluster, and 0/1 Adam on
 Ethernet ~= 1-bit Adam on InfiniBand.
+
+The ``--bucket-mb`` sweep adds the dispatch-latency term the fused
+exchange attacks: per sweep point it reports the exchange-unit count, the
+collective phases per sync, and the modeled per-sync latency floor
+``collectives_per_sync x alpha`` on Ethernet — appended as JSONL records
+with ``--json``.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 from benchmarks import hw
@@ -51,9 +59,47 @@ def avg_step_time(arch, optimizer, n_gpus, bw, alpha, compute_ms,
     return compute_ms / 1e3 + comm_s
 
 
-def main():
+def bucket_latency_sweep(arch="bert-large", workers=16,
+                         bucket_mbs=(None, 4.0, 32.0)):
+    """Exchange-unit counts and the modeled per-sync dispatch-latency
+    floor per bucket budget, from the real comm layouts."""
+    cfg = get(arch).config
+    tmpl = T.model_template(cfg)
+    shapes = abstract_params(tmpl)
+    specs = param_specs(tmpl)
+    records = []
+    for mb in bucket_mbs:
+        ocfg = OptimizerConfig(name="zero_one_adam", bucket_mb=mb)
+        opt = build_optimizer(ocfg, shapes, specs=specs, n_workers=workers)
+        acct = comm_accounting(opt)
+        colls = acct["collectives_per_sync"]
+        latency_floor_ms = colls * hw.ETHERNET_LATENCY * 1e3
+        records.append({
+            "bench": "throughput_buckets", "arch": arch,
+            "workers": workers, "bucket_mb": mb,
+            "dp_leaves": int(acct["dp_leaves"]),
+            "exchange_units": int(acct["exchange_units"]),
+            "collectives_per_sync": int(colls),
+            "sync_latency_floor_ms": latency_floor_ms,
+            "syncs_per_s_latency_bound": 1e3 / max(latency_floor_ms,
+                                                   1e-9),
+        })
+    return records
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="append JSONL records (the Fig.3 grid and the "
+                         "bucket-latency sweep) here")
+    ap.add_argument("--bucket-mb", type=float, nargs="*",
+                    default=[4.0, 32.0],
+                    help="bucket budgets (MiB) for the dispatch-latency "
+                         "sweep, besides the per-leaf baseline")
+    args = ap.parse_args(argv)
     t0 = time.time()
     rows = []
+    records = []
     print("# Fig.3 analogue — modeled whole-run throughput (samples/s)")
     print("arch,cluster,gpus,adam,one_bit_adam,zero_one_adam,"
           "speedup_01_vs_1bit")
@@ -74,6 +120,10 @@ def main():
                 print(f"{arch},{cluster},{n},{tput['adam']:.0f},"
                       f"{tput['one_bit_adam']:.0f},"
                       f"{tput['zero_one_adam']:.0f},{sp:.2f}")
+                records.append({"bench": "throughput_model", "arch": arch,
+                                "cluster": cluster, "gpus": n,
+                                **{f"samples_per_s_{k}": v
+                                   for k, v in tput.items()}})
     # headline checks
     eth = headline[("bert-large", "ethernet", 128)]
     ib = headline[("bert-large", "infiniband", 128)]
@@ -83,9 +133,30 @@ def main():
           f"{sp:.2f}x (paper: up to 2x)")
     print(f"# 0/1 Adam on Ethernet vs 1-bit Adam on InfiniBand: "
           f"{cross:.2f}x (paper: comparable, ~1x)")
+
+    # dispatch-latency (fixed-cost) floor per bucket budget
+    sweep = bucket_latency_sweep(bucket_mbs=[None] + list(args.bucket_mb))
+    records.extend(sweep)
+    print("# Bucketed-exchange dispatch floor — bert-large, 16 workers, "
+          "Ethernet alpha")
+    print("bucket_mb,dp_leaves,exchange_units,collectives_per_sync,"
+          "sync_latency_floor_ms")
+    for r in sweep:
+        mb = "per-leaf" if r["bucket_mb"] is None else r["bucket_mb"]
+        print(f"{mb},{r['dp_leaves']},{r['exchange_units']},"
+              f"{r['collectives_per_sync']},"
+              f"{r['sync_latency_floor_ms']:.2f}")
+    rows.append(("bucket_dispatch_floor", 0.0,
+                 f"per_leaf={sweep[0]['collectives_per_sync']};"
+                 f"best={min(r['collectives_per_sync'] for r in sweep)}"))
+    if args.json:
+        with open(args.json, "a") as f:
+            for rec in records:
+                f.write(json.dumps(rec) + "\n")
     print(f"# elapsed {time.time()-t0:.1f}s")
-    return [("throughput_model", 0.0,
-             f"eth_speedup={sp:.2f};cross_fabric={cross:.2f}")]
+    rows.append(("throughput_model", 0.0,
+                 f"eth_speedup={sp:.2f};cross_fabric={cross:.2f}"))
+    return rows
 
 
 if __name__ == "__main__":

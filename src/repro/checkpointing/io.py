@@ -79,7 +79,13 @@ def restore(path: str, like: Any) -> Tuple[Any, int, Dict]:
             raise ValueError(
                 f"checkpoint has {manifest['n_leaves']} leaves, expected "
                 f"{len(leaves_like)} — the optimizer/model structure does "
-                f"not match the checkpoint")
+                f"not match the checkpoint. A common cause is restoring "
+                f"state saved under a different comm layout, e.g. a "
+                f"per-leaf checkpoint into a bucketed (bucket_mb /"
+                f" --bucket-mb) config or vice versa: the bucketed "
+                f"exchange stores EF state and anchors per bucket, so the "
+                f"state tree differs — resume with the layout the run was "
+                f"saved under")
         ckpt_paths = manifest.get("leaf_paths")
         if ckpt_paths is not None:
             for i, (cp, lp) in enumerate(zip(ckpt_paths, like_paths)):

@@ -22,6 +22,7 @@ from repro.core.compressed import (CompressedDP, CompressedDPState,
 from repro.core.comm import (Comm, Hierarchy, mesh_comm, sim_comm,
                              run_simulated)
 from repro.core import schedules
+from repro.core import bucketing
 from repro.core import codecs
 from repro.core import compressor
 from repro.core import onebit_allreduce
@@ -35,5 +36,5 @@ __all__ = [
     "AdamBase", "LambBase", "MomentumSgdBase",
     "CompressedDP", "CompressedDPState", "compressed_dp",
     "Comm", "Hierarchy", "mesh_comm", "sim_comm", "run_simulated",
-    "schedules", "compressor", "onebit_allreduce",
+    "schedules", "bucketing", "compressor", "onebit_allreduce",
 ]

@@ -92,8 +92,19 @@ class OptimizerConfig:
                                          # compressed EF exchange only across
                                          # pods. None = flat (single-level)
                                          # exchange.
+    bucket_mb: Optional[float] = None    # fuse the per-leaf exchange into
+                                         # fixed-budget flat buckets of this
+                                         # many MiB of f32 elements each
+                                         # (repro.core.bucketing): EF state,
+                                         # anchors, payloads, and collectives
+                                         # then run per bucket. None = the
+                                         # historical per-leaf exchange.
 
     def __post_init__(self):
+        if self.bucket_mb is not None and self.bucket_mb <= 0:
+            raise ValueError(
+                f"bucket_mb must be positive (MiB per fused bucket), got "
+                f"{self.bucket_mb!r}")
         # fail fast, with the valid options listed, instead of deep inside
         # _scales / the exchange (ScaleMode is a plain str; a typo like
         # "rows" used to surface steps later)
@@ -112,7 +123,7 @@ def _shared_kwargs(cfg: OptimizerConfig) -> Dict[str, Any]:
                 codec=cfg.codec, codec_arg=cfg.codec_arg,
                 store_anchor=cfg.store_anchor, comm_dtype=cfg.comm_dtype,
                 state_dtype=cfg.state_dtype, use_pallas=cfg.use_pallas,
-                hierarchy=cfg.hierarchy)
+                hierarchy=cfg.hierarchy, bucket_mb=cfg.bucket_mb)
 
 
 def _adam(cfg):
@@ -287,6 +298,16 @@ def comm_accounting(opt) -> Dict[str, float]:
     Sync volume delegates to the optimizer's codec (``codec.wire_bytes``),
     so the numbers stay honest per wire format; ``codec`` in the returned
     dict names it.
+
+    Volumes (and the dispatch counts ``exchange_units`` /
+    ``collectives_per_sync``) are computed over the optimizer's *exchange
+    units* — per-bucket layouts when ``bucket_mb`` is set, per-leaf layouts
+    otherwise — so bucketed configs report per-bucket scale overhead and
+    the reduced collective count. ``collectives_per_sync`` counts collective
+    *phases* per unit (2 flat — scatter + gather — or 4 hierarchical,
+    including the two uncompressed intra-pod phases); payload pytrees with
+    several leaves (e.g. sign1bit's packed bits + scales) multiply the raw
+    HLO op count but not the round count.
     """
     import numpy as np
     layouts = jax.tree.leaves(opt.layouts)
@@ -294,13 +315,21 @@ def comm_accounting(opt) -> Dict[str, float]:
     wire = jnp.dtype(opt.cfg.comm_dtype).itemsize
     codec = getattr(getattr(opt, "ar_cfg", None), "codec", None)
     total_params = 0
-    comp_inner = comp_outer = 0
-    full_inner = full_outer = 0
-    n_inner = 1
+    dp_leaves = 0
     for lo, dp in zip(layouts, masks):
         if not dp:
             continue
+        dp_leaves += 1
         total_params += int(np.prod(lo.shape)) if lo.shape else 1
+    bplan = getattr(opt, "bucket_plan", None)
+    if bplan is not None:
+        units = [b.layout for b in bplan.buckets]
+    else:
+        units = [lo for lo, dp in zip(layouts, masks) if dp]
+    comp_inner = comp_outer = 0
+    full_inner = full_outer = 0
+    n_inner = 1
+    for lo in units:
         lv = C.compressed_bytes_levels(lo, opt.cfg.scale_mode,
                                        inner_itemsize=wire, codec=codec)
         comp_inner += lv["inner"]
@@ -329,4 +358,10 @@ def comm_accounting(opt) -> Dict[str, float]:
         "bits_per_param_sync": 8.0 * compressed / max(total_params, 1),
         "n_inner": float(n_inner),
         "n_outer": float(opt.n // n_inner),
+        "dp_leaves": float(dp_leaves),
+        "exchange_units": float(len(units)),
+        "collectives_per_sync": float(
+            len(units) * (4 if n_inner > 1 else 2)),
+        "bucket_mb": (float(bplan.bucket_mb) if bplan is not None
+                      else None),
     }

@@ -1,0 +1,217 @@
+"""Fused communication buckets for the Algorithm-2 exchange.
+
+The per-leaf exchange (:mod:`repro.core.leafwise`) launches one codec
+encode + one pair of collectives per parameter *leaf*; a transformer with
+hundreds of small leaves pays hundreds of dispatch/collective fixed costs
+per sync (the regime ``benchmarks/bench_fixed_cost.py`` measures). This
+module coalesces those leaves into a small number of fixed-budget
+(``bucket_mb``) flat buckets, Bagua/DeepSpeed-fusion style, so EF state,
+anchors, codec payloads, and collectives all operate per *bucket*.
+
+Design: a fused bucket repacks its member leaves' **true (unpadded)
+elements** contiguously — member ``m``'s elements occupy the flat range
+``[offsets[m], offsets[m] + sizes[m])`` of the bucket — and pads the
+single tail to the ``n * 128`` frame quantum. That makes every bucket an
+ordinary flatten :class:`~repro.core.compressor.LeafLayout`: the pad-exact
+masks/row-counts, the frame/lane contract of the Pallas kernels, the
+hierarchical slice bookkeeping, and every codec work on buckets without
+change. A bucket holding exactly one leaf has *the same* padded size,
+view shape, and true counts as that leaf's own flatten layout, which is
+what makes the one-leaf-per-bucket configuration bitwise-identical to the
+per-leaf path (asserted in tests/test_bucketing.py).
+
+Only leaves that are safe to repack are fused: flatten layouts with
+``rest_factor == 1`` and no tensor-parallel sharding on the comm view
+(repacking moves elements across chunk boundaries, which is only legal
+when the view is unsharded and unstructured), sharing one dtype per
+bucket. Every other DP leaf — GSPMD-structured views, fully-manual TP
+shards — becomes a *singleton* bucket that keeps the leaf's own layout and
+vspec, so the exchange code path is uniformly per-bucket while the
+semantics of those leaves are untouched.
+
+Semantics note (documented in README "Bucketed exchange & overlap"): codec
+scale/threshold granularities are defined over the codec's buffer — with
+multi-leaf buckets, "tensor" scale means one scale per *bucket* and chunks
+mix member leaves. With one leaf per bucket the semantics (and bits) are
+exactly the per-leaf ones; the ``identity`` codec is transport-exact either
+way.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressor as C
+from repro.core.leafwise import LeafPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One exchange unit: either a fused repack of several flatten leaves
+    or a singleton carrying one (possibly structured) leaf unchanged."""
+
+    members: Tuple[int, ...]        # flat leaf indices, bucket order
+    layout: C.LeafLayout            # comm layout of the bucket buffer
+    fused: bool                     # True -> flat repack of true elements
+    offsets: Tuple[int, ...]        # per-member start in bucket flat order
+    sizes: Tuple[int, ...]          # per-member true element count
+    spec: Any                       # natural-leaf TP spec (singleton only)
+    vspec: Tuple                    # TP entries of the bucket view shape
+
+    @property
+    def true_elems(self) -> int:
+        return int(sum(self.sizes))
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Static bucket assignment for one :class:`LeafPlan`."""
+
+    bucket_mb: float
+    buckets: Tuple[Bucket, ...]
+    leaf_bucket: Tuple[Optional[int], ...]   # flat leaf idx -> bucket idx
+                                             # (None for non-DP leaves)
+
+    @property
+    def n_fused(self) -> int:
+        return sum(1 for b in self.buckets if b.fused)
+
+
+def _true_size(layout: C.LeafLayout) -> int:
+    return int(np.prod(layout.shape)) if layout.shape else 1
+
+
+def fusable(layout: C.LeafLayout, vspec) -> bool:
+    """Whether a leaf's comm view may be repacked into a fused bucket.
+
+    Repacking reassigns elements to chunk rows, so it is only legal for
+    flatten views with no tensor-parallel structure: ``rest_factor > 1``
+    means the view is a TP-local shard whose scales psum over model axes,
+    and a sharded vspec means GSPMD owns the element placement.
+    """
+    if not layout.flatten or layout.rest_factor != 1:
+        return False
+    return vspec is None or all(e is None for e in tuple(vspec))
+
+
+def make_bucket_plan(plan: LeafPlan, bucket_mb: float,
+                     vspecs=None) -> BucketPlan:
+    """Greedy in-order packing of the plan's DP leaves into buckets.
+
+    ``bucket_mb`` is the f32 element budget per fused bucket; a single
+    leaf larger than the budget still gets its own (fused) bucket, so the
+    budget bounds *fusion*, never splits a leaf. Packing is by flat leaf
+    order — deterministic, so the plan (and therefore the optimizer state
+    layout) is a pure function of (param tree, specs, n, bucket_mb).
+    """
+    if bucket_mb is None or bucket_mb <= 0:
+        raise ValueError(f"bucket_mb must be positive, got {bucket_mb!r}")
+    vspecs = vspecs if vspecs is not None else plan.vspecs
+    budget = max(1, int(float(bucket_mb) * 2**20) // 4)
+    n_inner = plan.hierarchy.inner if plan.hierarchy else 1
+
+    buckets: List[Bucket] = []
+    leaf_bucket: List[Optional[int]] = [None] * len(plan.leaves)
+    pend: List[int] = []        # member leaf indices of the open fused bucket
+    pend_elems = 0
+
+    def close_fused():
+        nonlocal pend, pend_elems
+        if not pend:
+            return
+        sizes = tuple(_true_size(plan.layouts[i]) for i in pend)
+        offsets, off = [], 0
+        for s in sizes:
+            offsets.append(off)
+            off += s
+        lo = C.make_layout((off,), None, plan.n, n_inner=n_inner)
+        bi = len(buckets)
+        buckets.append(Bucket(members=tuple(pend), layout=lo, fused=True,
+                              offsets=tuple(offsets), sizes=sizes,
+                              spec=None,
+                              vspec=(None,) * len(lo.view_shape)))
+        for i in pend:
+            leaf_bucket[i] = bi
+        pend, pend_elems = [], 0
+
+    for i, (lo, dp) in enumerate(zip(plan.layouts, plan.dp_mask)):
+        if not dp:
+            continue
+        if not fusable(lo, vspecs[i]):
+            close_fused()
+            bi = len(buckets)
+            buckets.append(Bucket(
+                members=(i,), layout=lo, fused=False,
+                offsets=(0,), sizes=(_true_size(lo),),
+                spec=plan.specs[i], vspec=vspecs[i]))
+            leaf_bucket[i] = bi
+            continue
+        size = _true_size(lo)
+        dtype = getattr(plan.leaves[i], "dtype", None)
+        pend_dtype = (getattr(plan.leaves[pend[0]], "dtype", None)
+                      if pend else None)
+        if pend and (pend_elems + size > budget or dtype != pend_dtype):
+            close_fused()
+        pend.append(i)
+        pend_elems += size
+        if pend_elems >= budget:
+            close_fused()
+    close_fused()
+    return BucketPlan(bucket_mb=float(bucket_mb), buckets=tuple(buckets),
+                      leaf_bucket=tuple(leaf_bucket))
+
+
+# ---------------------------------------------------------------------------
+# view <-> bucket transport (chip-local gathers/scatters, exact inverses)
+# ---------------------------------------------------------------------------
+
+def gather_views(bucket: Bucket, views: List[jnp.ndarray]) -> jnp.ndarray:
+    """Member comm views -> the bucket buffer (bucket view shape).
+
+    Fused buckets drop each member's pad tail (flatten views pad the tail
+    of the flat element order), concatenate the true elements in member
+    order, and zero-pad the single bucket tail — so every real element
+    lands in exactly one bucket slot and pad garbage in member views can
+    never reach the wire. Singletons pass through.
+    """
+    if not bucket.fused:
+        (v,) = views
+        return v
+    parts = [v.reshape(-1)[:s] for v, s in zip(views, bucket.sizes)]
+    flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    pad = bucket.layout.padded - bucket.true_elems
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(bucket.layout.view_shape)
+
+
+def scatter_views(bucket: Bucket, buf: jnp.ndarray,
+                  layouts: List[C.LeafLayout]) -> List[jnp.ndarray]:
+    """Bucket buffer -> member comm views (exact inverse of
+    :func:`gather_views` on the true elements; re-padded with zeros)."""
+    if not bucket.fused:
+        return [buf]
+    flat = buf.reshape(-1)
+    out = []
+    for off, size, lo in zip(bucket.offsets, bucket.sizes, layouts):
+        seg = flat[off:off + size]
+        if lo.pad:
+            seg = jnp.pad(seg, (0, lo.pad))
+        out.append(seg.reshape(lo.view_shape))
+    return out
+
+
+def bucket_accounting(plan: BucketPlan) -> dict:
+    """Static dispatch-count numbers: exchange units and true-element
+    conservation (bucket-sum == leaf-sum, asserted by the property
+    tests)."""
+    true_total = sum(b.true_elems for b in plan.buckets)
+    return {
+        "n_buckets": len(plan.buckets),
+        "n_fused": plan.n_fused,
+        "true_elems": true_total,
+        "padded_elems": sum(b.layout.padded for b in plan.buckets),
+    }

@@ -47,6 +47,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import bucketing as BK
 from repro.core import codecs as CODECS
 from repro.core import compressor as C
 from repro.core import leafwise
@@ -86,10 +87,20 @@ class StateKind:
     tags: ``scalar`` (replicated scalar), ``view`` (comm view for DP leaves,
     natural for non-DP), ``chunk`` (server chunk, DP only), ``natural``
     (param-shaped, DP only — anchors), ``leaf_scalar`` (per-worker scalar,
-    DP only — trust ratios). ``leaf`` indexes the flat param leaf."""
+    DP only — trust ratios). ``leaf`` indexes the flat param leaf.
+
+    With a bucketed exchange (``bucket_mb`` set) the EF/anchor state lives
+    per *bucket* instead of per leaf: ``bucket_view`` / ``bucket_chunk``
+    mirror ``view`` / ``chunk`` with ``leaf`` indexing
+    ``opt.bucket_plan.buckets`` (always DP — buckets only cover DP
+    leaves)."""
 
     tag: str
     leaf: Optional[int] = None
+
+    @property
+    def bucketed(self) -> bool:
+        return self.tag in ("bucket_view", "bucket_chunk")
 
 
 _SCALAR = StateKind("scalar")
@@ -123,10 +134,19 @@ class CompressedDP:
     state_dtype: Any = jnp.float32
     use_pallas: bool = False
     hierarchy: Optional[Hierarchy] = None
+    bucket_mb: Optional[float] = None   # fuse the per-leaf exchange into
+                                        # fixed-budget flat buckets (MiB of
+                                        # f32 elements per bucket; see
+                                        # repro.core.bucketing). None keeps
+                                        # the historical per-leaf exchange.
 
     def __post_init__(self):
         if self.style not in STYLES:
             raise ValueError(f"style={self.style!r}; choose from {STYLES}")
+        if self.bucket_mb is not None and self.bucket_mb <= 0:
+            raise ValueError(
+                f"bucket_mb must be positive (MiB per fused bucket), got "
+                f"{self.bucket_mb!r}")
         C.validate_scale_mode(self.scale_mode)
         codec = self.codec
         if not self.quantize:
@@ -196,6 +216,12 @@ class ComposedOptimizer:
             codec=cfg.codec, use_pallas=cfg.use_pallas,
             comm_dtype=cfg.comm_dtype)
         self.codec = self.ar_cfg.codec
+        # Bucketed exchange: EF state / anchors / codec payloads /
+        # collectives operate per bucket (repro.core.bucketing) instead of
+        # per leaf. None keeps the historical per-leaf exchange.
+        self.bucket_plan = (BK.make_bucket_plan(plan, cfg.bucket_mb,
+                                                self.vspecs)
+                            if cfg.bucket_mb is not None else None)
         self._slot_specs = self.base.slot_specs()
         self._use_sync_policy = cfg.style == "accumulate"
         self._use_var_policy = (cfg.style in ("accumulate", "gradient")
@@ -224,6 +250,29 @@ class ComposedOptimizer:
         slots = {name: [slot(sk, iv, p, lo, dp)
                         for p, lo, dp in zip(ps, los, dps)]
                  for name, (sk, iv) in self._slot_specs.items()}
+        bp = self.bucket_plan
+        if bp is None:
+            err_w = [jnp.zeros(lo.ef_worker_shape, sd)
+                     if (dp and self._has_ef) else None
+                     for lo, dp in zip(los, dps)]
+            err_s = [jnp.zeros(lo.chunk_shape, sd)
+                     if (dp and self._has_ef) else None
+                     for lo, dp in zip(los, dps)]
+            anchor = [(p * 1.0).astype(p.dtype)
+                      if (dp and self._has_anchor) else None
+                      for p, dp in zip(ps, dps)]
+        else:
+            # per-bucket EF / anchors: the bucket buffer is what the codec
+            # compresses, so its error state (and the re-anchored params)
+            # live in bucket shape
+            err_w = [jnp.zeros(b.layout.ef_worker_shape, sd)
+                     if self._has_ef else None for b in bp.buckets]
+            err_s = [jnp.zeros(b.layout.chunk_shape, sd)
+                     if self._has_ef else None for b in bp.buckets]
+            anchor = [self._gather_bucket(
+                          b, [(ps[i] * 1.0).astype(ps[i].dtype)
+                              for i in b.members])
+                      if self._has_anchor else None for b in bp.buckets]
         return CompressedDPState(
             step=jnp.zeros((), jnp.int32),
             gamma_acc=jnp.zeros((), jnp.float32),
@@ -234,16 +283,16 @@ class ComposedOptimizer:
             slots=slots,
             u=[jnp.zeros(lo.view_shape, sd) if (dp and self._has_u) else None
                for lo, dp in zip(los, dps)],
-            err_w=[jnp.zeros(lo.ef_worker_shape, sd)
-                   if (dp and self._has_ef) else None
-                   for lo, dp in zip(los, dps)],
-            err_s=[jnp.zeros(lo.chunk_shape, sd)
-                   if (dp and self._has_ef) else None
-                   for lo, dp in zip(los, dps)],
-            anchor=[(p * 1.0).astype(p.dtype)
-                    if (dp and self._has_anchor) else None
-                    for p, dp in zip(ps, dps)],
+            err_w=err_w,
+            err_s=err_s,
+            anchor=anchor,
         )
+
+    def _gather_bucket(self, bucket, leaves_nat):
+        """Natural member leaves -> bucket buffer (via their comm views)."""
+        views = [C.to_view(x, self.layouts[i])
+                 for x, i in zip(leaves_nat, bucket.members)]
+        return BK.gather_views(bucket, views)
 
     def state_kinds(self) -> CompressedDPState:
         """Pytree mirroring the state treedef with :class:`StateKind`
@@ -258,6 +307,23 @@ class ComposedOptimizer:
             else:
                 slots[name] = [StateKind("view", i)
                                for i in range(len(dps))]
+        bp = self.bucket_plan
+        if bp is None:
+            err_w = [StateKind("view", i) if (dp and self._has_ef) else None
+                     for i, dp in enumerate(dps)]
+            err_s = [StateKind("chunk", i) if (dp and self._has_ef) else None
+                     for i, dp in enumerate(dps)]
+            anchor = [StateKind("natural", i)
+                      if (dp and self._has_anchor) else None
+                      for i, dp in enumerate(dps)]
+        else:
+            err_w = [StateKind("bucket_view", bi) if self._has_ef else None
+                     for bi in range(len(bp.buckets))]
+            err_s = [StateKind("bucket_chunk", bi) if self._has_ef else None
+                     for bi in range(len(bp.buckets))]
+            anchor = [StateKind("bucket_view", bi)
+                      if self._has_anchor else None
+                      for bi in range(len(bp.buckets))]
         return CompressedDPState(
             step=_SCALAR, gamma_acc=_SCALAR,
             sync_pstate=tuple(_SCALAR for _ in (
@@ -267,19 +333,43 @@ class ComposedOptimizer:
             slots=slots,
             u=[StateKind("view", i) if (dp and self._has_u) else None
                for i, dp in enumerate(dps)],
-            err_w=[StateKind("view", i) if (dp and self._has_ef) else None
-                   for i, dp in enumerate(dps)],
-            err_s=[StateKind("chunk", i) if (dp and self._has_ef) else None
-                   for i, dp in enumerate(dps)],
-            anchor=[StateKind("natural", i)
-                    if (dp and self._has_anchor) else None
-                    for i, dp in enumerate(dps)],
+            err_w=err_w,
+            err_s=err_s,
+            anchor=anchor,
         )
 
     def _slots32(self, slots, i):
         return {name: (slots[name][i].astype(jnp.float32)
                        if slots[name][i] is not None else None)
                 for name in slots}
+
+    def _fullprec_dp(self, comm, bufs_dp):
+        """Full-precision mean of the DP leaves' view buffers, one
+        collective pair per exchange unit (leaf, or bucket when bucketing
+        is on). The full-precision transport is elementwise, so bucketing
+        it is value-preserving per element — only the dispatch count
+        changes."""
+        cfg = self.cfg
+        bp = self.bucket_plan
+        dp_idx = [i for i, dp in enumerate(self.dp_mask) if dp]
+        if bp is None:
+            return [AR.fullprec_allreduce_view(
+                        comm, g, cfg.comm_dtype, vspec=self.vspecs[i],
+                        hierarchy=self.hierarchy, layout=self.layouts[i])
+                    for g, i in zip(bufs_dp, dp_idx)]
+        dp_pos = {i: k for k, i in enumerate(dp_idx)}
+        out = [None] * len(bufs_dp)
+        for b in bp.buckets:
+            z = BK.gather_views(b, [bufs_dp[dp_pos[i]] for i in b.members])
+            o = AR.fullprec_allreduce_view(
+                comm, z, cfg.comm_dtype, vspec=b.vspec,
+                hierarchy=self.hierarchy, layout=b.layout)
+            for i, v in zip(b.members,
+                            BK.scatter_views(
+                                b, o, [self.layouts[i]
+                                       for i in b.members])):
+                out[dp_pos[i]] = v
+        return out
 
     # ------------------------------------------------------------------ #
     # step
@@ -350,8 +440,34 @@ class ComposedOptimizer:
             u_half.append(u_new)
 
         dp_idx = [i for i, dp in enumerate(dps) if dp]
+        dp_pos = {i: k for k, i in enumerate(dp_idx)}
         use_anchor = cfg.store_anchor
         sync_names = tuple(base.sync_slot_names)
+        bp = self.bucket_plan
+
+        def post_sync_leaf(k, i, ubar, anc32, xh, uh, nm, nx, nu, nextra):
+            """Per-leaf post-exchange update shared by the per-leaf and
+            bucketed sync paths: momentum refresh, slot refresh, the
+            re-anchored (or corrected) parameter, u reset."""
+            lo = self.layouts[i]
+            nm[k] = ubar / gamma_total
+            s32 = self._slots32(state.slots, i)
+            s32 = {**s32, **base.refresh_sync_slots(
+                s32, anc32, ubar, gamma_total, lo, self.model_axes)}
+            if use_anchor:
+                # x_{t+1} = x_{t'} - precond(ubar): bitwise identical on
+                # all workers (ubar, the anchor, and the slots are
+                # replicated).
+                nx[k] = (anc32
+                         - C.from_view(base.precond(ubar, s32), lo)
+                         ).astype(xh[k].dtype)
+            else:
+                corr = base.precond(uh[k] - ubar, s32)
+                nx[k] = (xh[k].astype(jnp.float32)
+                         + C.from_view(corr, lo)).astype(xh[k].dtype)
+            nu[k] = jnp.zeros_like(uh[k])
+            for j, name in enumerate(sync_names):
+                nextra[j][k] = s32[name]
 
         # --- T_u branch: 1-bit sync of the accumulated buffer ----------
         def sync_branch(op):
@@ -361,44 +477,64 @@ class ComposedOptimizer:
                 list(ew), list(es)
             na = list(anc)
             nextra = [list(lst) for lst in extra_in]
-            for k, i in enumerate(dp_idx):
-                lo = self.layouts[i]
-                ubar, ef = AR.onebit_allreduce_view(
-                    comm, uh[k], AR.EFState(ew[k], es[k]), lo, self.ar_cfg,
-                    vspec=self.vspecs[i], worker_index=worker_index)
-                ubar = ubar.astype(jnp.float32)
-                nm[k] = ubar / gamma_total
-                s32 = self._slots32(state.slots, i)
-                anc32 = (anc[k].astype(jnp.float32) if use_anchor else None)
-                s32 = {**s32, **base.refresh_sync_slots(
-                    s32, anc32, ubar, gamma_total, lo, self.model_axes)}
+            if bp is None:
+                for k, i in enumerate(dp_idx):
+                    lo = self.layouts[i]
+                    ubar, ef = AR.onebit_allreduce_view(
+                        comm, uh[k], AR.EFState(ew[k], es[k]), lo,
+                        self.ar_cfg, vspec=self.vspecs[i],
+                        worker_index=worker_index)
+                    ubar = ubar.astype(jnp.float32)
+                    anc32 = (anc[k].astype(jnp.float32)
+                             if use_anchor else None)
+                    post_sync_leaf(k, i, ubar, anc32, xh, uh, nm, nx, nu,
+                                   nextra)
+                    if use_anchor:
+                        na[k] = nx[k]
+                    nw[k], ns[k] = ef.err_worker, ef.err_server
+                return tuple([nx, nm, nu, nw, ns, na] + nextra)
+            # bucketed: one overlapped Algorithm-2 exchange per bucket
+            zs = [BK.gather_views(b, [uh[dp_pos[i]] for i in b.members])
+                  for b in bp.buckets]
+            outs, nefs = AR.onebit_allreduce_buckets(
+                comm, zs, [AR.EFState(w, s) for w, s in zip(ew, es)],
+                [b.layout for b in bp.buckets], self.ar_cfg,
+                vspecs=[b.vspec for b in bp.buckets],
+                worker_index=worker_index)
+            for bi, b in enumerate(bp.buckets):
+                mlo = [self.layouts[i] for i in b.members]
+                ubars = BK.scatter_views(b, outs[bi].astype(jnp.float32),
+                                         mlo)
+                ancs = (BK.scatter_views(b, anc[bi], mlo) if use_anchor
+                        else [None] * len(b.members))
+                new_xv = []
+                for ub, av, i, lo in zip(ubars, ancs, b.members, mlo):
+                    k = dp_pos[i]
+                    anc32 = (C.from_view(av.astype(jnp.float32), lo)
+                             if use_anchor else None)
+                    post_sync_leaf(k, i, ub.astype(jnp.float32), anc32,
+                                   xh, uh, nm, nx, nu, nextra)
+                    new_xv.append(C.to_view(nx[k], lo))
+                nw[bi], ns[bi] = nefs[bi].err_worker, nefs[bi].err_server
                 if use_anchor:
-                    # x_{t+1} = x_{t'} - precond(ubar): bitwise identical on
-                    # all workers (ubar, the anchor, and the slots are
-                    # replicated).
-                    nx[k] = (anc32
-                             - C.from_view(base.precond(ubar, s32), lo)
-                             ).astype(xh[k].dtype)
-                    na[k] = nx[k]
-                else:
-                    corr = base.precond(uh[k] - ubar, s32)
-                    nx[k] = (xh[k].astype(jnp.float32)
-                             + C.from_view(corr, lo)).astype(xh[k].dtype)
-                nu[k] = jnp.zeros_like(uh[k])
-                nw[k], ns[k] = ef.err_worker, ef.err_server
-                for j, name in enumerate(sync_names):
-                    nextra[j][k] = s32[name]
+                    na[bi] = BK.gather_views(b, new_xv).astype(
+                        anc[bi].dtype)
             return tuple([nx, nm, nu, nw, ns, na] + nextra)
 
         def local_branch(op):
             return tuple(list(lst) for lst in op)
 
+        if bp is None:
+            ew_op = [state.err_w[i] for i in dp_idx]
+            es_op = [state.err_s[i] for i in dp_idx]
+            anc_op = [state.anchor[i] for i in dp_idx]
+        else:  # EF/anchor state is already a per-bucket list
+            ew_op, es_op = list(state.err_w), list(state.err_s)
+            anc_op = list(state.anchor)
         op = tuple([[x_half[i] for i in dp_idx],
                     [m_half[i] for i in dp_idx],
                     [u_half[i] for i in dp_idx],
-                    [state.err_w[i] for i in dp_idx],
-                    [state.err_s[i] for i in dp_idx],
-                    [state.anchor[i] for i in dp_idx]]
+                    ew_op, es_op, anc_op]
                    + [[state.slots[name][i].astype(jnp.float32)
                        for i in dp_idx] for name in sync_names])
         res = jax.lax.cond(do_sync, sync_branch, local_branch, op)
@@ -407,28 +543,27 @@ class ComposedOptimizer:
 
         new_x, new_m = list(x_half), list(m_half)
         new_u = list(u_half)
-        new_ew, new_es = list(state.err_w), list(state.err_s)
-        new_anchor = list(state.anchor)
+        if bp is None:
+            new_ew, new_es = list(state.err_w), list(state.err_s)
+            new_anchor = list(state.anchor)
+        else:
+            new_ew, new_es, new_anchor = list(sw), list(ss), list(sa)
         new_sync_slots = {name: list(state.slots[name])
                           for name in sync_names}
         for k, i in enumerate(dp_idx):
             new_x[i], new_m[i], new_u[i] = sx[k], sm[k], su[k]
-            new_ew[i], new_es[i] = sw[k], ss[k]
-            new_anchor[i] = sa[k]
+            if bp is None:
+                new_ew[i], new_es[i] = sw[k], ss[k]
+                new_anchor[i] = sa[k]
             for j, name in enumerate(sync_names):
                 new_sync_slots[name][i] = s_extra[j][k]
 
         # --- T_v branch: full-precision variance refresh ----------------
         if base.has_variance:
             def var_branch(vop):
-                out = []
-                for k, i in enumerate(dp_idx):
-                    gbar = AR.fullprec_allreduce_view(
-                        comm, gv[i], cfg.comm_dtype, vspec=self.vspecs[i],
-                        hierarchy=self.hierarchy, layout=self.layouts[i])
-                    out.append(base.update_variance(
-                        vop[k].astype(jnp.float32), gbar))
-                return out
+                gbars = self._fullprec_dp(comm, [gv[i] for i in dp_idx])
+                return [base.update_variance(v.astype(jnp.float32), gbar)
+                        for v, gbar in zip(vop, gbars)]
 
             def keep_branch(vop):
                 return [v.astype(jnp.float32) for v in vop]
@@ -483,13 +618,11 @@ class ComposedOptimizer:
               else g.astype(jnp.float32)
               for g, lo, dp, vs in zip(gs, los, dps, self.vspecs)]
         dp_idx = [i for i, dp in enumerate(dps) if dp]
+        dp_pos = {i: k for k, i in enumerate(dp_idx)}
+        bp = self.bucket_plan
 
         def full(gs_dp):
-            return [AR.fullprec_allreduce_view(comm, g, cfg.comm_dtype,
-                                               vspec=self.vspecs[i],
-                                               hierarchy=self.hierarchy,
-                                               layout=self.layouts[i])
-                    for g, i in zip(gs_dp, dp_idx)]
+            return self._fullprec_dp(comm, gs_dp)
 
         if cfg.style == "gradient":
             if self._use_var_policy:
@@ -504,25 +637,49 @@ class ComposedOptimizer:
 
             def onebit_branch(op):
                 gs_dp, ew, es = op
-                outs, news_w, news_s = [], [], []
-                for g, w, s, i in zip(gs_dp, ew, es, dp_idx):
-                    o, ef = AR.onebit_allreduce_view(
-                        comm, g, AR.EFState(w, s), self.layouts[i],
-                        self.ar_cfg, vspec=self.vspecs[i],
-                        worker_index=worker_index)
-                    outs.append(o.astype(jnp.float32))
-                    news_w.append(ef.err_worker)
-                    news_s.append(ef.err_server)
-                return outs, news_w, news_s
+                if bp is None:
+                    outs, news_w, news_s = [], [], []
+                    for g, w, s, i in zip(gs_dp, ew, es, dp_idx):
+                        o, ef = AR.onebit_allreduce_view(
+                            comm, g, AR.EFState(w, s), self.layouts[i],
+                            self.ar_cfg, vspec=self.vspecs[i],
+                            worker_index=worker_index)
+                        outs.append(o.astype(jnp.float32))
+                        news_w.append(ef.err_worker)
+                        news_s.append(ef.err_server)
+                    return outs, news_w, news_s
+                # bucketed: one overlapped exchange per bucket
+                zs = [BK.gather_views(b, [gs_dp[dp_pos[i]]
+                                          for i in b.members])
+                      for b in bp.buckets]
+                outs_b, nefs = AR.onebit_allreduce_buckets(
+                    comm, zs, [AR.EFState(w, s) for w, s in zip(ew, es)],
+                    [b.layout for b in bp.buckets], self.ar_cfg,
+                    vspecs=[b.vspec for b in bp.buckets],
+                    worker_index=worker_index)
+                outs = [None] * len(gs_dp)
+                for b, o in zip(bp.buckets, outs_b):
+                    views = BK.scatter_views(
+                        b, o, [self.layouts[i] for i in b.members])
+                    for i, v in zip(b.members, views):
+                        outs[dp_pos[i]] = v.astype(jnp.float32)
+                return (outs, [ef.err_worker for ef in nefs],
+                        [ef.err_server for ef in nefs])
 
-            op = ([gv[i] for i in dp_idx],
-                  [state.err_w[i] for i in dp_idx],
-                  [state.err_s[i] for i in dp_idx])
+            if bp is None:
+                ew_op = [state.err_w[i] for i in dp_idx]
+                es_op = [state.err_s[i] for i in dp_idx]
+            else:
+                ew_op, es_op = list(state.err_w), list(state.err_s)
+            op = ([gv[i] for i in dp_idx], ew_op, es_op)
             agg_dp, new_ew_dp, new_es_dp = jax.lax.cond(
                 do_var, full_branch, onebit_branch, op)
-            new_ew, new_es = list(state.err_w), list(state.err_s)
-            for k, i in enumerate(dp_idx):
-                new_ew[i], new_es[i] = new_ew_dp[k], new_es_dp[k]
+            if bp is None:
+                new_ew, new_es = list(state.err_w), list(state.err_s)
+                for k, i in enumerate(dp_idx):
+                    new_ew[i], new_es[i] = new_ew_dp[k], new_es_dp[k]
+            else:
+                new_ew, new_es = list(new_ew_dp), list(new_es_dp)
         else:  # mean: uncompressed baseline, no EF state at all
             do_var = jnp.asarray(base.has_variance)
             var_ps = state.var_pstate

@@ -99,6 +99,59 @@ def _use_kernels(cfg: OneBitConfig, vspec) -> bool:
     return K.kernel_codec(cfg.codec) and K.kernel_safe(vspec)
 
 
+def _flat_worker_encode(z_view, ef: EFState, layout, cfg, vspec):
+    """Flat worker phase: codec encode of this worker's full view.
+
+    Returns ``(payload, err_w, mask, use_k)`` — the mask and kernel flag
+    are reused by the server phase so both phases agree on dispatch.
+    """
+    codec = cfg.codec
+    cst = lambda x: C.constrain(x, vspec)
+    mask = (C.pad_mask(layout, dtype=z_view.dtype)
+            if codec.needs_ef else None)
+    # Kernel dispatch: only codecs with fused kernels (sign1bit), and
+    # GSPMD-auto-sharded views stay on the constrained jnp path
+    # (dispatch.kernel_safe). The sign1bit server side of row-granularity
+    # on 2-D (flatten) views also stays on jnp — it degenerates to
+    # per-element scales (handled inside the codec).
+    use_k = _use_kernels(cfg, vspec)
+    payload, err_w = codec.encode_worker(
+        cst(z_view), ef.err_worker if codec.needs_ef else None, layout,
+        cfg.scale_mode, mask, cfg.model_axes, use_pallas=use_k, cst=cst)
+    return payload, err_w, mask, use_k
+
+
+def _flat_server_encode(recv, ef: EFState, layout, cfg, vspec, mask, use_k,
+                        widx):
+    """Flat server phase: decode the received chunks, average, re-encode
+    the chunk this worker serves. Returns ``(payload_s, err_s)``."""
+    codec = cfg.codec
+    cst = lambda x: C.constrain(x, vspec)
+    vals = codec.decode(recv, layout, cfg.compute_dtype, use_pallas=use_k)
+    avg = cst(vals).mean(axis=0)                              # (A/n, *rest)
+    s_mask = None if mask is None else mask[widx][None]
+    return codec.encode_server(
+        avg, ef.err_server if codec.needs_ef else None, layout,
+        cfg.scale_mode, s_mask, widx, cfg.model_axes, use_pallas=use_k,
+        cst=cst)
+
+
+def _map_a2a(comm, payload, vspec):
+    # every payload leaf carries the chunk axis first -> rows become the
+    # sender index after the all_to_all.
+    cst = lambda x: C.constrain(x, vspec)
+    return jax.tree.map(
+        lambda p: cst(comm.all_to_all(cst(p), split_axis=0, concat_axis=0)),
+        payload)
+
+
+def _map_gather(comm, payload, vspec):
+    cst = lambda x: C.constrain(x, vspec)
+    return jax.tree.map(
+        lambda p: cst(comm.all_gather(cst(p), axis=0, tiled=True)),
+        payload)
+
+
 def onebit_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
                           layout: C.LeafLayout, cfg: OneBitConfig,
                           vspec=None, worker_index=None):
@@ -124,47 +177,93 @@ def onebit_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
         return _hier_allreduce_view(comm, z_view, ef, layout, cfg, vspec)
     codec = cfg.codec
     cst = lambda x: C.constrain(x, vspec)
-    mask = (C.pad_mask(layout, dtype=z_view.dtype)
-            if codec.needs_ef else None)
-    # Kernel dispatch: only codecs with fused kernels (sign1bit), and
-    # GSPMD-auto-sharded views stay on the constrained jnp path
-    # (dispatch.kernel_safe). The sign1bit server side of row-granularity
-    # on 2-D (flatten) views also stays on jnp — it degenerates to
-    # per-element scales (handled inside the codec).
-    use_k = _use_kernels(cfg, vspec)
 
     # --- worker side -------------------------------------------------------
-    payload, err_w = codec.encode_worker(
-        cst(z_view), ef.err_worker if codec.needs_ef else None, layout,
-        cfg.scale_mode, mask, cfg.model_axes, use_pallas=use_k, cst=cst)
+    payload, err_w, mask, use_k = _flat_worker_encode(z_view, ef, layout,
+                                                      cfg, vspec)
 
     # --- scatter: worker j collects chunk j from everyone ------------------
-    # every payload leaf carries the chunk axis first -> rows become the
-    # sender index after the all_to_all.
-    recv = jax.tree.map(
-        lambda p: cst(comm.all_to_all(cst(p), split_axis=0, concat_axis=0)),
-        payload)
+    recv = _map_a2a(comm, payload, vspec)
 
     # --- server side (this worker serves its chunk) -------------------------
-    vals = codec.decode(recv, layout, cfg.compute_dtype, use_pallas=use_k)
-    avg = cst(vals).mean(axis=0)                              # (A/n, *rest)
     widx = comm.index() if worker_index is None else worker_index
-    s_mask = None if mask is None else mask[widx][None]
-    payload_s, err_s = codec.encode_server(
-        avg, ef.err_server if codec.needs_ef else None, layout,
-        cfg.scale_mode, s_mask, widx, cfg.model_axes, use_pallas=use_k,
-        cst=cst)
+    payload_s, err_s = _flat_server_encode(recv, ef, layout, cfg, vspec,
+                                           mask, use_k, widx)
 
     # --- gather: broadcast compressed chunk results -------------------------
-    gathered = jax.tree.map(
-        lambda p: cst(comm.all_gather(cst(p), axis=0, tiled=True)),
-        payload_s)
+    gathered = _map_gather(comm, payload_s, vspec)
     out = cst(codec.decode(gathered, layout, cfg.compute_dtype,
                            use_pallas=use_k))
     if codec.needs_ef:
         ef = EFState(err_worker=cst(err_w).astype(ef.err_worker.dtype),
                      err_server=err_s.astype(ef.err_server.dtype))
     return out.astype(cfg.compute_dtype), ef
+
+
+def _hier_reduce_scatter(inner, z_view, layout, cfg, vspec):
+    """Hier step 1: intra-pod reduce-scatter. Returns ``(own slice, j)``."""
+    ni, no = layout.n_inner, layout.n_outer
+    vs = layout.view_shape
+    cst = lambda x: C.constrain(x, vspec)
+    zr = z_view.reshape((ni, no) + vs[1:])
+    if ni > 1:
+        recv = inner.all_to_all(zr.astype(cfg.comm_dtype),
+                                split_axis=0, concat_axis=0)
+        own = recv.astype(jnp.float32).mean(axis=0)        # (no, A/n, *rest)
+        j = inner.index()
+    else:
+        own = zr[0]
+        j = jnp.zeros((), jnp.int32)
+    return cst(own.astype(cfg.compute_dtype)), j
+
+
+def _hier_worker_encode(own, ef: EFState, layout, cfg, vspec, j):
+    """Hier step 2a: codec encode of the owned slice.
+
+    Returns ``(payload, err_w, mask_full, use_k)``."""
+    codec = cfg.codec
+    ni, no = layout.n_inner, layout.n_outer
+    cst = lambda x: C.constrain(x, vspec)
+    mask_full = (C.pad_mask(layout, dtype=own.dtype)
+                 if codec.needs_ef else None)
+    if mask_full is not None:
+        m_slice = jnp.take(
+            mask_full.reshape((ni, no) + mask_full.shape[1:]), j, axis=0)
+    else:
+        m_slice = None
+    use_k = _use_kernels(cfg, vspec)
+    payload, err_w = codec.encode_worker(
+        own, ef.err_worker if codec.needs_ef else None, layout,
+        cfg.scale_mode, m_slice, cfg.model_axes, inner_index=j,
+        use_pallas=use_k, cst=cst)
+    return payload, err_w, mask_full, use_k
+
+
+def _hier_server_encode(recv, ef: EFState, layout, cfg, vspec, mask_full,
+                        use_k, widx):
+    """Hier step 2c: server-average + re-encode of full-view chunk
+    ``widx = j * n_outer + k``. Returns ``(payload_s, err_s)``."""
+    codec = cfg.codec
+    cst = lambda x: C.constrain(x, vspec)
+    vals = codec.decode(recv, layout, cfg.compute_dtype, use_pallas=use_k)
+    avg = cst(vals).mean(axis=0)                           # (A/n, *rest)
+    s_mask = None if mask_full is None else mask_full[widx][None]
+    return codec.encode_server(
+        avg, ef.err_server if codec.needs_ef else None, layout,
+        cfg.scale_mode, s_mask, widx, cfg.model_axes, use_pallas=use_k,
+        cst=cst)
+
+
+def _hier_gather_out(inner, out_slice, layout, cfg, vspec):
+    """Hier step 3: intra-pod all_gather rebuilds the full view."""
+    cst = lambda x: C.constrain(x, vspec)
+    vs = layout.view_shape
+    if layout.n_inner > 1:
+        out = inner.all_gather(out_slice.astype(cfg.comm_dtype)[None],
+                               axis=0, tiled=True).reshape(vs)
+    else:
+        out = out_slice.reshape(vs)
+    return cst(out).astype(cfg.compute_dtype)
 
 
 def _hier_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
@@ -193,58 +292,23 @@ def _hier_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
     """
     codec = cfg.codec
     h = cfg.hierarchy
-    ni, no = layout.n_inner, layout.n_outer
-    vs = layout.view_shape
+    no = layout.n_outer
     cst = lambda x: C.constrain(x, vspec)
     outer, inner = comm.split(h.outer_axes, h.inner_axes)
 
-    # --- 1: intra-pod reduce-scatter (slice j <- contiguous view rows) -----
-    zr = z_view.reshape((ni, no) + vs[1:])
-    if ni > 1:
-        recv = inner.all_to_all(zr.astype(cfg.comm_dtype),
-                                split_axis=0, concat_axis=0)
-        own = recv.astype(jnp.float32).mean(axis=0)        # (no, A/n, *rest)
-        j = inner.index()
-    else:
-        own = zr[0]
-        j = jnp.zeros((), jnp.int32)
-    own = cst(own.astype(cfg.compute_dtype))
-
-    mask_full = (C.pad_mask(layout, dtype=own.dtype)
-                 if codec.needs_ef else None)
-    if mask_full is not None:
-        m_slice = jnp.take(
-            mask_full.reshape((ni, no) + mask_full.shape[1:]), j, axis=0)
-    else:
-        m_slice = None
-    use_k = _use_kernels(cfg, vspec)
-
-    # --- 2a: worker-side codec encode of the owned slice --------------------
-    payload, err_w = codec.encode_worker(
-        own, ef.err_worker if codec.needs_ef else None, layout,
-        cfg.scale_mode, m_slice, cfg.model_axes, inner_index=j,
-        use_pallas=use_k, cst=cst)
+    own, j = _hier_reduce_scatter(inner, z_view, layout, cfg, vspec)
+    payload, err_w, mask_full, use_k = _hier_worker_encode(
+        own, ef, layout, cfg, vspec, j)
 
     # --- 2b: inter-pod scatter: pod k collects sub-chunk k -------------------
-    recv = jax.tree.map(
-        lambda p: cst(outer.all_to_all(cst(p), split_axis=0, concat_axis=0)),
-        payload)
+    recv = _map_a2a(outer, payload, vspec)
 
-    # --- 2c: server side (this pod serves full-view chunk j*no+k) -----------
-    vals = codec.decode(recv, layout, cfg.compute_dtype, use_pallas=use_k)
-    avg = cst(vals).mean(axis=0)                           # (A/n, *rest)
-    k_idx = outer.index()
-    widx = j * no + k_idx
-    s_mask = None if mask_full is None else mask_full[widx][None]
-    payload_s, err_s = codec.encode_server(
-        avg, ef.err_server if codec.needs_ef else None, layout,
-        cfg.scale_mode, s_mask, widx, cfg.model_axes, use_pallas=use_k,
-        cst=cst)
+    widx = j * no + outer.index()
+    payload_s, err_s = _hier_server_encode(recv, ef, layout, cfg, vspec,
+                                           mask_full, use_k, widx)
 
     # --- 2d: inter-pod gather of the compressed chunk results ---------------
-    gathered = jax.tree.map(
-        lambda p: cst(outer.all_gather(cst(p), axis=0, tiled=True)),
-        payload_s)
+    gathered = _map_gather(outer, payload_s, vspec)
     out_slice = cst(codec.decode(gathered, layout, cfg.compute_dtype,
                                  use_pallas=use_k))
     if codec.needs_ef:
@@ -253,13 +317,142 @@ def _hier_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
     else:
         new_ef = ef
 
-    # --- 3: intra-pod all_gather rebuilds the full view --------------------
-    if ni > 1:
-        out = inner.all_gather(out_slice.astype(cfg.comm_dtype)[None],
-                               axis=0, tiled=True).reshape(vs)
-    else:
-        out = out_slice.reshape(vs)
-    return cst(out).astype(cfg.compute_dtype), new_ef
+    return _hier_gather_out(inner, out_slice, layout, cfg, vspec), new_ef
+
+
+def onebit_allreduce_buckets(comm: Comm, zs, efs, layouts, cfg: OneBitConfig,
+                             vspecs=None, worker_index=None):
+    """Algorithm 2 over a *list* of buffers with a two-phase overlapped
+    schedule (the bucketed exchange of :mod:`repro.core.bucketing`).
+
+    Semantically this is exactly ``[onebit_allreduce_view(z_k) for k]`` —
+    asserted bitwise in tests/test_bucketing.py — but the work is emitted
+    in software-pipelined order: bucket ``k``'s collective is issued while
+    bucket ``k+1`` encodes, in both the worker phase (encode ‖ all_to_all)
+    and the server phase (re-encode ‖ all_gather). Under jit the collective
+    for bucket ``k`` never depends on bucket ``k+1``'s encode, so XLA's
+    latency-hiding scheduler can run the (async-start) collective and the
+    next bucket's compute concurrently; the interleaved emission order
+    makes that overlap explicit rather than hoping the scheduler finds it
+    across a leaf-sized op soup. Exact under jit: the dataflow graph is
+    identical to the sequential per-bucket loop.
+
+    Returns ``(outs, new_efs)`` — lists aligned with ``zs``.
+    """
+    K = len(zs)
+    vspecs = list(vspecs) if vspecs is not None else [None] * K
+    if K == 0:
+        return [], []
+    codec = cfg.codec
+    if cfg.hierarchy is not None:
+        return _hier_allreduce_buckets(comm, zs, efs, layouts, cfg, vspecs)
+
+    widx = comm.index() if worker_index is None else worker_index
+
+    # --- phase 1: worker encode k+1 ‖ scatter collective k ------------------
+    enc = [None] * K
+    enc[0] = _flat_worker_encode(zs[0], efs[0], layouts[0], cfg, vspecs[0])
+    recvs = [None] * K
+    for k in range(K):
+        recvs[k] = _map_a2a(comm, enc[k][0], vspecs[k])
+        if k + 1 < K:
+            enc[k + 1] = _flat_worker_encode(zs[k + 1], efs[k + 1],
+                                             layouts[k + 1], cfg,
+                                             vspecs[k + 1])
+
+    # --- phase 2: server encode k+1 ‖ gather collective k -------------------
+    srv = [None] * K
+    srv[0] = _flat_server_encode(recvs[0], efs[0], layouts[0], cfg,
+                                 vspecs[0], enc[0][2], enc[0][3], widx)
+    gathered = [None] * K
+    for k in range(K):
+        gathered[k] = _map_gather(comm, srv[k][0], vspecs[k])
+        if k + 1 < K:
+            srv[k + 1] = _flat_server_encode(
+                recvs[k + 1], efs[k + 1], layouts[k + 1], cfg,
+                vspecs[k + 1], enc[k + 1][2], enc[k + 1][3], widx)
+
+    outs, new_efs = [], []
+    for k in range(K):
+        cst = lambda x: C.constrain(x, vspecs[k])
+        out = cst(codec.decode(gathered[k], layouts[k], cfg.compute_dtype,
+                               use_pallas=enc[k][3]))
+        outs.append(out.astype(cfg.compute_dtype))
+        if codec.needs_ef:
+            new_efs.append(EFState(
+                err_worker=cst(enc[k][1]).astype(efs[k].err_worker.dtype),
+                err_server=srv[k][1].astype(efs[k].err_server.dtype)))
+        else:
+            new_efs.append(efs[k])
+    return outs, new_efs
+
+
+def _hier_allreduce_buckets(comm: Comm, zs, efs, layouts, cfg, vspecs):
+    """Two-level bucketed exchange: the per-bucket schedule of
+    :func:`_hier_allreduce_view` with the compute-‖-collective interleave
+    applied at every collective stage — bucket ``k+1``'s intra-pod
+    reduce-scatter is issued before bucket ``k`` encodes (stage 1 ‖ 2),
+    the inter-pod scatter for ``k`` flies while ``k+1`` encodes (stage 2),
+    likewise for the server re-encode vs the inter-pod gather (stage 3),
+    and each bucket's decode lands between its neighbours' intra-pod
+    all_gathers (stage 4)."""
+    K = len(zs)
+    codec = cfg.codec
+    h = cfg.hierarchy
+    outer, inner = comm.split(h.outer_axes, h.inner_axes)
+    for lo in layouts:
+        assert lo.n_inner == h.inner, (lo, h)
+
+    # --- stages 1+2: intra-pod reduce-scatter k+1 ‖ worker encode k ‖
+    #     inter-pod scatter k ------------------------------------------------
+    owns = [None] * K
+    enc = [None] * K
+    recvs = [None] * K
+    owns[0] = _hier_reduce_scatter(inner, zs[0], layouts[0], cfg, vspecs[0])
+    for k in range(K):
+        if k + 1 < K:
+            # issue bucket k+1's intra-pod collective before bucket k's
+            # encode, so the encode (and the inter-pod scatter below)
+            # overlap it
+            owns[k + 1] = _hier_reduce_scatter(inner, zs[k + 1],
+                                               layouts[k + 1], cfg,
+                                               vspecs[k + 1])
+        enc[k] = _hier_worker_encode(owns[k][0], efs[k], layouts[k], cfg,
+                                     vspecs[k], owns[k][1])
+        recvs[k] = _map_a2a(outer, enc[k][0], vspecs[k])
+
+    k_idx = outer.index()
+
+    # --- stage 3: server encode k+1 ‖ inter-pod gather k --------------------
+    srv = [None] * K
+    srv[0] = _hier_server_encode(
+        recvs[0], efs[0], layouts[0], cfg, vspecs[0], enc[0][2], enc[0][3],
+        owns[0][1] * layouts[0].n_outer + k_idx)
+    gathered = [None] * K
+    for k in range(K):
+        gathered[k] = _map_gather(outer, srv[k][0], vspecs[k])
+        if k + 1 < K:
+            srv[k + 1] = _hier_server_encode(
+                recvs[k + 1], efs[k + 1], layouts[k + 1], cfg,
+                vspecs[k + 1], enc[k + 1][2], enc[k + 1][3],
+                owns[k + 1][1] * layouts[k + 1].n_outer + k_idx)
+
+    # --- stage 4: decode + intra-pod all_gather per bucket ------------------
+    outs, new_efs = [], []
+    for k in range(K):
+        cst = lambda x: C.constrain(x, vspecs[k])
+        out_slice = cst(codec.decode(gathered[k], layouts[k],
+                                     cfg.compute_dtype,
+                                     use_pallas=enc[k][3]))
+        outs.append(_hier_gather_out(inner, out_slice, layouts[k], cfg,
+                                     vspecs[k]))
+        if codec.needs_ef:
+            new_efs.append(EFState(
+                err_worker=cst(enc[k][1]).astype(efs[k].err_worker.dtype),
+                err_server=srv[k][1].astype(efs[k].err_server.dtype)))
+        else:
+            new_efs.append(efs[k])
+    return outs, new_efs
 
 
 def fullprec_allreduce_view(comm: Comm, z_view: jnp.ndarray,

@@ -52,6 +52,14 @@ def _slice_counts_np(layout: C.LeafLayout) -> np.ndarray:
     return C.slice_row_counts(layout)
 
 
+@functools.lru_cache(maxsize=None)
+def _chunk_counts_np(layout: C.LeafLayout) -> np.ndarray:
+    # cached like _row_counts_np: bucketed exchanges re-trace the server
+    # compress once per bucket per pipeline stage (see
+    # onebit_allreduce_buckets), and LeafLayout is hashable either way
+    return C.chunk_row_counts(layout)
+
+
 def _scales_to_rows(scales, lead_shape, rows):
     """Broadcast granular scales (tensor/chunk/row shapes) over the buffer's
     leading view dims, then repeat onto frame sub-rows when the 2-D frame
@@ -189,7 +197,7 @@ def server_compress_view(avg, err, layout: C.LeafLayout, mode: C.ScaleMode,
     assert not (mode == "row" and ndim == 2)
     rows_all, cols = C.view_rows_cols(layout)
     rows = rows_all // layout.n   # the frame splits chunks into equal blocks
-    cnts = jnp.take(jnp.asarray(C.chunk_row_counts(layout)), worker_index,
+    cnts = jnp.take(jnp.asarray(_chunk_counts_np(layout)), worker_index,
                     axis=0)
     z2, e2 = avg.reshape(rows, cols), err.reshape(rows, cols)
     br = _largest_divisor(rows, 8)

@@ -262,11 +262,11 @@ def collective_group_bytes(hlo_text: str, pod_span: Optional[int] = None):
 
 def default_opt_cfg(optimizer: str = "zero_one_adam", scale_mode="tensor",
                     hierarchy_inner: int = 0, codec: str = "sign1bit",
-                    codec_arg=None):
+                    codec_arg=None, bucket_mb=None):
     from repro.core import Hierarchy
     return OptimizerConfig(
         name=optimizer,
-        codec=codec, codec_arg=codec_arg,
+        codec=codec, codec_arg=codec_arg, bucket_mb=bucket_mb,
         lr=S.LinearWarmupExpDecay(peak_lr=4e-4, warmup_steps=12500),
         var_policy=S.AdaptiveFreezePolicy(kappa=16),
         sync_policy=S.LrProportionalSyncPolicy(
@@ -285,7 +285,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
             micro_override=None, window_cache: bool = False,
             mesh_shape=None, verbose: bool = True,
             hierarchy: bool = False, codec: str = "sign1bit",
-            codec_arg=None):
+            codec_arg=None, bucket_mb=None):
     spec = get(arch)
     shape = SH.SHAPES[shape_name]
     if shape_name not in spec.shapes:
@@ -302,6 +302,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
                               compute_dtype=jnp.bfloat16,
                               window_cache=window_cache)
     t0 = time.time()
+    n_buckets = n_dp_leaves = None
 
     if shape.kind == "train":
         n_workers = 1
@@ -317,9 +318,14 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
         tr = Trainer(cfg, default_opt_cfg(optimizer, scale_mode,
                                           hierarchy_inner=inner,
                                           codec=codec,
-                                          codec_arg=codec_arg), mesh=mesh,
+                                          codec_arg=codec_arg,
+                                          bucket_mb=bucket_mb), mesh=mesh,
                      trainer_cfg=TrainerConfig(micro_batches=micro,
                                                worker_axes=W))
+        n_buckets = (len(tr.opt.bucket_plan.buckets)
+                     if getattr(tr.opt, "bucket_plan", None) is not None
+                     else None)
+        n_dp_leaves = sum(1 for dp in tr.opt.dp_mask if dp)
         fn, _ = tr.mesh_step_fn()
         params, state, batch = tr.abstract_inputs(
             shape.global_batch, shape.seq,
@@ -348,6 +354,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):   # older jax: one properties-dict per device
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     coll, coll_counts = collective_bytes(hlo_text)
     pod_span = (mesh.devices.size // mesh.shape["pod"]
@@ -362,6 +370,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
         "scale_mode": scale_mode if shape.kind == "train" else None,
         "codec": codec if shape.kind == "train" else None,
         "hierarchy": bool(hierarchy) if shape.kind == "train" else None,
+        "bucket_mb": bucket_mb if shape.kind == "train" else None,
+        "n_buckets": n_buckets,
+        "n_dp_leaves": n_dp_leaves,
         "micro": micro_override, "window_cache": window_cache,
         "kind": shape.kind,
         "flops_per_device": float(cost.get("flops", 0.0)),
@@ -416,6 +427,10 @@ def main():
                          "non-sign1bit codecs lower through the jnp path")
     ap.add_argument("--codec-arg", type=float, default=None,
                     help="parameter for parameterized codecs (topk density)")
+    ap.add_argument("--bucket-mb", type=float, default=None,
+                    help="fuse the per-leaf exchange into flat buckets of "
+                         "this many MiB each; the bucket count lands in "
+                         "the JSON record (n_buckets)")
     ap.add_argument("--micro", type=int, default=None)
     ap.add_argument("--hierarchy", action="store_true",
                     help="two-level AllReduce: uncompressed intra-pod "
@@ -448,7 +463,8 @@ def main():
                           micro_override=args.micro,
                           window_cache=args.window_cache,
                           mesh_shape=ms, hierarchy=args.hierarchy,
-                          codec=args.codec, codec_arg=args.codec_arg)
+                          codec=args.codec, codec_arg=args.codec_arg,
+                          bucket_mb=args.bucket_mb)
         except Exception as e:  # noqa: BLE001 — report, keep going
             rec = {"arch": a, "shape": s,
                    "mesh": "2x16x16" if mp else "16x16",

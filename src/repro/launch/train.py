@@ -45,7 +45,8 @@ def build_opt_cfg(args) -> OptimizerConfig:
         codec=args.codec, codec_arg=args.codec_arg,
         use_pallas=args.use_pallas,
         hierarchy=(Hierarchy(inner=args.hierarchy)
-                   if args.hierarchy else None))
+                   if args.hierarchy else None),
+        bucket_mb=args.bucket_mb)
 
 
 def main():
@@ -85,6 +86,12 @@ def main():
                          "reduce uncompressed inside pods ('data' axis), "
                          "1-bit-compress only across pods ('pod' axis). "
                          "0 = flat single-level exchange")
+    ap.add_argument("--bucket-mb", type=float, default=None, metavar="MB",
+                    help="fuse the per-leaf compressed exchange into flat "
+                         "buckets of MB MiB of f32 elements each "
+                         "(repro.core.bucketing): one codec encode + one "
+                         "collective pair per bucket instead of per leaf. "
+                         "Default: per-leaf exchange")
     ap.add_argument("--micro-batches", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -112,6 +119,11 @@ def main():
           f"codec={acct['codec']} "
           f"bits/param/sync={acct['bits_per_param_sync']:.3f} "
           f"workers={n} optimizer={args.optimizer}")
+    if args.bucket_mb:
+        print(f"bucketed exchange: {int(acct['exchange_units'])} buckets "
+              f"({args.bucket_mb}MiB budget) over "
+              f"{int(acct['dp_leaves'])} DP leaves -> "
+              f"{int(acct['collectives_per_sync'])} collective phases/sync")
     if acct["n_inner"] > 1:
         print(f"hierarchy: {int(acct['n_outer'])} pods x "
               f"{int(acct['n_inner'])} workers/pod; sync bytes/worker "

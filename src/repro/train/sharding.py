@@ -89,6 +89,16 @@ class TreeSpecs:
 
     # ---- optimizer state (generic over state_kinds) ----------------------
     def _leaf_model_entries(self, kind):
+        if kind.bucketed:
+            # bucket-shaped state: ``leaf`` indexes the bucket plan; fused
+            # buckets are never model-sharded (their spec is None), while
+            # singleton buckets carry their leaf's spec through the same
+            # view/chunk entry derivation as per-leaf state
+            b = self.opt.bucket_plan.buckets[kind.leaf]
+            spec = tuple(b.spec) if b.spec else None
+            if kind.tag == "bucket_view":
+                return C.view_spec_entries(b.layout, spec)
+            return C.chunk_spec_entries(b.layout, spec)
         pd = self.pds[kind.leaf]
         spec = tuple(pd.spec) if pd.spec else None
         lo = self.opt.layouts[kind.leaf]
@@ -113,6 +123,9 @@ class TreeSpecs:
         """(full, inner) specs for one tagged state leaf."""
         if k.tag == "scalar":
             return P(), P()
+        if k.bucketed:
+            # buckets only cover DP leaves -> always per-worker state
+            return (P(self.W, *self._leaf_model_entries(k)), P(self.W))
         pd = self.pds[k.leaf]
         if pd.dp:
             # per-worker state: leading worker axis, model entries ride along

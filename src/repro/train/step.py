@@ -514,8 +514,12 @@ class Trainer:
         def glob(x, k, ms):
             if k.tag == "scalar":
                 return x
-            pd = self.pd_leaves[k.leaf]
             shape = self._grow_model(x.shape, tuple(ms) if ms else None)
+            if k.bucketed:
+                # bucket-shaped state (EF / anchors): buckets only cover DP
+                # leaves, so the state is always per-worker stacked
+                return jax.ShapeDtypeStruct((n,) + shape, x.dtype)
+            pd = self.pd_leaves[k.leaf]
             if pd.dp:
                 return jax.ShapeDtypeStruct((n,) + shape, x.dtype)
             ax = pd.ep_axis or 0

@@ -142,6 +142,47 @@ def test_composed_sgd_state_roundtrip_resume(tmp_path):
                                                      name="zero_one_sgd"))
 
 
+def test_bucketed_state_roundtrip_resume(tmp_path):
+    """Bucketed layouts (per-bucket EF state + anchors) survive a
+    save->restore->resume mid-schedule bitwise — the save lands between
+    syncs, so EF/anchor buffers are live, not zeros."""
+    import dataclasses
+    _trainer_roundtrip(tmp_path, dataclasses.replace(OPT, bucket_mb=0.5))
+
+
+def test_bucketed_state_roundtrip_resume_hierarchical(tmp_path):
+    import dataclasses
+    from repro.core import Hierarchy
+    _trainer_roundtrip(tmp_path, dataclasses.replace(
+        OPT, bucket_mb=0.5, hierarchy=Hierarchy(inner=2)))
+
+
+def test_per_leaf_checkpoint_into_bucketed_config_clear_error(tmp_path):
+    """Restoring a per-leaf checkpoint into a bucketed config (or the
+    reverse) must fail with an error that names the bucket_mb layout
+    mismatch, not just a bare count."""
+    import dataclasses
+    cfg = get("gpt2").smoke
+    tr = Trainer(cfg, OPT, n_workers=N)
+    params, state = tr.sim_init(jax.random.PRNGKey(0))
+    path = os.path.join(tmp_path, "perleaf.npz")
+    ckpt_io.save(path, {"params": params, "state": state}, step=1)
+
+    trb = Trainer(cfg, dataclasses.replace(OPT, bucket_mb=4.0), n_workers=N)
+    pb, sb = trb.sim_init(jax.random.PRNGKey(0))
+    like = {"params": jax.tree.map(jnp.zeros_like, pb),
+            "state": jax.tree.map(jnp.zeros_like, sb)}
+    with pytest.raises(ValueError, match="bucket_mb"):
+        ckpt_io.restore(path, like)
+    # and the reverse direction: bucketed checkpoint, per-leaf config
+    pathb = os.path.join(tmp_path, "bucketed.npz")
+    ckpt_io.save(pathb, {"params": pb, "state": sb}, step=1)
+    like2 = {"params": jax.tree.map(jnp.zeros_like, params),
+             "state": jax.tree.map(jnp.zeros_like, state)}
+    with pytest.raises(ValueError, match="bucket_mb"):
+        ckpt_io.restore(pathb, like2)
+
+
 def test_legacy_state_roundtrip(tmp_path):
     """Old-path (legacy ZeroOneAdam NamedTuple) optimizer state survives a
     save/restore unchanged, leaf for leaf."""

@@ -32,7 +32,7 @@ SCRIPT = textwrap.dedent("""
     from repro.launch.mesh import make_debug_mesh
     from repro.train import Trainer, TrainerConfig
 
-    def opt_cfg(h, pallas, name):
+    def opt_cfg(h, pallas, name, bucket_mb=None):
         return OptimizerConfig(
             name=name,
             lr=S.LinearWarmupExpDecay(peak_lr=2e-3, warmup_steps=10,
@@ -40,7 +40,7 @@ SCRIPT = textwrap.dedent("""
             var_policy=S.AdaptiveFreezePolicy(kappa=2),
             sync_policy=S.LrProportionalSyncPolicy(
                 warmup_steps=10, double_every=20, max_interval=4),
-            hierarchy=h, use_pallas=pallas,
+            hierarchy=h, use_pallas=pallas, bucket_mb=bucket_mb,
             comm_dtype=jnp.float32)   # exact wire: parity at 1e-6
 
     cfg = get("gpt2").smoke
@@ -59,13 +59,16 @@ SCRIPT = textwrap.dedent("""
         return out
 
     import sys
-    topology, kernels = sys.argv[1].split("-")
+    parts = sys.argv[1].split("-")
+    topology, kernels = parts[0], parts[1]
+    bucketed = "bucketed" in parts[2:]
     opt_name = sys.argv[2] if len(sys.argv) > 2 else "zero_one_adam"
     COMBOS = [(sys.argv[1],
                Hierarchy(inner=2) if topology == "hier" else None,
                kernels == "pallas")]
     for tag, h, pallas in COMBOS:
-        oc = opt_cfg(h, pallas, opt_name)
+        oc = opt_cfg(h, pallas, opt_name,
+                     bucket_mb=0.25 if bucketed else None)
         tr_sim = Trainer(cfg, oc, n_workers=4)
         p, s = tr_sim.sim_init(jax.random.PRNGKey(0))
         tr_mesh = Trainer(cfg, oc, mesh=mesh,
@@ -135,3 +138,12 @@ def test_mesh_matches_sim_zero_one_lamb():
     """0/1-LAMB carries per-leaf trust scalars (state kind "leaf_scalar");
     this pins their mesh-regime sharding/stacking against sim."""
     _run_combo("flat-jnp", "zero_one_lamb")
+
+
+@pytest.mark.slow
+def test_mesh_matches_sim_bucketed_hier_pallas():
+    """Bucketed exchange x hierarchy x pallas: the bucket-shaped state
+    kinds (bucket_view/bucket_chunk) must shard/stack identically in the
+    mesh regime — this is the combination that exercises every new layer
+    of the bucketing path at once."""
+    _run_combo("hier-pallas-bucketed", "zero_one_adam")

@@ -1,0 +1,155 @@
+"""Golden-trajectory regression suite.
+
+The parity tests elsewhere in this suite are *relative*: they compare two
+implementations of the same math against each other, so a refactor that
+changes the numerics of BOTH paths in the same way passes them silently
+("parity by construction"). This suite pins short sim trajectories against
+arrays frozen on disk (``tests/golden/*.npz``), so any numeric drift in the
+optimizer pipeline — local half-steps, EF compression, the Algorithm-2
+exchange, policy machines — fails loudly against the committed bits.
+
+Pinned per optimizer (``zero_one_adam``, ``one_bit_adam``,
+``zero_one_lamb``): the full parameter arrays after 8 sim steps, the final
+worker/server error-feedback state, and a per-step float64 parameter-sum
+trace (the trace localizes *when* a divergence started; the arrays prove
+bitwise equality at the end).
+
+The trajectories deliberately avoid model matmuls: gradients are an
+elementwise deterministic function of the parameters (plus a fixed
+pseudo-random per-worker perturbation), so the goldens do not depend on
+BLAS kernel choice — only on the optimizer pipeline itself and on jax's
+(stable) threefry PRNG.
+
+Regenerate (only after an INTENTIONAL numeric change, in the same commit
+that explains why):
+
+    PYTHONPATH=src:tests python tests/test_golden_trajectories.py --regen
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import OptimizerConfig, build_optimizer, sim_comm
+from repro.core import schedules as S
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+N = 4
+STEPS = 8
+
+# Odd sizes on purpose: every leaf exercises the pad-exact masks/counts.
+PARAMS = {
+    "w": jax.random.normal(jax.random.PRNGKey(0), (6, 16)),
+    "b": jnp.zeros((5,)),
+    "deep": {"k": jax.random.normal(jax.random.PRNGKey(1), (3, 8, 8))},
+}
+
+# Dense schedules so 8 steps cover syncs, local steps, and variance
+# refreshes for every optimizer.
+CONFIGS = {
+    "zero_one_adam": OptimizerConfig(
+        name="zero_one_adam", lr=S.ConstantLr(1e-2),
+        var_policy=S.AdaptiveFreezePolicy(kappa=2),
+        sync_policy=S.LrProportionalSyncPolicy(warmup_steps=2,
+                                               double_every=3,
+                                               max_interval=4)),
+    "one_bit_adam": OptimizerConfig(
+        name="one_bit_adam", lr=S.ConstantLr(1e-2), onebit_warmup=3),
+    "zero_one_lamb": OptimizerConfig(
+        name="zero_one_lamb", lr=S.ConstantLr(1e-2),
+        var_policy=S.AdaptiveFreezePolicy(kappa=2),
+        sync_policy=S.LrProportionalSyncPolicy(warmup_steps=2,
+                                               double_every=3,
+                                               max_interval=4)),
+}
+
+
+def _grads(xs, t):
+    """Deterministic per-worker gradients: elementwise pull toward a fixed
+    target plus a frozen pseudo-random perturbation (no matmuls)."""
+    def leaf(path_seed, x):
+        k = jax.random.fold_in(jax.random.PRNGKey(11), path_seed)
+        k = jax.random.fold_in(k, t)
+        ks = jax.random.split(k, N)
+        noise = jax.vmap(lambda kk: jax.random.normal(
+            kk, x.shape[1:]))(ks)
+        return 0.1 * (x - 0.5) + noise
+
+    leaves, treedef = jax.tree.flatten(xs)
+    return jax.tree.unflatten(
+        treedef, [leaf(i, x) for i, x in enumerate(leaves)])
+
+
+def run_trajectory(name):
+    opt = build_optimizer(CONFIGS[name], PARAMS, n_workers=N)
+    comm = sim_comm("w")
+    state = jax.vmap(lambda _: opt.init(PARAMS))(jnp.arange(N))
+    xs = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (N,) + x.shape) + 0, PARAMS)
+
+    @jax.jit
+    def one(xs, state, t):
+        return jax.vmap(lambda x, g, s: opt.step(comm, x, g, s),
+                        axis_name="w")(xs, _grads(xs, t), state)
+
+    trace = []
+    for t in range(STEPS):
+        xs, state, _ = one(xs, state, t)
+        trace.append(float(np.sum(
+            [np.asarray(l, np.float64).sum() for l in jax.tree.leaves(xs)])))
+    return xs, state, np.asarray(trace, np.float64)
+
+
+def _flat_arrays(name):
+    xs, state, trace = run_trajectory(name)
+    out = {"trace": trace}
+    for i, l in enumerate(jax.tree.leaves(xs)):
+        out[f"param_{i}"] = np.asarray(l)
+    for i, l in enumerate(jax.tree.leaves((state.err_w, state.err_s))):
+        out[f"ef_{i}"] = np.asarray(l)
+    return out
+
+
+def golden_path(name):
+    return os.path.join(GOLDEN_DIR, f"{name}.npz")
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_golden_trajectory(name):
+    path = golden_path(name)
+    assert os.path.exists(path), (
+        f"missing golden file {path}; generate it with "
+        f"PYTHONPATH=src:tests python tests/test_golden_trajectories.py "
+        f"--regen")
+    got = _flat_arrays(name)
+    with np.load(path) as z:
+        want = {k: z[k] for k in z.files}
+    assert sorted(got) == sorted(want), (
+        f"{name}: golden array set changed: {sorted(got)} vs "
+        f"{sorted(want)}")
+    # The trace pinpoints the first drifted step before the array diff.
+    np.testing.assert_allclose(
+        got["trace"], want["trace"], rtol=0, atol=0,
+        err_msg=(f"{name}: parameter-sum trace drifted — first bad step "
+                 f"index {int(np.argmax(got['trace'] != want['trace']))}"))
+    for k in sorted(want):
+        np.testing.assert_array_equal(
+            got[k], want[k],
+            err_msg=(f"{name}: {k} drifted from the committed golden. If "
+                     f"the numeric change is INTENTIONAL, regenerate via "
+                     f"--regen and justify it in the commit message."))
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" not in sys.argv:
+        sys.exit("usage: python tests/test_golden_trajectories.py --regen")
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for name in sorted(CONFIGS):
+        arrays = _flat_arrays(name)
+        np.savez(golden_path(name), **arrays)
+        print(f"wrote {golden_path(name)}: "
+              f"{sorted(arrays)[:4]}... trace={arrays['trace'][-1]:.6f}")
