@@ -20,14 +20,13 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get
 from repro.core import (CODEC_NAMES, OptimizerConfig, REGISTRY_NAMES,
                         schedules as S)
 from repro.data import DataConfig, SyntheticLM
-from repro.train import Trainer, TrainerConfig
+from repro.train import Trainer
 
 STEPS = 120
 WORKERS = 4

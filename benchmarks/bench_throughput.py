@@ -22,7 +22,6 @@ import time
 from benchmarks import hw
 from repro.configs import get
 from repro.core import OptimizerConfig, comm_accounting, build_optimizer
-from repro.core import schedules as S
 from repro.models import transformer as T
 from repro.models.layers import abstract_params, param_specs
 

@@ -1,0 +1,135 @@
+"""CI guard for the committed benchmark snapshots.
+
+Re-derives the *cheap, deterministic* half of the committed
+``BENCH_fixed_cost.json`` / ``BENCH_throughput.json`` records — the
+structural comm accounting (DP leaves, exchange units, collectives per
+sync, bits per param) and the modeled latency floors — and diffs them
+against the snapshots. Structural integer fields must match exactly;
+modeled floats within ``--rtol``. Measured wall-clock fields
+(``syncs_per_s``) and the slow Fig.3 grid (``throughput_model`` records,
+which need full convergence sims) are not re-run and not compared.
+
+    PYTHONPATH=src python -m benchmarks.check_bench
+
+Exit 1 on any drift, naming the record and field. If a change is
+intentional, regenerate the snapshots:
+
+    python -m benchmarks.bench_fixed_cost --json BENCH_fixed_cost.json
+    python -m benchmarks.bench_throughput --json BENCH_throughput.json
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+STRUCTURAL = ("dp_leaves", "exchange_units", "collectives_per_sync")
+MODELED = {"fixed_cost_buckets": ("bits_per_param_sync",),
+           "throughput_buckets": ("sync_latency_floor_ms",)}
+
+
+def _load(path):
+    recs = []
+    for line in Path(path).read_text().splitlines():
+        if line.strip():
+            recs.append(json.loads(line))
+    return recs
+
+
+def _fresh_fixed_cost(snapshot):
+    """Structural accounting for each snapshot point, without the timed
+    training loop of bench_fixed_cost.bucket_sweep."""
+    from repro.configs import get
+    from repro.core import OptimizerConfig, build_optimizer, comm_accounting
+    from repro.core import schedules as S
+    from repro.models.layers import (abstract_params, param_specs)
+    from repro.models import transformer as T
+
+    cfg = get("gpt2").smoke
+    tmpl = T.model_template(cfg)
+    shapes = abstract_params(tmpl)
+    specs = param_specs(tmpl)
+    out = {}
+    for rec in snapshot:
+        mb = rec["bucket_mb"]
+        ocfg = OptimizerConfig(
+            name="zero_one_adam", lr=S.ConstantLr(1e-3),
+            var_policy=S.EveryStepVariancePolicy(),
+            sync_policy=S.EveryStepSyncPolicy(), bucket_mb=mb)
+        opt = build_optimizer(ocfg, shapes, specs=specs,
+                              n_workers=rec["workers"])
+        acct = comm_accounting(opt)
+        out[json.dumps(mb)] = {
+            "dp_leaves": int(acct["dp_leaves"]),
+            "exchange_units": int(acct["exchange_units"]),
+            "collectives_per_sync": int(acct["collectives_per_sync"]),
+            "bits_per_param_sync": acct["bits_per_param_sync"],
+        }
+    return out
+
+
+def _fresh_throughput(snapshot):
+    from benchmarks.bench_throughput import bucket_latency_sweep
+    mbs = [rec["bucket_mb"] for rec in snapshot]
+    arch = snapshot[0]["arch"]
+    workers = snapshot[0]["workers"]
+    fresh = bucket_latency_sweep(arch=arch, workers=workers,
+                                 bucket_mbs=tuple(mbs))
+    return {json.dumps(r["bucket_mb"]): r for r in fresh}
+
+
+def _diff(kind, snapshot, fresh, rtol, problems):
+    for rec in snapshot:
+        key = json.dumps(rec["bucket_mb"])
+        label = f"{kind}[bucket_mb={rec['bucket_mb']}]"
+        f = fresh.get(key)
+        if f is None:
+            problems.append(f"{label}: no fresh record")
+            continue
+        for field in STRUCTURAL:
+            if int(rec[field]) != int(f[field]):
+                problems.append(f"{label}.{field}: snapshot {rec[field]} "
+                                f"!= fresh {f[field]}")
+        for field in MODELED[kind]:
+            a, b = float(rec[field]), float(f[field])
+            if abs(a - b) > rtol * max(abs(a), abs(b), 1e-12):
+                problems.append(f"{label}.{field}: snapshot {a} != fresh "
+                                f"{b} (rtol {rtol})")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    root = Path(__file__).resolve().parents[1]
+    ap.add_argument("--fixed", default=str(root / "BENCH_fixed_cost.json"))
+    ap.add_argument("--throughput",
+                    default=str(root / "BENCH_throughput.json"))
+    ap.add_argument("--rtol", type=float, default=0.05,
+                    help="relative tolerance for modeled float fields")
+    args = ap.parse_args(argv)
+
+    problems = []
+    fixed = [r for r in _load(args.fixed)
+             if r["bench"] == "fixed_cost_buckets"]
+    if not fixed:
+        problems.append(f"{args.fixed}: no fixed_cost_buckets records")
+    else:
+        _diff("fixed_cost_buckets", fixed,
+              _fresh_fixed_cost(fixed), args.rtol, problems)
+
+    tput = [r for r in _load(args.throughput)
+            if r["bench"] == "throughput_buckets"]
+    if not tput:
+        problems.append(f"{args.throughput}: no throughput_buckets records")
+    else:
+        _diff("throughput_buckets", tput,
+              _fresh_throughput(tput), args.rtol, problems)
+
+    for p in problems:
+        print(f"BENCH DRIFT: {p}")
+    n = len(fixed) + len(tput)
+    print(f"check_bench: {n} snapshot records checked, "
+          f"{len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""Static analysis of the repo's lowered train step and source tree.
+
+Two independent passes:
+
+* :mod:`repro.analysis.ir_audit` — traces a configured train step through
+  ``shard_map`` over an abstract (device-free) mesh and verifies the
+  collective schedule, wire bytes, and dtype discipline of the jaxpr
+  against the declared contract (``bucketing.expected_*_schedule``,
+  ``codec.wire_bytes`` / ``codec.payload_spec``).
+* :mod:`repro.analysis.lints` — stdlib-only AST rules enforcing repo
+  invariants (no raw collectives outside ``core/comm.py``, no hand-rolled
+  comm-view reshapes, ``StateKind`` construction only in the registry, no
+  bare float64 literals).
+"""
+from repro.analysis.ir_audit import (AuditReport, Violation, audit_trainer,
+                                     build_manifests, check_schedule,
+                                     check_wire_bytes, concretize_manifest,
+                                     trace_collectives)
+from repro.analysis.lints import run_lints
+
+__all__ = [
+    "AuditReport",
+    "Violation",
+    "audit_trainer",
+    "build_manifests",
+    "check_schedule",
+    "check_wire_bytes",
+    "concretize_manifest",
+    "trace_collectives",
+    "run_lints",
+]

@@ -1,0 +1,172 @@
+"""AST-level repo-invariant lints (stdlib only — no ruff dependency).
+
+Rules — each enforces an invariant the IR audit relies on:
+
+``raw-collective``
+    ``jax.lax.psum`` / ``pmean`` / ``all_to_all`` / … called outside
+    ``core/comm.py``. All collectives must route through :class:`Comm`
+    so the auditor (and later partitioning work) sees one choke point.
+``comm-view-reshape``
+    ``.reshape(...)`` fed a ``LeafLayout`` shape attribute
+    (``view_shape`` / ``slice_shape`` / ``chunk_shape`` /
+    ``ef_worker_shape``) outside the core modules that own the layout
+    contract — hand-rolled view reshapes bypass the pad-exact helpers.
+``statekind-registry``
+    ``StateKind(...)`` constructed outside ``core/compressed.py`` (the
+    registry). State globalization is driven by these tags; ad-hoc tags
+    would silently mis-stack state.
+``float64-literal``
+    a bare ``jnp.float64`` in source. The step must stay f64-free (the
+    IR audit enforces the traced side; this catches it at the source).
+
+A finding is waived by an inline ``# audit-ok: <rule>`` comment on the
+offending line. Run as ``python -m repro.analysis.lints [paths...]``
+(non-zero exit on findings) or via :func:`run_lints` from tests.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+_COLLECTIVE_NAMES = {
+    "psum", "pmean", "pmax", "pmin", "ppermute", "pbroadcast",
+    "all_gather", "all_to_all", "psum_scatter", "all_reduce",
+}
+_VIEW_SHAPE_ATTRS = {
+    "view_shape", "slice_shape", "chunk_shape", "ef_worker_shape",
+}
+
+# files allowed to break a rule without a waiver comment (repo-relative,
+# forward slashes)
+_ALLOWED = {
+    "raw-collective": ("core/comm.py",),
+    "comm-view-reshape": ("core/compressor.py", "core/onebit_allreduce.py",
+                          "core/bucketing.py", "core/codecs.py",
+                          "kernels/dispatch.py"),
+    "statekind-registry": ("core/compressed.py",),
+    "float64-literal": (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _is_allowed(rule: str, path: str) -> bool:
+    p = path.replace("\\", "/")
+    return any(p.endswith(suffix) for suffix in _ALLOWED[rule])
+
+
+def _attr_chain(node) -> Optional[str]:
+    """Dotted name of an attribute chain ('jax.lax.psum'), or None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _mentions_view_attr(node) -> Optional[str]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in _VIEW_SHAPE_ATTRS:
+            return sub.attr
+    return None
+
+
+def _lint_source(path: str, src: str) -> List[LintFinding]:
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [LintFinding("syntax", path, e.lineno or 0, str(e))]
+    lines = src.splitlines()
+
+    def waived(rule: str, lineno: int) -> bool:
+        if 1 <= lineno <= len(lines):
+            return f"audit-ok: {rule}" in lines[lineno - 1]
+        return False
+
+    out: List[LintFinding] = []
+
+    def add(rule, lineno, msg):
+        if not _is_allowed(rule, path) and not waived(rule, lineno):
+            out.append(LintFinding(rule, path, lineno, msg))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if chain:
+                tail = chain.rsplit(".", 1)[-1]
+                if tail in _COLLECTIVE_NAMES and (
+                        chain.startswith("jax.lax.")
+                        or chain.startswith("lax.")):
+                    add("raw-collective", node.lineno,
+                        f"raw collective {chain}() — route it through "
+                        f"core.comm.Comm")
+                if tail == "reshape":
+                    attr = _mentions_view_attr(node)
+                    if attr:
+                        add("comm-view-reshape", node.lineno,
+                            f".reshape(...{attr}...) — use the LeafLayout "
+                            f"view helpers in core.compressor")
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id == "StateKind":
+                add("statekind-registry", node.lineno,
+                    "StateKind(...) constructed outside the registry "
+                    "(core/compressed.py)")
+        elif isinstance(node, ast.Attribute) and node.attr == "float64":
+            chain = _attr_chain(node)
+            if chain in ("jnp.float64", "jax.numpy.float64"):
+                add("float64-literal", node.lineno,
+                    f"bare {chain} — the train step must stay f64-free")
+    return out
+
+
+_DEFAULT_ROOTS = ("src", "benchmarks")
+
+
+def run_lints(paths: Optional[Sequence[str]] = None,
+              root: Optional[str] = None) -> List[LintFinding]:
+    """Lint ``paths`` (files or directories; default: the repo's ``src``
+    and ``benchmarks`` under ``root`` or the import location)."""
+    if root is None:
+        # .../src/repro/analysis/lints.py -> repo root
+        root = str(Path(__file__).resolve().parents[3])
+    targets: List[Path] = []
+    for p in (paths or [str(Path(root) / r) for r in _DEFAULT_ROOTS]):
+        pp = Path(p)
+        if pp.is_dir():
+            targets.extend(sorted(pp.rglob("*.py")))
+        elif pp.suffix == ".py":
+            targets.append(pp)
+    out: List[LintFinding] = []
+    for t in targets:
+        out.extend(_lint_source(str(t), t.read_text()))
+    return out
+
+
+def main(argv=None) -> int:
+    findings = run_lints(argv if argv else None)
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"{len(findings)} lint finding(s)")
+        return 1
+    print("lints: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,1 +1,3 @@
 from repro.checkpointing import io
+
+__all__ = ["io"]

@@ -1,1 +1,3 @@
 from repro.configs.base import ALL_SHAPES, ASSIGNED, ArchSpec, get, list_archs
+
+__all__ = ["ALL_SHAPES", "ASSIGNED", "ArchSpec", "get", "list_archs"]

@@ -43,7 +43,7 @@ import jax.numpy as jnp
 from repro.core import compressor as C
 from repro.core import schedules as S
 from repro.core.base_steps import adam_base, lamb_base, momentum_sgd_base
-from repro.core.comm import Comm, Hierarchy
+from repro.core.comm import Hierarchy
 from repro.core.compressed import CompressedDP, compressed_dp
 
 

@@ -39,7 +39,7 @@ way.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional, Tuple
+from typing import Any, List, NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -215,3 +215,217 @@ def bucket_accounting(plan: BucketPlan) -> dict:
         "true_elems": true_total,
         "padded_elems": sum(b.layout.padded for b in plan.buckets),
     }
+
+
+# ---------------------------------------------------------------------------
+# Declared collective schedule (the manifest repro.analysis.ir_audit checks
+# the lowered step against)
+# ---------------------------------------------------------------------------
+
+class ExpectedCollective(NamedTuple):
+    """One declared collective of the exchange schedule.
+
+    ``level`` names a topology level, not concrete mesh axes — the auditor
+    resolves it against the trainer's worker axes (``flat`` = the full
+    worker-axis tuple, ``inner``/``outer`` = the hierarchy's intra-/
+    inter-pod axes). ``shape``/``dtype`` describe the collective's *operand*
+    as emitted (before any per-axis decomposition of multi-axis gathers).
+    """
+
+    op: str                   # "all_to_all" | "all_gather"
+    level: str                # "flat" | "inner" | "outer"
+    phase: str                # "reduce_scatter" | "scatter" | "gather"
+    round: str                #   | "broadcast";  round: "sync" | "fullprec"
+    unit: int                 # exchange-unit ordinal (bucket / DP leaf)
+    unit_label: str           # "bucket[k]" or "leaf[i]"
+    leaf: str                 # payload leaf name, "raw" for uncompressed
+    dtype: str                # canonical dtype name of the operand
+    shape: Tuple[int, ...]    # operand shape
+
+    @property
+    def nbytes(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= int(s)
+        return n * np.dtype(self.dtype).itemsize
+
+    @property
+    def inter_pod(self) -> bool:
+        return self.level == "outer"
+
+
+def exchange_units(plan: LeafPlan, bucket_plan: Optional[BucketPlan] = None
+                   ) -> List[Tuple[C.LeafLayout, Any, str]]:
+    """``(layout, vspec, label)`` per exchange unit, in emission order:
+    buckets when a bucket plan is set, the DP leaves otherwise (exactly the
+    iteration order of ``ComposedOptimizer``'s sync/fullprec paths)."""
+    if bucket_plan is not None:
+        return [(b.layout, b.vspec, f"bucket[{k}]")
+                for k, b in enumerate(bucket_plan.buckets)]
+    return [(plan.layouts[i], plan.vspecs[i], f"leaf[{i}]")
+            for i, dp in enumerate(plan.dp_mask) if dp]
+
+
+def _payload_shapes(layout: C.LeafLayout, ar_cfg):
+    """Abstract (worker payload, server payload) trees of one exchange
+    unit, derived by ``jax.eval_shape`` over the *actual* encode helpers of
+    :mod:`repro.core.onebit_allreduce` — the manifest's shapes can never
+    drift from what the exchange really emits."""
+    import jax
+    from repro.core import onebit_allreduce as AR
+    hier = ar_cfg.hierarchy is not None
+    # kernels dispatch / TP psums don't change payload shapes; keep the
+    # abstract eval off those paths
+    cfg0 = dataclasses.replace(ar_cfg, use_pallas=False, model_axes=())
+
+    def f(z, ew, es):
+        ef = AR.EFState(ew, es)
+        j = jnp.zeros((), jnp.int32)
+        if hier:
+            payload, _, mask, _ = AR._hier_worker_encode(
+                z, ef, layout, cfg0, None, j)
+            payload_s, _ = AR._hier_server_encode(
+                payload, ef, layout, cfg0, None, mask, False, j)
+        else:
+            payload, _, mask, _ = AR._flat_worker_encode(
+                z, ef, layout, cfg0, None)
+            payload_s, _ = AR._flat_server_encode(
+                payload, ef, layout, cfg0, None, mask, False, j)
+        return payload, payload_s
+
+    z = jax.ShapeDtypeStruct(layout.slice_shape if hier
+                             else layout.view_shape, ar_cfg.compute_dtype)
+    ew = jax.ShapeDtypeStruct(layout.ef_worker_shape, jnp.float32)
+    es = jax.ShapeDtypeStruct(layout.chunk_shape, jnp.float32)
+    return jax.eval_shape(f, z, ew, es)
+
+
+def _unit_payload_entries(unit, label, layout, ar_cfg):
+    """Per-unit (scatter entries, gather entries) of the compressed
+    exchange. Shapes come from the traced encode helpers; dtypes from the
+    codec's *declared* ``payload_spec`` — a codec that lies about its wire
+    dtypes produces a manifest the lowered step can't match."""
+    codec = ar_cfg.codec
+    level = "outer" if ar_cfg.hierarchy is not None else "flat"
+    wp, sp = _payload_shapes(layout, ar_cfg)
+    spec = codec.payload_spec(layout)
+    out = {}
+    for phase, tree in (("scatter", wp), ("gather", sp)):
+        names = sorted(tree)  # jax.tree traversal order of the payload dict
+        declared = tuple(spec[phase])
+        if tuple(n for n, _ in declared) != tuple(names):
+            raise ValueError(
+                f"codec {codec.name!r} payload_spec names "
+                f"{[n for n, _ in declared]} != traced payload leaves "
+                f"{names} ({phase} phase, {label})")
+        op = "all_to_all" if phase == "scatter" else "all_gather"
+        out[phase] = [
+            ExpectedCollective(op, level, phase, "sync", unit, label, name,
+                               np.dtype(dt).name, tuple(tree[name].shape))
+            for name, dt in declared]
+    return out["scatter"], out["gather"]
+
+
+def _hier_raw_entries(unit, label, layout, ar_cfg):
+    """(intra-pod reduce-scatter, intra-pod broadcast) entries of the
+    hierarchical sync — the uncompressed wire-dtype phases."""
+    ni, no, ck = layout.n_inner, layout.n_outer, layout.chunk_shape
+    cd = np.dtype(ar_cfg.comm_dtype).name
+    rs = ExpectedCollective("all_to_all", "inner", "reduce_scatter", "sync",
+                            unit, label, "raw", cd, (ni, no) + ck)
+    bc = ExpectedCollective("all_gather", "inner", "broadcast", "sync",
+                            unit, label, "raw", cd, (1, no) + ck)
+    return rs, bc
+
+
+def expected_sync_schedule(plan: LeafPlan, ar_cfg,
+                           bucket_plan: Optional[BucketPlan] = None
+                           ) -> List[ExpectedCollective]:
+    """The declared collective schedule of ONE compressed (Algorithm-2)
+    sync round, in exact emission order — per-leaf loops interleave each
+    unit's scatter/gather; the bucketed paths emit the software-pipelined
+    order of ``onebit_allreduce_buckets`` / ``_hier_allreduce_buckets``."""
+    units = exchange_units(plan, bucket_plan)
+    hier = ar_cfg.hierarchy is not None
+    bucketed = bucket_plan is not None
+    scatters, gathers, raws = [], [], []
+    for u, (lo, _, label) in enumerate(units):
+        sc, ga = _unit_payload_entries(u, label, lo, ar_cfg)
+        scatters.append(sc)
+        gathers.append(ga)
+        raws.append(_hier_raw_entries(u, label, lo, ar_cfg)
+                    if hier and lo.n_inner > 1 else None)
+    K = len(units)
+    out: List[ExpectedCollective] = []
+    if not hier:
+        if not bucketed:
+            for sc, ga in zip(scatters, gathers):
+                out += sc + ga
+        else:           # phase 1: all scatters; phase 2: all gathers
+            for sc in scatters:
+                out += sc
+            for ga in gathers:
+                out += ga
+        return out
+    if not bucketed:
+        for k in range(K):
+            if raws[k]:
+                out.append(raws[k][0])
+            out += scatters[k] + gathers[k]
+            if raws[k]:
+                out.append(raws[k][1])
+        return out
+    # bucketed hierarchy: reduce-scatter k+1 is issued before scatter k,
+    # then all gathers, then all intra-pod broadcasts (stage order of
+    # _hier_allreduce_buckets)
+    if raws[0]:
+        out.append(raws[0][0])
+    for k in range(K):
+        if k + 1 < K and raws[k + 1]:
+            out.append(raws[k + 1][0])
+        out += scatters[k]
+    for ga in gathers:
+        out += ga
+    for k in range(K):
+        if raws[k]:
+            out.append(raws[k][1])
+    return out
+
+
+def expected_fullprec_schedule(plan: LeafPlan, ar_cfg,
+                               bucket_plan: Optional[BucketPlan] = None
+                               ) -> List[ExpectedCollective]:
+    """The declared schedule of ONE full-precision (T_v / mean) round:
+    ``fullprec_allreduce_view`` per exchange unit, sequentially."""
+    units = exchange_units(plan, bucket_plan)
+    cd = np.dtype(ar_cfg.comm_dtype).name
+    hier = ar_cfg.hierarchy is not None
+    out: List[ExpectedCollective] = []
+    for u, (lo, _, label) in enumerate(units):
+        ck = lo.chunk_shape
+        if hier and lo.n_inner > 1:
+            ni, no = lo.n_inner, lo.n_outer
+            out += [
+                ExpectedCollective("all_to_all", "inner", "reduce_scatter",
+                                   "fullprec", u, label, "raw", cd,
+                                   (ni, no) + ck),
+                ExpectedCollective("all_to_all", "outer", "scatter",
+                                   "fullprec", u, label, "raw", cd,
+                                   (no,) + ck),
+                ExpectedCollective("all_gather", "outer", "gather",
+                                   "fullprec", u, label, "raw", cd,
+                                   (1,) + ck),
+                ExpectedCollective("all_gather", "inner", "broadcast",
+                                   "fullprec", u, label, "raw", cd,
+                                   (1, no) + ck),
+            ]
+        else:
+            out += [
+                ExpectedCollective("all_to_all", "flat", "scatter",
+                                   "fullprec", u, label, "raw", cd,
+                                   tuple(lo.view_shape)),
+                ExpectedCollective("all_gather", "flat", "gather",
+                                   "fullprec", u, label, "raw", cd,
+                                   (1,) + ck),
+            ]
+    return out

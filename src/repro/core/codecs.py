@@ -92,6 +92,20 @@ class Codec:
     def wire_bytes(self, layout: C.LeafLayout, mode: str) -> Dict[str, int]:
         raise NotImplementedError
 
+    def payload_spec(self, layout: C.LeafLayout
+                     ) -> Dict[str, Tuple[Tuple[str, Any], ...]]:
+        """Declared wire-format metadata: ``{"scatter": ..., "gather": ...}``
+        with ordered ``(leaf name, wire dtype)`` pairs per exchange phase.
+
+        The order is the payload's collective emission order (``jax.tree``
+        traversal of the payload dict = sorted leaf names), so the IR
+        auditor (:mod:`repro.analysis.ir_audit`) can check the lowered
+        collective schedule — and each collective's operand dtype — against
+        this declaration without running the codec. A codec whose traced
+        payloads disagree with its own ``payload_spec`` fails the audit.
+        """
+        raise NotImplementedError
+
 
 # ---------------------------------------------------------------------------
 # sign1bit — the paper's compressor, extracted bit-identically
@@ -161,6 +175,10 @@ class Sign1BitCodec(Codec):
             return K.decompress_view(packed, scales, layout, dtype)
         vals = C.unpack_signs(packed, layout.pack_count, dtype)
         return vals * scales.astype(dtype)
+
+    def payload_spec(self, layout):
+        leaves = (("packed", jnp.uint8), ("scales", jnp.float32))
+        return {"scatter": leaves, "gather": leaves}
 
     def wire_bytes(self, layout, mode):
         chunk_packed = _chunk_elems(layout) // 8
@@ -254,6 +272,10 @@ class IdentityCodec(Codec):
         # matching the pre-refactor quantize=False branch bitwise
         return payload["values"]
 
+    def payload_spec(self, layout):
+        leaves = (("values", jnp.float32),)
+        return {"scatter": leaves, "gather": leaves}
+
     def wire_bytes(self, layout, mode):
         ce = _chunk_elems(layout) * 4          # f32 wire
         return {"scatter": ce, "gather": ce}
@@ -326,6 +348,10 @@ class TopKCodec(_DenseEFCodec):
             jnp.arange(lead)[:, None], idx].set(val.astype(dtype))
         return dense.reshape((lead,) + layout.chunk_shape)
 
+    def payload_spec(self, layout):
+        leaves = (("idx", jnp.int32), ("val", jnp.float32))
+        return {"scatter": leaves, "gather": leaves}
+
     def wire_bytes(self, layout, mode):
         per = self.k_for(layout) * (4 + 4)      # int32 index + f32 value
         return {"scatter": per, "gather": per}
@@ -394,6 +420,11 @@ class QIntCodec(_DenseEFCodec):
             q = q.astype(jnp.float32) - float(self.qmax)
         return (q.astype(dtype) * s.astype(dtype)).reshape(
             (lead,) + layout.chunk_shape)
+
+    def payload_spec(self, layout):
+        qdt = jnp.int8 if self.bits == 8 else jnp.uint8
+        leaves = (("q", qdt), ("scale", jnp.float32))
+        return {"scatter": leaves, "gather": leaves}
 
     def wire_bytes(self, layout, mode):
         ce = _chunk_elems(layout)

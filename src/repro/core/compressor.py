@@ -26,7 +26,6 @@ feedback. ``scale_mode`` controls the granularity of the magnitude:
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -494,7 +493,7 @@ def unpack_signs(p: jnp.ndarray, count: int, dtype=jnp.float32) -> jnp.ndarray:
 def _psum_model(x, model_axes):
     if not model_axes:
         return x
-    return jax.lax.psum(x, model_axes if len(model_axes) > 1
+    return jax.lax.psum(x, model_axes if len(model_axes) > 1  # audit-ok: raw-collective
                         else model_axes[0])
 
 

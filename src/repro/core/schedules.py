@@ -19,9 +19,7 @@ Baseline policies: ``every step`` (original Adam / ablations) and
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
 

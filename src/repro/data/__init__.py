@@ -1,1 +1,4 @@
-from repro.data.synthetic import DataConfig, SyntheticLM, SyntheticClassify, worker_shard
+from repro.data.synthetic import (DataConfig, SyntheticClassify, SyntheticLM,
+                                  worker_shard)
+
+__all__ = ["DataConfig", "SyntheticClassify", "SyntheticLM", "worker_shard"]

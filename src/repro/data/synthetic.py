@@ -10,7 +10,7 @@ needs (each worker slices its own batch shard by index).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -8,3 +8,5 @@ interpret=True against ref.py on CPU; on TPU the same calls compile to
 fused Mosaic kernels.
 """
 from repro.kernels import dispatch, ops, ref
+
+__all__ = ["dispatch", "ops", "ref"]

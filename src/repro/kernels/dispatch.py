@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import functools
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -94,6 +93,48 @@ def kernel_safe(vspec) -> bool:
     if vspec is None or all(e is None for e in tuple(vspec)):
         return True
     return not C.ambient_auto_mesh()
+
+
+# Static VMEM budget per core for the pre-check: the hardware holds ~16
+# MiB; leave headroom for compiler temporaries and double-buffering.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+# Worst-case simultaneous f32 operand blocks of one kernel invocation
+# (fused_local_step: params, u, grad, err in, params/u/err out -> ~6
+# distinct block-shaped refs after input/output aliasing).
+_KERNEL_OPERANDS = 6
+
+
+def frame_precheck(layout: C.LeafLayout, *, block_rows: int = 8,
+                   vmem_budget: int = VMEM_BUDGET_BYTES) -> list:
+    """Static tile-alignment / VMEM audit of one comm layout against the
+    kernels' ``n*128`` frame contract. Returns a list of human-readable
+    issues — empty means every kernel in this module can legally tile the
+    layout's 2-D frame. Pure metadata: nothing is traced or compiled, so
+    the IR-audit CLI can run it over a whole config matrix.
+    """
+    issues = []
+    rows, cols = C.view_rows_cols(layout)
+    if cols % 128:
+        issues.append(
+            f"frame cols={cols} not a multiple of the 128-lane tile "
+            f"(layout shape {layout.shape}, view {layout.view_shape}) — "
+            f"violates the n*128 flatten quantum")
+    if cols % 8:
+        issues.append(
+            f"frame cols={cols} not a multiple of 8: sign-bit packing "
+            f"needs byte-aligned rows")
+    if cols > C.FRAME_MAX_COLS:
+        issues.append(
+            f"frame cols={cols} exceeds FRAME_MAX_COLS={C.FRAME_MAX_COLS} "
+            f"— view_rows_cols should have folded this view")
+    br = _largest_divisor(rows, block_rows) if rows else 0
+    est = _KERNEL_OPERANDS * br * cols * 4
+    if est > vmem_budget:
+        issues.append(
+            f"block ({br}, {cols}) f32 working set ~{est} B exceeds the "
+            f"~{vmem_budget} B VMEM budget ({_KERNEL_OPERANDS} operand "
+            f"blocks)")
+    return issues
 
 
 def _row_group_scales(rowsum, shape, rest_factor, model_axes):

@@ -6,7 +6,6 @@ means no padding), identical to what the kernels receive.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

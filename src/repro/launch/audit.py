@@ -1,0 +1,183 @@
+"""IR-audit CLI: statically verify the lowered train step's communication.
+
+Builds a (sim-mode, device-free) trainer for the requested config, traces
+its per-worker step through ``shard_map`` over an abstract mesh, and runs
+:func:`repro.analysis.audit_trainer` — collective schedule vs the declared
+manifest, payload bytes vs ``codec.wire_bytes``, inter-pod precision, and
+f64/weak-type discipline — plus the static Pallas frame pre-check
+(:func:`repro.kernels.dispatch.frame_precheck`) on every exchange unit.
+
+    python -m repro.launch.audit --config gpt2 --codec sign1bit \
+        --bucket-mb 4 --hierarchy 4 --json report.jsonl
+    python -m repro.launch.audit --matrix --lints   # CI smoke matrix
+
+Exits non-zero and prints the first violation on any failure. Unlike
+``launch.dryrun`` this never compiles (and never forces a host device
+count), so the full matrix runs in seconds on one CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import audit_trainer
+from repro.analysis.lints import run_lints
+from repro.configs import get, list_archs
+from repro.core import schedules as S
+from repro.core.api import REGISTRY_NAMES, OptimizerConfig
+from repro.core.codecs import CODEC_NAMES
+from repro.core.comm import Hierarchy
+from repro.kernels import dispatch as KD
+from repro.train.step import Trainer, TrainerConfig
+
+
+def build_opt_cfg(optimizer: str = "zero_one_adam", scale_mode="tensor",
+                  hierarchy_inner: int = 0, codec: str = "sign1bit",
+                  codec_arg=None, bucket_mb=None) -> OptimizerConfig:
+    """The production-shaped optimizer config the audits run against
+    (mirrors ``launch.dryrun.default_opt_cfg``, which we can't import —
+    dryrun forces a 512-device host platform at import time)."""
+    return OptimizerConfig(
+        name=optimizer,
+        codec=codec, codec_arg=codec_arg, bucket_mb=bucket_mb,
+        lr=S.LinearWarmupExpDecay(peak_lr=4e-4, warmup_steps=12500),
+        var_policy=S.AdaptiveFreezePolicy(kappa=16),
+        sync_policy=S.LrProportionalSyncPolicy(
+            warmup_steps=12500, double_every=32768, max_interval=16),
+        onebit_warmup=16000,
+        scale_mode=scale_mode,
+        hierarchy=(Hierarchy(inner=hierarchy_inner) if hierarchy_inner
+                   else None),
+    )
+
+
+def first_violation(report_dict) -> str:
+    """One-line description of the first violation in an audit report dict
+    (shared with ``launch.dryrun --audit``)."""
+    vs = report_dict.get("violations") or []
+    if not vs:
+        return ""
+    v = vs[0]
+    more = f" (+{len(vs) - 1} more)" if len(vs) > 1 else ""
+    return f"[{v['code']}] {v['message']}{more}"
+
+
+def audit_one(arch: str, *, optimizer="zero_one_adam", codec="sign1bit",
+              codec_arg=None, scale_mode="tensor", bucket_mb=None,
+              hierarchy_inner: int = 0, workers: int = 4,
+              smoke: bool = True):
+    """Run the IR audit + frame pre-check on one config; returns a JSON-able
+    record."""
+    spec = get(arch)
+    cfg = spec.smoke if smoke else spec.config
+    ocfg = build_opt_cfg(optimizer, scale_mode,
+                         hierarchy_inner=hierarchy_inner, codec=codec,
+                         codec_arg=codec_arg, bucket_mb=bucket_mb)
+    tr = Trainer(cfg, ocfg, n_workers=workers,
+                 trainer_cfg=TrainerConfig(micro_batches=1))
+    rep = audit_trainer(tr)
+    rec = rep.to_dict()
+    rec["config"] = {
+        "arch": cfg.name, "optimizer": optimizer, "codec": codec,
+        "codec_arg": codec_arg, "scale_mode": scale_mode,
+        "bucket_mb": bucket_mb, "hierarchy_inner": hierarchy_inner,
+        "workers": workers,
+    }
+    frames = []
+    from repro.core.bucketing import exchange_units
+    for lo, _, label in exchange_units(tr.opt.plan, tr.opt.bucket_plan):
+        for issue in KD.frame_precheck(lo):
+            frames.append(f"{label}: {issue}")
+    rec["frame_issues"] = frames
+    rec["ok"] = rec["ok"] and not frames
+    return rec
+
+
+def _matrix(workers: int):
+    """The CI smoke matrix: flat + hierarchical, per-leaf + bucketed, and
+    every shipped codec, on gpt2-smoke."""
+    for hierarchy_inner in (0, 2):
+        for bucket_mb in (None, 4.0):
+            yield dict(codec="sign1bit", hierarchy_inner=hierarchy_inner,
+                       bucket_mb=bucket_mb, workers=workers)
+    for codec in sorted(set(CODEC_NAMES) - {"sign1bit"}):
+        yield dict(codec=codec, workers=workers)
+    yield dict(optimizer="one_bit_adam", workers=workers)
+    yield dict(optimizer="adam", workers=workers)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Static IR audit of the train step's communication")
+    ap.add_argument("--config", "--arch", dest="arch", default="gpt2",
+                    choices=list_archs())
+    ap.add_argument("--optimizer", default="zero_one_adam",
+                    choices=list(REGISTRY_NAMES))
+    ap.add_argument("--codec", default="sign1bit",
+                    choices=list(CODEC_NAMES))
+    ap.add_argument("--codec-arg", type=float, default=None)
+    ap.add_argument("--scale-mode", default="tensor",
+                    choices=["tensor", "chunk", "row"])
+    ap.add_argument("--bucket-mb", type=float, default=None)
+    ap.add_argument("--hierarchy", type=int, default=0, metavar="INNER",
+                    help="two-level exchange with INNER intra-pod workers "
+                         "(0 = flat)")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--full", action="store_true",
+                    help="audit the full-size config (default: smoke)")
+    ap.add_argument("--matrix", action="store_true",
+                    help="run the CI smoke matrix on --config instead of "
+                         "one configuration")
+    ap.add_argument("--lints", action="store_true",
+                    help="also run the AST repo-invariant lints")
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="emit JSONL records; bare --json prints to stdout")
+    args = ap.parse_args(argv)
+
+    combos = (list(_matrix(args.workers)) if args.matrix
+              else [dict(optimizer=args.optimizer, codec=args.codec,
+                         codec_arg=args.codec_arg,
+                         scale_mode=args.scale_mode,
+                         bucket_mb=args.bucket_mb,
+                         hierarchy_inner=args.hierarchy,
+                         workers=args.workers)])
+    failed = 0
+    for kw in combos:
+        rec = audit_one(args.arch, smoke=not args.full, **kw)
+        c = rec["config"]
+        label = (f"{c['arch']} opt={c['optimizer']} codec={c['codec']} "
+                 f"hier={c['hierarchy_inner']} bucket={c['bucket_mb']}")
+        if rec["ok"]:
+            print(f"audit OK   {label} "
+                  f"({rec['summary']['collectives_traced']} collectives, "
+                  f"{rec['summary']['sync_collectives_declared']} declared "
+                  f"sync)")
+        else:
+            failed += 1
+            msg = first_violation(rec) or "; ".join(rec["frame_issues"][:1])
+            print(f"audit FAIL {label}\n  first violation: {msg}")
+        if args.json == "-":
+            print(json.dumps(rec))
+        elif args.json:
+            with open(args.json, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+    if args.lints:
+        findings = run_lints()
+        for f in findings:
+            print(f)
+        if findings:
+            print(f"lints: {len(findings)} finding(s)")
+            failed += 1
+        else:
+            print("lints: clean")
+
+    print(f"\nAUDIT SUMMARY: {len(combos) - failed}/{len(combos)} configs "
+          f"clean" + (" + lints" if args.lints else ""))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,15 +26,13 @@ import sys
 import time
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.configs import ALL_SHAPES, ASSIGNED, get, list_archs
+from repro.configs import ALL_SHAPES, ASSIGNED, get
 from repro.core import (CODEC_NAMES, OptimizerConfig, REGISTRY_NAMES,
                         schedules as S)
 from repro.launch import shapes as SH
 from repro.launch.mesh import make_production_mesh, worker_axes
-from repro.models import transformer as T
 from repro.serve import Server
 from repro.train import Trainer, TrainerConfig
 
@@ -285,7 +283,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
             micro_override=None, window_cache: bool = False,
             mesh_shape=None, verbose: bool = True,
             hierarchy: bool = False, codec: str = "sign1bit",
-            codec_arg=None, bucket_mb=None):
+            codec_arg=None, bucket_mb=None, audit: bool = False):
     spec = get(arch)
     shape = SH.SHAPES[shape_name]
     if shape_name not in spec.shapes:
@@ -302,7 +300,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
                               compute_dtype=jnp.bfloat16,
                               window_cache=window_cache)
     t0 = time.time()
-    n_buckets = n_dp_leaves = None
+    n_buckets = n_dp_leaves = audit_rec = None
 
     if shape.kind == "train":
         n_workers = 1
@@ -326,6 +324,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
                      if getattr(tr.opt, "bucket_plan", None) is not None
                      else None)
         n_dp_leaves = sum(1 for dp in tr.opt.dp_mask if dp)
+        if audit:
+            from repro.analysis import audit_trainer
+            audit_rec = audit_trainer(tr, seq=shape.seq).to_dict()
         fn, _ = tr.mesh_step_fn()
         params, state, batch = tr.abstract_inputs(
             shape.global_batch, shape.seq,
@@ -373,6 +374,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
         "bucket_mb": bucket_mb if shape.kind == "train" else None,
         "n_buckets": n_buckets,
         "n_dp_leaves": n_dp_leaves,
+        "audit": audit_rec,
         "micro": micro_override, "window_cache": window_cache,
         "kind": shape.kind,
         "flops_per_device": float(cost.get("flops", 0.0)),
@@ -441,6 +443,10 @@ def main():
                     help="DPxTP override, e.g. 32x8 (perf iterations)")
     ap.add_argument("--json", default=None,
                     help="append JSONL records here")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the IR communication audit on train shapes; "
+                         "any violation fails the run (non-zero exit) and "
+                         "prints the first offending collective")
     args = ap.parse_args()
 
     combos = []
@@ -464,12 +470,19 @@ def main():
                           window_cache=args.window_cache,
                           mesh_shape=ms, hierarchy=args.hierarchy,
                           codec=args.codec, codec_arg=args.codec_arg,
-                          bucket_mb=args.bucket_mb)
+                          bucket_mb=args.bucket_mb, audit=args.audit)
         except Exception as e:  # noqa: BLE001 — report, keep going
             rec = {"arch": a, "shape": s,
                    "mesh": "2x16x16" if mp else "16x16",
                    "status": "failed", "error": f"{type(e).__name__}: {e}"}
             print(f"== {a} x {s} FAILED: {rec['error'][:500]}")
+        if rec["status"] == "ok" and rec.get("audit") \
+                and not rec["audit"]["ok"]:
+            # audit violations fail the run loudly, not just in the JSON
+            from repro.launch.audit import first_violation
+            rec["status"] = "audit-failed"
+            print(f"== {a} x {s} AUDIT FAILED: "
+                  f"{first_violation(rec['audit'])}")
         if rec["status"] == "ok":
             ok += 1
         elif rec["status"] == "skipped":

@@ -14,7 +14,6 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax

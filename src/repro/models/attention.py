@@ -8,8 +8,6 @@ divide the TP degree (see layers.model_dim_spec).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

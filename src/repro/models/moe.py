@@ -18,7 +18,6 @@ same code runs with the a2a skipped — one code path everywhere.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ token positions:
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -10,7 +10,6 @@ Conv state: last K-1 raw channel inputs for each of the x/B/C streams.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -15,8 +15,6 @@ dense-prefix layers are a separate unstacked prefix).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,8 +24,8 @@ from repro.models import moe as MOE
 from repro.models import rope as R
 from repro.models import ssm as SSM
 from repro.models.config import ModelConfig
-from repro.models.layers import (PD, apply_mlp, apply_norm, init_params,
-                                 maybe_shard, mlp_template, model_dim_spec,
+from repro.models.layers import (PD, apply_mlp, apply_norm, maybe_shard,
+                                 mlp_template, model_dim_spec,
                                  norm_template, stack_template)
 
 

@@ -1,1 +1,3 @@
 from repro.serve.engine import Server
+
+__all__ = ["Server"]

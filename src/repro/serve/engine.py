@@ -15,7 +15,7 @@ SSM/hybrid states shard their head axis over 'model'.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +25,7 @@ from repro.core import compat
 from repro.core.comm import NullComm, mesh_comm
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.models.layers import is_pd, param_specs
+from repro.models.layers import is_pd
 
 
 def _div(n, k):

@@ -1,1 +1,3 @@
 from repro.train.step import Trainer, TrainerConfig
+
+__all__ = ["Trainer", "TrainerConfig"]

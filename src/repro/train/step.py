@@ -18,7 +18,6 @@ split across workers on their expert axis (see train/sharding.py).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -31,8 +30,8 @@ from repro.core.comm import (Comm, NullComm, mesh_comm, norm_hierarchy,
                              sim_comm)
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.models.layers import (abstract_params, dp_mask as tmpl_dp_mask,
-                                 init_params, is_pd, param_specs)
+from repro.models.layers import (dp_mask as tmpl_dp_mask, init_params,
+                                 is_pd, param_specs)
 from repro.train.sharding import TreeSpecs
 
 
@@ -216,7 +215,7 @@ class Trainer:
                 out.append(g)
                 continue
             if res and not isinstance(comm, NullComm) and comm.axes:
-                g = jax.lax.pmean(g, res if len(res) > 1 else res[0])
+                g = jax.lax.pmean(g, res if len(res) > 1 else res[0])  # audit-ok: raw-collective
             out.append(g / self.ep_degree)
         return jax.tree.unflatten(self.treedef, out)
 

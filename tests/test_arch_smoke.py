@@ -13,7 +13,7 @@ import pytest
 from repro.configs import ASSIGNED, get, list_archs
 from repro.core import OptimizerConfig, schedules as S
 from repro.models import transformer as T
-from repro.train import Trainer, TrainerConfig
+from repro.train import Trainer
 
 OPT = OptimizerConfig(
     name="zero_one_adam", lr=S.ConstantLr(1e-3),

@@ -11,8 +11,7 @@ import pytest
 
 from repro.checkpointing import io as ckpt_io
 from repro.configs import get
-from repro.core import (OptimizerConfig, build_optimizer, sim_comm,
-                        schedules as S)
+from repro.core import OptimizerConfig, sim_comm, schedules as S
 from repro.core.zero_one_adam import ZeroOneAdam
 from repro.data import DataConfig, SyntheticLM
 from repro.train import Trainer

@@ -6,7 +6,6 @@ the deterministic layout tests — the property test degrades to a fixed-seed
 parametrized sweep when hypothesis is absent, so the suite collects and
 keeps its coverage either way.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,0 +1,225 @@
+"""IR communication audit: clean passes across the shipped config matrix,
+and guaranteed detection of seeded violations (smuggled inter-pod psum,
+reordered schedule, codec payload-dtype lie) with errors naming the
+offending collective/bucket/dtype."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (audit_trainer, build_manifests, check_schedule,
+                            concretize_manifest, trace_collectives)
+from repro.configs import get
+from repro.core import codecs as CD
+from repro.core.api import OptimizerConfig
+from repro.core.bucketing import (exchange_units, expected_fullprec_schedule,
+                                  expected_sync_schedule)
+from repro.core.comm import Hierarchy
+from repro.kernels.dispatch import frame_precheck
+from repro.train.step import Trainer, TrainerConfig
+
+
+def _trainer(codec="sign1bit", hierarchy_inner=0, bucket_mb=None,
+             optimizer="zero_one_adam", workers=4, **kw):
+    ocfg = OptimizerConfig(
+        name=optimizer, codec=codec, bucket_mb=bucket_mb,
+        hierarchy=Hierarchy(inner=hierarchy_inner) if hierarchy_inner
+        else None, **kw)
+    return Trainer(get("gpt2").smoke, ocfg, n_workers=workers,
+                   trainer_cfg=TrainerConfig(micro_batches=1))
+
+
+# ------------------------------------------------------------------ #
+# clean passes: the ISSUE's acceptance matrix
+# ------------------------------------------------------------------ #
+
+@pytest.mark.parametrize("codec", ["sign1bit", "qint8", "identity"])
+@pytest.mark.parametrize("hierarchy_inner", [0, 2])
+@pytest.mark.parametrize("bucket_mb", [None, 4.0])
+def test_clean_matrix(codec, hierarchy_inner, bucket_mb):
+    rep = audit_trainer(_trainer(codec=codec,
+                                 hierarchy_inner=hierarchy_inner,
+                                 bucket_mb=bucket_mb))
+    assert rep.ok, [str(v.message) for v in rep.violations[:3]]
+    assert rep.summary["sync_collectives_declared"] > 0
+    if hierarchy_inner:
+        assert rep.summary["interpod_sync_bytes"] > 0
+
+
+@pytest.mark.parametrize("codec", ["topk", "qint4"])
+def test_clean_remaining_codecs(codec):
+    rep = audit_trainer(_trainer(codec=codec))
+    assert rep.ok, [str(v.message) for v in rep.violations[:3]]
+
+
+@pytest.mark.parametrize("optimizer", ["one_bit_adam", "adam"])
+def test_clean_other_styles(optimizer):
+    rep = audit_trainer(_trainer(optimizer=optimizer))
+    assert rep.ok, [str(v.message) for v in rep.violations[:3]]
+    if optimizer == "adam":   # mean style: full-precision only, no sync
+        assert rep.summary["sync_collectives_declared"] == 0
+        assert rep.summary["fullprec_collectives_declared"] > 0
+
+
+# ------------------------------------------------------------------ #
+# seeded violations — each must be caught, naming the offender
+# ------------------------------------------------------------------ #
+
+def test_smuggled_interpod_psum_is_caught():
+    tr = _trainer(hierarchy_inner=2)
+
+    def wrap(one):
+        def evil(params, state, batch):
+            leak = jax.lax.psum(jnp.zeros((1024,), jnp.float32), "pod")
+            p, s, met = one(params, state, batch)
+            met = dict(met)
+            met["leak"] = leak.sum()
+            return p, s, met
+        return evil
+
+    rep = audit_trainer(tr, wrap_step=wrap)
+    assert not rep.ok
+    codes = [v.code for v in rep.violations]
+    assert "interpod-bytes" in codes, codes
+    msg = next(v.message for v in rep.violations
+               if v.code == "interpod-bytes")
+    # names the op, the axes it crossed, the dtype, and the eqn position
+    assert "psum" in msg and "pod" in msg and "float32" in msg
+    assert "eqn #" in msg
+
+
+def test_reordered_schedule_is_caught():
+    tr = _trainer(hierarchy_inner=2)
+    trace = trace_collectives(tr)
+    sync_m, fp_m = build_manifests(tr.opt)
+    sync_c = concretize_manifest(sync_m, tr)
+    fp_c = concretize_manifest(fp_m, tr)
+    # control: the unmodified manifests match
+    assert check_schedule(trace, sync_c, fp_c, tr) == []
+    bad = list(sync_c)
+    bad[2], bad[3] = bad[3], bad[2]
+    vs = check_schedule(trace, bad, fp_c, tr)
+    assert vs and vs[0].code == "schedule"
+    # names the position, the expected entry's unit/leaf, and the found eqn
+    assert "position 2" in vs[0].message
+    assert "leaf[0]" in vs[0].message or "bucket[0]" in vs[0].message
+    assert "eqn #" in vs[0].message
+
+
+def test_payload_dtype_lie_is_caught():
+    class LyingSign1Bit(CD.Sign1BitCodec):
+        def payload_spec(self, layout):
+            leaves = (("packed", jnp.uint8), ("scales", jnp.float16))
+            return {"scatter": leaves, "gather": leaves}
+
+    rep = audit_trainer(_trainer(codec=LyingSign1Bit()))
+    assert not rep.ok
+    assert any(v.code == "payload-dtype" for v in rep.violations)
+    msg = next(v.message for v in rep.violations
+               if v.code == "payload-dtype")
+    # names the declared vs lowered dtype and the payload leaf
+    assert "float16" in msg and "float32" in msg and "scales" in msg
+
+
+# ------------------------------------------------------------------ #
+# declared-manifest internals
+# ------------------------------------------------------------------ #
+
+def test_payload_spec_matches_wire_bytes():
+    """Every shipped codec's declared payload dtypes reproduce its
+    wire_bytes accounting on a real layout (per-chunk scale broadcast
+    degeneracies aside)."""
+    tr = _trainer()
+    plan, ar_cfg = tr.opt.plan, tr.opt.ar_cfg
+    sched = expected_sync_schedule(plan, ar_cfg, tr.opt.bucket_plan)
+    for u, (lo, _, label) in enumerate(exchange_units(plan,
+                                                      tr.opt.bucket_plan)):
+        wire = ar_cfg.codec.wire_bytes(lo, ar_cfg.scale_mode)
+        for phase, lead in (("scatter", lo.n), ("gather", 1)):
+            got = sum(e.nbytes for e in sched
+                      if e.unit == u and e.phase == phase)
+            assert abs(got - lead * wire[phase]) <= 4 * lead, (
+                label, phase, got, lead * wire[phase])
+
+
+def test_mean_style_has_no_sync_manifest():
+    tr = _trainer(optimizer="adam")
+    sync, fullprec = build_manifests(tr.opt)
+    assert sync == []
+    assert len(fullprec) > 0
+    assert all(e.round == "fullprec" for e in fullprec)
+
+
+def test_fullprec_schedule_counts():
+    tr = _trainer(hierarchy_inner=2)
+    fp = expected_fullprec_schedule(tr.opt.plan, tr.opt.ar_cfg,
+                                    tr.opt.bucket_plan)
+    units = exchange_units(tr.opt.plan, tr.opt.bucket_plan)
+    # hierarchical: 4 collectives per unit (iRS, oA2A, oAG, iAG)
+    assert len(fp) == 4 * len(units)
+
+
+# ------------------------------------------------------------------ #
+# static Pallas frame pre-check
+# ------------------------------------------------------------------ #
+
+def test_frame_precheck_clean_on_shipped_layouts():
+    for bucket_mb in (None, 4.0):
+        tr = _trainer(bucket_mb=bucket_mb)
+        for lo, _, label in exchange_units(tr.opt.plan, tr.opt.bucket_plan):
+            assert frame_precheck(lo) == [], label
+
+
+def test_frame_precheck_flags_bad_frames():
+    from repro.core import compressor as C
+    # flatten layouts pad to the n*128 quantum -> always clean
+    assert frame_precheck(C.make_layout((4096,), None, 4)) == []
+    # structured (non-flatten) view with a 96-wide last axis: breaks the
+    # 128-lane tile
+    lo = C.LeafLayout(shape=(8, 96), n=4, flatten=False, split_axis=0,
+                      padded=8, view_shape=(4, 2, 96))
+    issues = frame_precheck(lo)
+    assert any("128" in i for i in issues), issues
+    # enormous unfolded cols: blows both FRAME_MAX_COLS and the VMEM budget
+    wide = C.LeafLayout(shape=(8, 128 * 8192), n=4, flatten=False,
+                        split_axis=0, padded=8,
+                        view_shape=(4, 2, 128 * 8192))
+    issues = frame_precheck(wide)
+    assert any("VMEM" in i for i in issues), issues
+    assert any("FRAME_MAX_COLS" in i for i in issues), issues
+
+
+# ------------------------------------------------------------------ #
+# CLI plumbing
+# ------------------------------------------------------------------ #
+
+def test_audit_cli_exit_codes(capsys):
+    from repro.launch.audit import main
+    assert main(["--config", "gpt2", "--workers", "2"]) == 0
+    out = capsys.readouterr().out
+    assert "audit OK" in out
+
+
+def test_dryrun_audit_fails_loudly(monkeypatch, capsys):
+    """--audit must exit non-zero and print the first violation, not just
+    write JSON (run_one stubbed: the real mesh lowering is the slow-marked
+    dry-run test's job)."""
+    import sys
+
+    import repro.launch.dryrun as DR
+
+    rec = {"arch": "gpt2", "shape": "train_4k", "status": "ok",
+           "audit": {"ok": False, "violations": [
+               {"code": "interpod-bytes",
+                "message": "psum over ('pod',) float32(1024,)"}]}}
+    monkeypatch.setattr(DR, "run_one", lambda *a, **k: dict(rec))
+    monkeypatch.setattr(sys, "argv", ["dryrun", "--arch", "gpt2",
+                                      "--shape", "train_4k", "--audit"])
+    assert DR.main() == 1
+    out = capsys.readouterr().out
+    assert "AUDIT FAILED" in out
+    assert "interpod-bytes" in out and "float32" in out
+
+    ok = {"arch": "gpt2", "shape": "train_4k", "status": "ok",
+          "audit": {"ok": True, "violations": []}}
+    monkeypatch.setattr(DR, "run_one", lambda *a, **k: dict(ok))
+    assert DR.main() == 0

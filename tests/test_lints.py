@@ -1,0 +1,92 @@
+"""AST repo-invariant lints: the repo itself is clean, and each rule
+fires on a seeded offending file (including the waiver escape hatch)."""
+import textwrap
+
+from repro.analysis.lints import run_lints
+
+
+def test_repo_is_clean():
+    findings = run_lints()
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def _lint_snippet(tmp_path, code, name="offender.py"):
+    f = tmp_path / name
+    f.write_text(textwrap.dedent(code))
+    return run_lints([str(f)])
+
+
+def test_raw_collective_rule(tmp_path):
+    findings = _lint_snippet(tmp_path, """
+        import jax
+
+        def bad(x):
+            return jax.lax.psum(x, "data")
+    """)
+    assert [f.rule for f in findings] == ["raw-collective"]
+    assert "psum" in findings[0].message
+
+
+def test_raw_collective_waiver(tmp_path):
+    findings = _lint_snippet(tmp_path, """
+        import jax
+
+        def ok(x):
+            return jax.lax.psum(x, "data")  # audit-ok: raw-collective
+    """)
+    assert findings == []
+
+
+def test_raw_collective_allowed_in_comm(tmp_path):
+    comm_dir = tmp_path / "core"
+    comm_dir.mkdir()
+    f = comm_dir / "comm.py"
+    f.write_text("import jax\n\ndef psum(x):\n"
+                 "    return jax.lax.psum(x, 'data')\n")
+    assert run_lints([str(f)]) == []
+
+
+def test_comm_view_reshape_rule(tmp_path):
+    findings = _lint_snippet(tmp_path, """
+        def bad(x, layout):
+            return x.reshape(layout.view_shape)
+    """)
+    assert [f.rule for f in findings] == ["comm-view-reshape"]
+    assert "view_shape" in findings[0].message
+
+
+def test_statekind_registry_rule(tmp_path):
+    findings = _lint_snippet(tmp_path, """
+        from repro.core.compressed import StateKind
+
+        def bad():
+            return StateKind(tag="dp", leaf=0)
+    """)
+    assert [f.rule for f in findings] == ["statekind-registry"]
+
+
+def test_float64_literal_rule(tmp_path):
+    findings = _lint_snippet(tmp_path, """
+        import jax.numpy as jnp
+
+        def bad(x):
+            return x.astype(jnp.float64)
+    """)
+    assert [f.rule for f in findings] == ["float64-literal"]
+    # host-side numpy f64 (counting helpers) is allowed
+    assert _lint_snippet(tmp_path, """
+        import numpy as np
+
+        def ok(x):
+            return x.astype(np.float64)
+    """, name="ok64.py") == []
+
+
+def test_cli_exit_codes(tmp_path):
+    from repro.analysis.lints import main
+    f = tmp_path / "bad.py"
+    f.write_text("import jax\nx = jax.lax.pmean(0.0, 'data')\n")
+    assert main([str(f)]) == 1
+    g = tmp_path / "good.py"
+    g.write_text("x = 1\n")
+    assert main([str(g)]) == 0

@@ -5,9 +5,7 @@ checkpoint roundtrip, data determinism.
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpointing import io as ckpt_io
 from repro.configs import get
