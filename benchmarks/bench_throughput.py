@@ -60,12 +60,23 @@ def avg_step_time(arch, optimizer, n_gpus, bw, alpha, compute_ms,
 
 def bucket_latency_sweep(arch="bert-large", workers=16,
                          bucket_mbs=(None, 4.0, 32.0)):
-    """Exchange-unit counts and the modeled per-sync dispatch-latency
-    floor per bucket budget, from the real comm layouts."""
+    """Exchange-unit counts, the modeled per-sync dispatch-latency floor,
+    and the modeled Ethernet step-time breakdown per bucket budget, from
+    the real comm layouts.
+
+    Step-time fields (all deterministic, guarded by check_bench):
+    ``sync_comm_ms`` is the full exchange wire time (volume/bandwidth +
+    collectives x alpha); ``step_ms_sequential`` runs it after the
+    backward; ``step_ms_overlapped`` hides it inside the backward window
+    (``hw.BACKWARD_FRACTION`` of the paper's measured compute), leaving
+    only ``exposed_comm_ms_overlapped`` on the critical path — the number
+    the readiness-ordered per-unit issue targets."""
     cfg = get(arch).config
     tmpl = T.model_template(cfg)
     shapes = abstract_params(tmpl)
     specs = param_specs(tmpl)
+    compute_ms = hw.PAPER_COMPUTE_MS.get(arch, {}).get(workers, 0.0)
+    overlap_ms = hw.BACKWARD_FRACTION * compute_ms
     records = []
     for mb in bucket_mbs:
         ocfg = OptimizerConfig(name="zero_one_adam", bucket_mb=mb)
@@ -73,6 +84,9 @@ def bucket_latency_sweep(arch="bert-large", workers=16,
         acct = comm_accounting(opt)
         colls = acct["collectives_per_sync"]
         latency_floor_ms = colls * hw.ETHERNET_LATENCY * 1e3
+        sync_comm_ms = (acct["compressed_bytes_per_sync"] / hw.ETHERNET_BW
+                        * 1e3 + latency_floor_ms)
+        exposed_ms = max(0.0, sync_comm_ms - overlap_ms)
         records.append({
             "bench": "throughput_buckets", "arch": arch,
             "workers": workers, "bucket_mb": mb,
@@ -82,6 +96,10 @@ def bucket_latency_sweep(arch="bert-large", workers=16,
             "sync_latency_floor_ms": latency_floor_ms,
             "syncs_per_s_latency_bound": 1e3 / max(latency_floor_ms,
                                                    1e-9),
+            "sync_comm_ms": sync_comm_ms,
+            "step_ms_sequential": compute_ms + sync_comm_ms,
+            "step_ms_overlapped": compute_ms + exposed_ms,
+            "exposed_comm_ms_overlapped": exposed_ms,
         })
     return records
 
@@ -136,15 +154,19 @@ def main(argv=None):
     # dispatch-latency (fixed-cost) floor per bucket budget
     sweep = bucket_latency_sweep(bucket_mbs=[None] + list(args.bucket_mb))
     records.extend(sweep)
-    print("# Bucketed-exchange dispatch floor — bert-large, 16 workers, "
-          "Ethernet alpha")
+    print("# Bucketed-exchange dispatch floor + modeled step-time "
+          "breakdown — bert-large, 16 workers, Ethernet")
     print("bucket_mb,dp_leaves,exchange_units,collectives_per_sync,"
-          "sync_latency_floor_ms")
+          "sync_latency_floor_ms,sync_comm_ms,step_ms_sequential,"
+          "step_ms_overlapped,exposed_comm_ms_overlapped")
     for r in sweep:
         mb = "per-leaf" if r["bucket_mb"] is None else r["bucket_mb"]
         print(f"{mb},{r['dp_leaves']},{r['exchange_units']},"
               f"{r['collectives_per_sync']},"
-              f"{r['sync_latency_floor_ms']:.2f}")
+              f"{r['sync_latency_floor_ms']:.2f},"
+              f"{r['sync_comm_ms']:.1f},{r['step_ms_sequential']:.1f},"
+              f"{r['step_ms_overlapped']:.1f},"
+              f"{r['exposed_comm_ms_overlapped']:.1f}")
     rows.append(("bucket_dispatch_floor", 0.0,
                  f"per_leaf={sweep[0]['collectives_per_sync']};"
                  f"best={min(r['collectives_per_sync'] for r in sweep)}"))

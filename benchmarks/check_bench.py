@@ -3,11 +3,13 @@
 Re-derives the *cheap, deterministic* half of the committed
 ``BENCH_fixed_cost.json`` / ``BENCH_throughput.json`` records — the
 structural comm accounting (DP leaves, exchange units, collectives per
-sync, bits per param) and the modeled latency floors — and diffs them
-against the snapshots. Structural integer fields must match exactly;
-modeled floats within ``--rtol``. Measured wall-clock fields
-(``syncs_per_s``) and the slow Fig.3 grid (``throughput_model`` records,
-which need full convergence sims) are not re-run and not compared.
+sync, bits per param) and the modeled latency/step-time/exposed-comm
+breakdown — and diffs them against the snapshots. Structural integer
+fields must match exactly; modeled floats within ``--rtol``. Measured
+wall-clock fields (``syncs_per_s``, ``step_ms``, and the
+measured-derived ``exposed_comm_ms_overlapped`` of the fixed-cost sweep)
+and the slow Fig.3 grid (``throughput_model`` records, which need full
+convergence sims) are not re-run and not compared.
 
     PYTHONPATH=src python -m benchmarks.check_bench
 
@@ -23,8 +25,11 @@ import sys
 from pathlib import Path
 
 STRUCTURAL = ("dp_leaves", "exchange_units", "collectives_per_sync")
-MODELED = {"fixed_cost_buckets": ("bits_per_param_sync",),
-           "throughput_buckets": ("sync_latency_floor_ms",)}
+MODELED = {"fixed_cost_buckets": ("bits_per_param_sync", "sync_comm_ms"),
+           "throughput_buckets": ("sync_latency_floor_ms",
+                                  "sync_comm_ms", "step_ms_sequential",
+                                  "step_ms_overlapped",
+                                  "exposed_comm_ms_overlapped")}
 
 
 def _load(path):
@@ -38,6 +43,7 @@ def _load(path):
 def _fresh_fixed_cost(snapshot):
     """Structural accounting for each snapshot point, without the timed
     training loop of bench_fixed_cost.bucket_sweep."""
+    from benchmarks import hw
     from repro.configs import get
     from repro.core import OptimizerConfig, build_optimizer, comm_accounting
     from repro.core import schedules as S
@@ -63,6 +69,10 @@ def _fresh_fixed_cost(snapshot):
             "exchange_units": int(acct["exchange_units"]),
             "collectives_per_sync": int(acct["collectives_per_sync"]),
             "bits_per_param_sync": acct["bits_per_param_sync"],
+            "sync_comm_ms": (acct["compressed_bytes_per_sync"]
+                             / hw.ETHERNET_BW
+                             + acct["collectives_per_sync"]
+                             * hw.ETHERNET_LATENCY) * 1e3,
         }
     return out
 

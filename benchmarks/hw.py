@@ -15,6 +15,14 @@ INFINIBAND_BW = 100e9 / 8 * 0.9  # ~100 Gb/s EDR, 90% efficiency
 ETHERNET_LATENCY = 50e-6         # per collective round (alpha)
 INFINIBAND_LATENCY = 5e-6
 
+# Fraction of a step's compute that is backward pass — the window the
+# readiness-ordered (reverse_backward) bucket issue can hide exchange
+# traffic behind: a unit's collectives launch as soon as its member
+# leaves' accumulated gradients are final, while the rest of the last
+# microbatch's backward is still running. ~2 matmuls backward per 1
+# forward for transformer blocks.
+BACKWARD_FRACTION = 2.0 / 3.0
+
 # paper Table 3: measured per-step compute (ms) on V100s, by cluster size
 PAPER_COMPUTE_MS = {
     # task: {gpus: ms}

@@ -216,7 +216,7 @@ def trace_collectives(trainer, *, seq: int = 16,
     dtype bookkeeping. ``wrap_step`` (tests) wraps the per-worker fn to
     seed violations."""
     axes, sizes = worker_axes_sizes(trainer)
-    b = batch_per_worker or max(1, trainer.tc.micro_batches)
+    b = batch_per_worker or trainer.tc.micro_batches
     if b % trainer.tc.micro_batches:
         raise ValueError(f"batch_per_worker={b} must be divisible by "
                          f"micro_batches={trainer.tc.micro_batches}")
@@ -272,13 +272,14 @@ def build_manifests(opt) -> Tuple[List[BK.ExpectedCollective],
     the accumulate style only builds the T_v branch when the base tracks a
     variance; the gradient style traces both branches of its cond."""
     cfg = opt.cfg
+    pack_order = getattr(cfg, "pack_order", "flat")
     sync = ([] if cfg.style == "mean"
             else BK.expected_sync_schedule(opt.plan, opt.ar_cfg,
-                                           opt.bucket_plan))
+                                           opt.bucket_plan, pack_order))
     has_fp = (cfg.style == "mean" or cfg.style == "gradient"
               or (cfg.style == "accumulate" and opt.base.has_variance))
     fullprec = (BK.expected_fullprec_schedule(opt.plan, opt.ar_cfg,
-                                              opt.bucket_plan)
+                                              opt.bucket_plan, pack_order)
                 if has_fp else [])
     return sync, fullprec
 
@@ -354,14 +355,26 @@ def _allowance(c: TracedCollective, trainer) -> Optional[str]:
     return None
 
 
-def _match_region(seq: List[TracedCollective],
-                  manifest: List[ConcreteCollective]
-                  ) -> Optional[Tuple[str, bool]]:
-    """None if ``seq`` equals ``manifest`` exactly; else ``(message,
-    dtype_only)`` locating the first divergence, ``dtype_only`` True when
-    the operand dtype is the sole mismatch (a codec payload-dtype lie
-    rather than a reordered/extra collective)."""
-    for k, (got, exp) in enumerate(zip(seq, manifest)):
+def _entry_eq(got: TracedCollective, exp: ConcreteCollective) -> bool:
+    return (got.op == exp.op and tuple(got.axes) == tuple(exp.axes)
+            and got.dtype == exp.dtype
+            and tuple(got.shape) == tuple(exp.shape))
+
+
+def _match_prefix(seq: List[TracedCollective],
+                  rest: List[ConcreteCollective]
+                  ) -> Optional[Tuple[int, str, bool]]:
+    """None if ``seq`` equals the next ``len(seq)`` entries of ``rest``;
+    else ``(prefix_len, message, dtype_only)`` locating the first
+    divergence, ``dtype_only`` True when the operand dtype is the sole
+    mismatch (a codec payload-dtype lie rather than a reordered/extra
+    collective)."""
+    for k, got in enumerate(seq):
+        if k >= len(rest):
+            return (k, f"{len(seq)} collectives but only {k} left in the "
+                       f"declared schedule; first extra: {got.describe()}",
+                    False)
+        exp = rest[k]
         problems = []
         if got.op != exp.op:
             problems.append(f"op {got.op} != {exp.op}")
@@ -374,16 +387,9 @@ def _match_region(seq: List[TracedCollective],
         if problems:
             dtype_only = (len(problems) == 1
                           and problems[0].startswith("dtype"))
-            return (f"position {k}: expected {exp.describe()}, found "
-                    f"{got.describe()} ({'; '.join(problems)})", dtype_only)
-    if len(seq) != len(manifest):
-        if len(seq) > len(manifest):
-            extra = seq[len(manifest)]
-            return (f"{len(seq)} collectives but {len(manifest)} declared; "
-                    f"first extra: {extra.describe()}", False)
-        missing = manifest[len(seq)]
-        return (f"{len(seq)} collectives but {len(manifest)} declared; "
-                f"first missing: {missing.describe()}", False)
+            return (k, f"position {k}: expected {exp.describe()}, found "
+                       f"{got.describe()} ({'; '.join(problems)})",
+                    dtype_only)
     return None
 
 
@@ -395,10 +401,21 @@ def _dtype_bits(dtype: str) -> int:
 def check_schedule(trace: Trace, sync: List[ConcreteCollective],
                    fullprec: List[ConcreteCollective],
                    trainer) -> List[Violation]:
-    """Match each control-flow region's collectives against the declared
-    manifests. Exactly one region must carry each non-empty manifest; any
-    other payload-sized collective is a violation — with a dedicated code
-    when it crosses the inter-pod axes at full precision."""
+    """Match the control-flow regions' collectives against the declared
+    manifests, in issue order.
+
+    The per-unit exchange forks one cond region per unit, so each
+    manifest is no longer carried by a single region: the regions, taken
+    in trace order, must consume the sync and fullprec manifests as
+    ordered contiguous prefixes — every payload region is one unit's sync
+    block, one unit's fullprec block, or (mean style) a run of fullprec
+    units, and both manifests must be fully consumed. Matching uses
+    backtracking over (region, sync position, fullprec position): with
+    byte-identical sync and fullprec blocks (identity codec), a greedy
+    sync-first choice could mis-claim a fullprec region and cascade into
+    false violations. Any other payload-sized collective is a violation —
+    with a dedicated code when it crosses the inter-pod axes at full
+    precision."""
     out: List[Violation] = []
     regions: Dict[str, List[TracedCollective]] = {}
     for c in trace.collectives:
@@ -408,7 +425,6 @@ def check_schedule(trace: Trace, sync: List[ConcreteCollective],
 
     h = trainer.hierarchy
     outer = set(h.outer_axes) if h is not None else set()
-    claimed = {"sync": False, "fullprec": False}
 
     def flag_undeclared(c: TracedCollective, context: str):
         if outer and (set(c.axes) & outer) \
@@ -425,66 +441,94 @@ def check_schedule(trace: Trace, sync: List[ConcreteCollective],
                 f"collective not in any declared schedule: "
                 f"{c.describe()} ({context})"))
 
-    for region, seq in sorted(regions.items()):
+    # Payload sequences per region, in trace (= issue) order. Manifests
+    # contain only all_to_all / all_gather — any other payload-sized op is
+    # undeclared by construction (the smuggled-psum case) and must not
+    # poison the sequence match.
+    ordered: List[Tuple[str, List[TracedCollective]]] = []
+    for region, seq in regions.items():
         payload = [c for c in seq if _allowance(c, trainer) is None]
-        # manifests contain only all_to_all / all_gather — any other
-        # payload-sized op is undeclared by construction (the smuggled-psum
-        # case) and must not poison the sequence match
         for c in payload:
             if c.op not in ("all_to_all", "all_gather"):
                 flag_undeclared(c, f"region {region}")
         payload = [c for c in payload
                    if c.op in ("all_to_all", "all_gather")]
-        if not payload:
+        if payload:
+            ordered.append((region, payload))
+    ordered.sort(key=lambda rp: rp[1][0].order)
+
+    # --- backtracking assignment -------------------------------------
+    seqs = [p for _, p in ordered]
+    memo: Dict[Tuple[int, int, int], bool] = {}
+
+    def assign(ri: int, s: int, f: int) -> bool:
+        if ri == len(seqs):
+            return s == len(sync) and f == len(fullprec)
+        key = (ri, s, f)
+        if key in memo:
+            return memo[key]
+        seq = seqs[ri]
+        k = len(seq)
+        ok = False
+        if (s + k <= len(sync)
+                and all(_entry_eq(c, e)
+                        for c, e in zip(seq, sync[s:s + k]))):
+            ok = assign(ri + 1, s + k, f)
+        if (not ok and f + k <= len(fullprec)
+                and all(_entry_eq(c, e)
+                        for c, e in zip(seq, fullprec[f:f + k]))):
+            ok = assign(ri + 1, s, f + k)
+        memo[key] = ok
+        return ok
+
+    if assign(0, 0, 0):
+        return out
+
+    # --- diagnostics: greedy replay locating the first divergence -----
+    s = f = 0
+    diagnosed = False
+    for region, payload in ordered:
+        k = len(payload)
+        res_s = (_match_prefix(payload, sync[s:])
+                 if sync else (0, "no sync schedule declared", False))
+        res_f = (_match_prefix(payload, fullprec[f:])
+                 if fullprec else (0, "no fullprec schedule declared",
+                                   False))
+        if res_s is None:
+            s += k
             continue
-        candidates = []
-        if sync and not claimed["sync"]:
-            candidates.append(("sync", sync))
-        if fullprec and not claimed["fullprec"]:
-            candidates.append(("fullprec", fullprec))
-        mismatches = []
-        matched = False
-        for name, manifest in candidates:
-            res = _match_region(payload, manifest)
-            if res is None:
-                claimed[name] = True
-                matched = True
-                break
-            mismatches.append((name, manifest) + res)
-        if matched:
+        if res_f is None:
+            f += k
             continue
-        if not candidates:
+        if not sync and not fullprec:
             for c in payload:
                 flag_undeclared(c, f"region {region}")
             continue
-        # report against the closest manifest (longest matching prefix)
-        def prefix_len(manifest):
-            n = 0
-            for got, exp in zip(payload, manifest):
-                if (got.op, tuple(got.axes), got.dtype,
-                        tuple(got.shape)) != (exp.op, tuple(exp.axes),
-                                              exp.dtype, tuple(exp.shape)):
-                    break
-                n += 1
-            return n
-        name, manifest, msg, dtype_only = max(
-            mismatches, key=lambda t: prefix_len(t[1]))
+        # report against the closest manifest (longest matching prefix);
         # a dtype-only divergence gets its own code so the seeded codec
         # fixture is distinguishable from a reordering
+        (plen, msg, dtype_only), name = max(
+            ((res_s, "sync"), (res_f, "fullprec")),
+            key=lambda t: t[0][0])
         out.append(Violation(
             "payload-dtype" if dtype_only else "schedule",
             f"region {region} does not match the declared {name} "
             f"schedule: {msg}"))
-    for name, manifest in (("sync", sync), ("fullprec", fullprec)):
-        if manifest and not claimed[name]:
-            # only report if not already explained by a schedule mismatch
-            if not any(v.code in ("schedule", "payload-dtype")
-                       for v in out):
-                out.append(Violation(
-                    "schedule",
-                    f"no region matches the declared {name} schedule "
-                    f"({len(manifest)} collectives, first: "
-                    f"{manifest[0].describe()})"))
+        diagnosed = True
+        # consume the better prefix so later regions diagnose against
+        # sensible offsets
+        if name == "sync":
+            s += min(k, len(sync) - s)
+        else:
+            f += min(k, len(fullprec) - f)
+    for name, manifest, pos in (("sync", sync, s),
+                                ("fullprec", fullprec, f)):
+        if pos < len(manifest) and not diagnosed:
+            out.append(Violation(
+                "schedule",
+                f"no region matches the declared {name} schedule "
+                f"({len(manifest) - pos} collectives unconsumed, first: "
+                f"{manifest[pos].describe()})"))
     return out
 
 
@@ -495,11 +539,13 @@ def check_wire_bytes(opt, tol_per_chunk: int = 4) -> List[Violation]:
     ar_cfg = opt.ar_cfg
     codec = ar_cfg.codec
     hier = ar_cfg.hierarchy is not None
-    sync = BK.expected_sync_schedule(opt.plan, ar_cfg, opt.bucket_plan) \
+    pack_order = getattr(opt.cfg, "pack_order", "flat")
+    sync = BK.expected_sync_schedule(opt.plan, ar_cfg, opt.bucket_plan,
+                                     pack_order) \
         if opt.cfg.style != "mean" else []
     if not sync:
         return out
-    units = BK.exchange_units(opt.plan, opt.bucket_plan)
+    units = BK.exchange_units(opt.plan, opt.bucket_plan, pack_order)
     for u, (lo, _, label) in enumerate(units):
         wire = codec.wire_bytes(lo, ar_cfg.scale_mode)
         for phase, lead in (("scatter", lo.n_outer if hier else lo.n),
@@ -570,7 +616,10 @@ def audit_trainer(trainer, *, seq: int = 16,
         "codec": opt.ar_cfg.codec.name,
         "style": opt.cfg.style,
         "bucketed": opt.bucket_plan is not None,
-        "exchange_units": len(BK.exchange_units(opt.plan, opt.bucket_plan)),
+        "pack_order": getattr(opt.cfg, "pack_order", "flat"),
+        "exchange_units": len(BK.exchange_units(
+            opt.plan, opt.bucket_plan,
+            getattr(opt.cfg, "pack_order", "flat"))),
         "collectives_traced": len(trace.collectives),
         "sync_collectives_declared": len(sync_c),
         "fullprec_collectives_declared": len(fp_c),

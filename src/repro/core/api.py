@@ -99,12 +99,23 @@ class OptimizerConfig:
                                          # anchors, payloads, and collectives
                                          # then run per bucket. None = the
                                          # historical per-leaf exchange.
+    pack_order: str = "flat"             # exchange-unit packing/issue order
+                                         # (bucketing.PACK_ORDERS): "flat" or
+                                         # "reverse_backward" (reverse
+                                         # flat-leaf order ≈ backward
+                                         # readiness, so early units overlap
+                                         # the tail of the backward pass)
 
     def __post_init__(self):
         if self.bucket_mb is not None and self.bucket_mb <= 0:
             raise ValueError(
                 f"bucket_mb must be positive (MiB per fused bucket), got "
                 f"{self.bucket_mb!r}")
+        from repro.core.bucketing import PACK_ORDERS
+        if self.pack_order not in PACK_ORDERS:
+            raise ValueError(
+                f"pack_order must be one of {PACK_ORDERS}, got "
+                f"{self.pack_order!r}")
         # fail fast, with the valid options listed, instead of deep inside
         # _scales / the exchange (ScaleMode is a plain str; a typo like
         # "rows" used to surface steps later)
@@ -123,7 +134,8 @@ def _shared_kwargs(cfg: OptimizerConfig) -> Dict[str, Any]:
                 codec=cfg.codec, codec_arg=cfg.codec_arg,
                 store_anchor=cfg.store_anchor, comm_dtype=cfg.comm_dtype,
                 state_dtype=cfg.state_dtype, use_pallas=cfg.use_pallas,
-                hierarchy=cfg.hierarchy, bucket_mb=cfg.bucket_mb)
+                hierarchy=cfg.hierarchy, bucket_mb=cfg.bucket_mb,
+                pack_order=cfg.pack_order)
 
 
 def _adam(cfg):

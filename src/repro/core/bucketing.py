@@ -47,6 +47,21 @@ import numpy as np
 from repro.core import compressor as C
 from repro.core.leafwise import LeafPlan
 
+#: Packing / issue orders for the exchange units. ``flat`` is flat-leaf
+#: order; ``reverse_backward`` reverses it — the last parameters of the
+#: flat order are (to first approximation) the first whose gradients
+#: finalize during the backward pass, so issuing units in reverse order
+#: lets early exchanges overlap the rest of the backward. Both are pure
+#: functions of the plan inputs, so optimizer state layout stays
+#: deterministic.
+PACK_ORDERS = ("flat", "reverse_backward")
+
+
+def _check_pack_order(pack_order: str) -> None:
+    if pack_order not in PACK_ORDERS:
+        raise ValueError(
+            f"pack_order must be one of {PACK_ORDERS}, got {pack_order!r}")
+
 
 @dataclasses.dataclass(frozen=True)
 class Bucket:
@@ -98,17 +113,20 @@ def fusable(layout: C.LeafLayout, vspec) -> bool:
 
 
 def make_bucket_plan(plan: LeafPlan, bucket_mb: float,
-                     vspecs=None) -> BucketPlan:
+                     vspecs=None, pack_order: str = "flat") -> BucketPlan:
     """Greedy in-order packing of the plan's DP leaves into buckets.
 
     ``bucket_mb`` is the f32 element budget per fused bucket; a single
     leaf larger than the budget still gets its own (fused) bucket, so the
-    budget bounds *fusion*, never splits a leaf. Packing is by flat leaf
-    order — deterministic, so the plan (and therefore the optimizer state
-    layout) is a pure function of (param tree, specs, n, bucket_mb).
+    budget bounds *fusion*, never splits a leaf. Packing is by
+    ``pack_order`` (flat leaf order, or its reverse ≈ backward readiness
+    order) — deterministic, so the plan (and therefore the optimizer
+    state layout) is a pure function of (param tree, specs, n, bucket_mb,
+    pack_order).
     """
     if bucket_mb is None or bucket_mb <= 0:
         raise ValueError(f"bucket_mb must be positive, got {bucket_mb!r}")
+    _check_pack_order(pack_order)
     vspecs = vspecs if vspecs is not None else plan.vspecs
     budget = max(1, int(float(bucket_mb) * 2**20) // 4)
     n_inner = plan.hierarchy.inner if plan.hierarchy else 1
@@ -137,7 +155,11 @@ def make_bucket_plan(plan: LeafPlan, bucket_mb: float,
             leaf_bucket[i] = bi
         pend, pend_elems = [], 0
 
-    for i, (lo, dp) in enumerate(zip(plan.layouts, plan.dp_mask)):
+    order = range(len(plan.leaves))
+    if pack_order == "reverse_backward":
+        order = reversed(order)
+    for i in order:
+        lo, dp = plan.layouts[i], plan.dp_mask[i]
         if not dp:
             continue
         if not fusable(lo, vspecs[i]):
@@ -254,16 +276,22 @@ class ExpectedCollective(NamedTuple):
         return self.level == "outer"
 
 
-def exchange_units(plan: LeafPlan, bucket_plan: Optional[BucketPlan] = None
+def exchange_units(plan: LeafPlan, bucket_plan: Optional[BucketPlan] = None,
+                   pack_order: str = "flat"
                    ) -> List[Tuple[C.LeafLayout, Any, str]]:
-    """``(layout, vspec, label)`` per exchange unit, in emission order:
-    buckets when a bucket plan is set, the DP leaves otherwise (exactly the
-    iteration order of ``ComposedOptimizer``'s sync/fullprec paths)."""
+    """``(layout, vspec, label)`` per exchange unit, in issue order:
+    buckets when a bucket plan is set (the bucket plan's own order already
+    reflects its ``pack_order``), the DP leaves in ``pack_order``
+    otherwise — exactly the iteration order of ``ComposedOptimizer``'s
+    per-unit sync/fullprec issue loop."""
+    _check_pack_order(pack_order)
     if bucket_plan is not None:
         return [(b.layout, b.vspec, f"bucket[{k}]")
                 for k, b in enumerate(bucket_plan.buckets)]
-    return [(plan.layouts[i], plan.vspecs[i], f"leaf[{i}]")
-            for i, dp in enumerate(plan.dp_mask) if dp]
+    idx = [i for i, dp in enumerate(plan.dp_mask) if dp]
+    if pack_order == "reverse_backward":
+        idx = idx[::-1]
+    return [(plan.layouts[i], plan.vspecs[i], f"leaf[{i}]") for i in idx]
 
 
 def _payload_shapes(layout: C.LeafLayout, ar_cfg):
@@ -339,65 +367,39 @@ def _hier_raw_entries(unit, label, layout, ar_cfg):
 
 
 def expected_sync_schedule(plan: LeafPlan, ar_cfg,
-                           bucket_plan: Optional[BucketPlan] = None
+                           bucket_plan: Optional[BucketPlan] = None,
+                           pack_order: str = "flat"
                            ) -> List[ExpectedCollective]:
     """The declared collective schedule of ONE compressed (Algorithm-2)
-    sync round, in exact emission order — per-leaf loops interleave each
-    unit's scatter/gather; the bucketed paths emit the software-pipelined
-    order of ``onebit_allreduce_buckets`` / ``_hier_allreduce_buckets``."""
-    units = exchange_units(plan, bucket_plan)
+    sync round: one contiguous block per exchange unit, in issue order —
+    flat: ``[scatter, gather]``; hierarchical: ``[intra-pod
+    reduce-scatter, inter-pod scatter, inter-pod gather, intra-pod
+    broadcast]``. Each unit's exchange is issued under its own per-unit
+    cond in ``ComposedOptimizer`` the moment its member leaves' gradients
+    are final, so the emission order is uniform per unit regardless of
+    bucketing (the old software-pipelined interleavings are gone)."""
+    units = exchange_units(plan, bucket_plan, pack_order)
     hier = ar_cfg.hierarchy is not None
-    bucketed = bucket_plan is not None
-    scatters, gathers, raws = [], [], []
+    out: List[ExpectedCollective] = []
     for u, (lo, _, label) in enumerate(units):
         sc, ga = _unit_payload_entries(u, label, lo, ar_cfg)
-        scatters.append(sc)
-        gathers.append(ga)
-        raws.append(_hier_raw_entries(u, label, lo, ar_cfg)
-                    if hier and lo.n_inner > 1 else None)
-    K = len(units)
-    out: List[ExpectedCollective] = []
-    if not hier:
-        if not bucketed:
-            for sc, ga in zip(scatters, gathers):
-                out += sc + ga
-        else:           # phase 1: all scatters; phase 2: all gathers
-            for sc in scatters:
-                out += sc
-            for ga in gathers:
-                out += ga
-        return out
-    if not bucketed:
-        for k in range(K):
-            if raws[k]:
-                out.append(raws[k][0])
-            out += scatters[k] + gathers[k]
-            if raws[k]:
-                out.append(raws[k][1])
-        return out
-    # bucketed hierarchy: reduce-scatter k+1 is issued before scatter k,
-    # then all gathers, then all intra-pod broadcasts (stage order of
-    # _hier_allreduce_buckets)
-    if raws[0]:
-        out.append(raws[0][0])
-    for k in range(K):
-        if k + 1 < K and raws[k + 1]:
-            out.append(raws[k + 1][0])
-        out += scatters[k]
-    for ga in gathers:
-        out += ga
-    for k in range(K):
-        if raws[k]:
-            out.append(raws[k][1])
+        raw = (_hier_raw_entries(u, label, lo, ar_cfg)
+               if hier and lo.n_inner > 1 else None)
+        if raw:
+            out.append(raw[0])
+        out += sc + ga
+        if raw:
+            out.append(raw[1])
     return out
 
 
 def expected_fullprec_schedule(plan: LeafPlan, ar_cfg,
-                               bucket_plan: Optional[BucketPlan] = None
+                               bucket_plan: Optional[BucketPlan] = None,
+                               pack_order: str = "flat"
                                ) -> List[ExpectedCollective]:
     """The declared schedule of ONE full-precision (T_v / mean) round:
-    ``fullprec_allreduce_view`` per exchange unit, sequentially."""
-    units = exchange_units(plan, bucket_plan)
+    ``fullprec_allreduce_view`` per exchange unit, in issue order."""
+    units = exchange_units(plan, bucket_plan, pack_order)
     cd = np.dtype(ar_cfg.comm_dtype).name
     hier = ar_cfg.hierarchy is not None
     out: List[ExpectedCollective] = []

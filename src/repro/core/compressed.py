@@ -106,6 +106,26 @@ class StateKind:
 _SCALAR = StateKind("scalar")
 
 
+class _ExchangeUnit(NamedTuple):
+    """One unit of the per-unit issue schedule: a bucket, or a single DP
+    leaf when bucketing is off. Each unit's exchange (T_u sync, 1-bit
+    gradient, and full-precision T_v alike) is issued under its own
+    ``lax.cond`` whose operands are only the unit's member leaves and its
+    EF/anchor state — so the collective depends on nothing but those
+    leaves' gradients, and XLA's latency-hiding scheduler can start it
+    while the rest of the backward/accumulation compute is still running.
+
+    ``state_idx`` indexes the per-leaf EF/anchor lists when bucketing is
+    off (flat leaf index) and ``bucket_plan.buckets`` otherwise;
+    ``members`` are flat leaf indices in unit-buffer order."""
+
+    state_idx: int
+    members: tuple
+    layout: Any
+    vspec: Any
+    bucket: Any               # bucketing.Bucket | None (per-leaf unit)
+
+
 @dataclasses.dataclass(frozen=True)
 class CompressedDP:
     """Unbound transform: a base step plus the distributed-sync policy.
@@ -139,6 +159,13 @@ class CompressedDP:
                                         # f32 elements per bucket; see
                                         # repro.core.bucketing). None keeps
                                         # the historical per-leaf exchange.
+    pack_order: str = "flat"            # exchange-unit packing/issue order
+                                        # (bucketing.PACK_ORDERS):
+                                        # "reverse_backward" issues units in
+                                        # reverse flat-leaf order ≈ backward
+                                        # readiness order, so early units'
+                                        # exchanges overlap the tail of the
+                                        # backward pass.
 
     def __post_init__(self):
         if self.style not in STYLES:
@@ -147,6 +174,10 @@ class CompressedDP:
             raise ValueError(
                 f"bucket_mb must be positive (MiB per fused bucket), got "
                 f"{self.bucket_mb!r}")
+        if self.pack_order not in BK.PACK_ORDERS:
+            raise ValueError(
+                f"pack_order must be one of {BK.PACK_ORDERS}, got "
+                f"{self.pack_order!r}")
         C.validate_scale_mode(self.scale_mode)
         codec = self.codec
         if not self.quantize:
@@ -220,8 +251,20 @@ class ComposedOptimizer:
         # collectives operate per bucket (repro.core.bucketing) instead of
         # per leaf. None keeps the historical per-leaf exchange.
         self.bucket_plan = (BK.make_bucket_plan(plan, cfg.bucket_mb,
-                                                self.vspecs)
+                                                self.vspecs, cfg.pack_order)
                             if cfg.bucket_mb is not None else None)
+        if self.bucket_plan is not None:
+            self.units = tuple(
+                _ExchangeUnit(bi, b.members, b.layout, b.vspec, b)
+                for bi, b in enumerate(self.bucket_plan.buckets))
+        else:
+            idx = [i for i, dp in enumerate(plan.dp_mask) if dp]
+            if cfg.pack_order == "reverse_backward":
+                idx = idx[::-1]
+            self.units = tuple(
+                _ExchangeUnit(i, (i,), plan.layouts[i], plan.vspecs[i],
+                              None)
+                for i in idx)
         self._slot_specs = self.base.slot_specs()
         self._use_sync_policy = cfg.style == "accumulate"
         self._use_var_policy = (cfg.style in ("accumulate", "gradient")
@@ -232,6 +275,13 @@ class ComposedOptimizer:
 
     def flat(self, tree):
         return self.treedef.flatten_up_to(tree)
+
+    def exchange_units(self):
+        """``(layout, vspec, label)`` per exchange unit, in issue order —
+        the single source the audit / accounting layers use so the
+        declared schedule can never drift from the step's issue loop."""
+        return BK.exchange_units(self.plan, self.bucket_plan,
+                                 self.cfg.pack_order)
 
     # ------------------------------------------------------------------ #
     # state
@@ -343,31 +393,42 @@ class ComposedOptimizer:
                        if slots[name][i] is not None else None)
                 for name in slots}
 
+    def _unit_gather(self, unit, views):
+        """Member comm views -> the unit's exchange buffer."""
+        if unit.bucket is None:
+            (v,) = views
+            return v
+        return BK.gather_views(unit.bucket, views)
+
+    def _unit_scatter(self, unit, buf):
+        """Unit exchange buffer -> member comm views (inverse of
+        :meth:`_unit_gather` on the true elements)."""
+        if unit.bucket is None:
+            return [buf]
+        return BK.scatter_views(unit.bucket, buf,
+                                [self.layouts[i] for i in unit.members])
+
+    def _fullprec_unit(self, comm, unit, bufs):
+        """Full-precision mean of ONE exchange unit's member view buffers
+        (the T_v / mean-round transport). Elementwise, so fusing members
+        into a bucket is value-preserving per element."""
+        z = self._unit_gather(unit, bufs)
+        o = AR.fullprec_allreduce_view(
+            comm, z, self.cfg.comm_dtype, vspec=unit.vspec,
+            hierarchy=self.hierarchy, layout=unit.layout)
+        return self._unit_scatter(unit, o)
+
     def _fullprec_dp(self, comm, bufs_dp):
         """Full-precision mean of the DP leaves' view buffers, one
         collective pair per exchange unit (leaf, or bucket when bucketing
-        is on). The full-precision transport is elementwise, so bucketing
-        it is value-preserving per element — only the dispatch count
-        changes."""
-        cfg = self.cfg
-        bp = self.bucket_plan
+        is on), issued in unit order."""
         dp_idx = [i for i, dp in enumerate(self.dp_mask) if dp]
-        if bp is None:
-            return [AR.fullprec_allreduce_view(
-                        comm, g, cfg.comm_dtype, vspec=self.vspecs[i],
-                        hierarchy=self.hierarchy, layout=self.layouts[i])
-                    for g, i in zip(bufs_dp, dp_idx)]
         dp_pos = {i: k for k, i in enumerate(dp_idx)}
         out = [None] * len(bufs_dp)
-        for b in bp.buckets:
-            z = BK.gather_views(b, [bufs_dp[dp_pos[i]] for i in b.members])
-            o = AR.fullprec_allreduce_view(
-                comm, z, cfg.comm_dtype, vspec=b.vspec,
-                hierarchy=self.hierarchy, layout=b.layout)
-            for i, v in zip(b.members,
-                            BK.scatter_views(
-                                b, o, [self.layouts[i]
-                                       for i in b.members])):
+        for unit in self.units:
+            res = self._fullprec_unit(
+                comm, unit, [bufs_dp[dp_pos[i]] for i in unit.members])
+            for i, v in zip(unit.members, res):
                 out[dp_pos[i]] = v
         return out
 
@@ -439,18 +500,16 @@ class ComposedOptimizer:
             m_half.append(mh)
             u_half.append(u_new)
 
-        dp_idx = [i for i, dp in enumerate(dps) if dp]
-        dp_pos = {i: k for k, i in enumerate(dp_idx)}
         use_anchor = cfg.store_anchor
         sync_names = tuple(base.sync_slot_names)
-        bp = self.bucket_plan
 
-        def post_sync_leaf(k, i, ubar, anc32, xh, uh, nm, nx, nu, nextra):
-            """Per-leaf post-exchange update shared by the per-leaf and
-            bucketed sync paths: momentum refresh, slot refresh, the
-            re-anchored (or corrected) parameter, u reset."""
+        def post_sync_leaf(i, ubar, anc32, xh_i, uh_i):
+            """Per-leaf post-exchange update shared by per-leaf and
+            bucketed units: momentum refresh, slot refresh, the
+            re-anchored (or corrected) parameter, u reset. Returns
+            ``(nx, nm, nu, extras)``."""
             lo = self.layouts[i]
-            nm[k] = ubar / gamma_total
+            nm = ubar / gamma_total
             s32 = self._slots32(state.slots, i)
             s32 = {**s32, **base.refresh_sync_slots(
                 s32, anc32, ubar, gamma_total, lo, self.model_axes)}
@@ -458,121 +517,116 @@ class ComposedOptimizer:
                 # x_{t+1} = x_{t'} - precond(ubar): bitwise identical on
                 # all workers (ubar, the anchor, and the slots are
                 # replicated).
-                nx[k] = (anc32
-                         - C.from_view(base.precond(ubar, s32), lo)
-                         ).astype(xh[k].dtype)
+                nx = (anc32
+                      - C.from_view(base.precond(ubar, s32), lo)
+                      ).astype(xh_i.dtype)
             else:
-                corr = base.precond(uh[k] - ubar, s32)
-                nx[k] = (xh[k].astype(jnp.float32)
-                         + C.from_view(corr, lo)).astype(xh[k].dtype)
-            nu[k] = jnp.zeros_like(uh[k])
-            for j, name in enumerate(sync_names):
-                nextra[j][k] = s32[name]
+                corr = base.precond(uh_i - ubar, s32)
+                nx = (xh_i.astype(jnp.float32)
+                      + C.from_view(corr, lo)).astype(xh_i.dtype)
+            nu = jnp.zeros_like(uh_i)
+            return nx, nm, nu, tuple(s32[name] for name in sync_names)
 
-        # --- T_u branch: 1-bit sync of the accumulated buffer ----------
-        def sync_branch(op):
-            xh, mh, uh, ew, es, anc = op[:6]
-            extra_in = op[6:]
-            nx, nm, nu, nw, ns = list(xh), list(mh), [None] * len(uh), \
-                list(ew), list(es)
-            na = list(anc)
-            nextra = [list(lst) for lst in extra_in]
-            if bp is None:
-                for k, i in enumerate(dp_idx):
-                    lo = self.layouts[i]
-                    ubar, ef = AR.onebit_allreduce_view(
-                        comm, uh[k], AR.EFState(ew[k], es[k]), lo,
-                        self.ar_cfg, vspec=self.vspecs[i],
-                        worker_index=worker_index)
-                    ubar = ubar.astype(jnp.float32)
-                    anc32 = (anc[k].astype(jnp.float32)
-                             if use_anchor else None)
-                    post_sync_leaf(k, i, ubar, anc32, xh, uh, nm, nx, nu,
-                                   nextra)
-                    if use_anchor:
-                        na[k] = nx[k]
-                    nw[k], ns[k] = ef.err_worker, ef.err_server
-                return tuple([nx, nm, nu, nw, ns, na] + nextra)
-            # bucketed: one overlapped Algorithm-2 exchange per bucket
-            zs = [BK.gather_views(b, [uh[dp_pos[i]] for i in b.members])
-                  for b in bp.buckets]
-            outs, nefs = AR.onebit_allreduce_buckets(
-                comm, zs, [AR.EFState(w, s) for w, s in zip(ew, es)],
-                [b.layout for b in bp.buckets], self.ar_cfg,
-                vspecs=[b.vspec for b in bp.buckets],
-                worker_index=worker_index)
-            for bi, b in enumerate(bp.buckets):
-                mlo = [self.layouts[i] for i in b.members]
-                ubars = BK.scatter_views(b, outs[bi].astype(jnp.float32),
-                                         mlo)
-                ancs = (BK.scatter_views(b, anc[bi], mlo) if use_anchor
-                        else [None] * len(b.members))
-                new_xv = []
-                for ub, av, i, lo in zip(ubars, ancs, b.members, mlo):
-                    k = dp_pos[i]
-                    anc32 = (C.from_view(av.astype(jnp.float32), lo)
-                             if use_anchor else None)
-                    post_sync_leaf(k, i, ub.astype(jnp.float32), anc32,
-                                   xh, uh, nm, nx, nu, nextra)
-                    new_xv.append(C.to_view(nx[k], lo))
-                nw[bi], ns[bi] = nefs[bi].err_worker, nefs[bi].err_server
-                if use_anchor:
-                    na[bi] = BK.gather_views(b, new_xv).astype(
-                        anc[bi].dtype)
-            return tuple([nx, nm, nu, nw, ns, na] + nextra)
+        # --- T_u: ONE Algorithm-2 exchange per unit, each under its own
+        # cond whose operands are only that unit's member leaves + its
+        # EF/anchor state. The exchange's collectives therefore depend on
+        # nothing but those leaves' accumulated gradients, so with the
+        # peeled last microbatch (train/step.py) XLA can issue unit k's
+        # collective while later units' member gradients are still being
+        # computed. Per-unit math is identical to the old monolithic
+        # branch — bitwise, pinned by the golden-trajectory suite.
+        def unit_sync_cond(unit):
+            si = unit.state_idx
+            op = (tuple(x_half[i] for i in unit.members),
+                  tuple(m_half[i] for i in unit.members),
+                  tuple(u_half[i] for i in unit.members),
+                  state.err_w[si], state.err_s[si], state.anchor[si],
+                  tuple(tuple(state.slots[name][i].astype(jnp.float32)
+                              for name in sync_names)
+                        for i in unit.members))
 
-        def local_branch(op):
-            return tuple(list(lst) for lst in op)
+            def sync_b(op):
+                xh_m, mh_m, uh_m, ew, es, anc, _ = op
+                z = self._unit_gather(unit, list(uh_m))
+                ubar_u, ef = AR.onebit_allreduce_view(
+                    comm, z, AR.EFState(ew, es), unit.layout, self.ar_cfg,
+                    vspec=unit.vspec, worker_index=worker_index)
+                ubars = self._unit_scatter(unit,
+                                           ubar_u.astype(jnp.float32))
+                if not use_anchor:
+                    anc32s = [None] * len(unit.members)
+                elif unit.bucket is None:
+                    anc32s = [anc.astype(jnp.float32)]
+                else:
+                    anc32s = [C.from_view(av.astype(jnp.float32),
+                                          self.layouts[i])
+                              for av, i in zip(self._unit_scatter(unit,
+                                                                  anc),
+                                               unit.members)]
+                nx_m, nm_m, nu_m, nex_m = [], [], [], []
+                for k, i in enumerate(unit.members):
+                    nx, nm, nu, nex = post_sync_leaf(
+                        i, ubars[k].astype(jnp.float32), anc32s[k],
+                        xh_m[k], uh_m[k])
+                    nx_m.append(nx)
+                    nm_m.append(nm)
+                    nu_m.append(nu)
+                    nex_m.append(nex)
+                if not use_anchor:
+                    na = anc
+                elif unit.bucket is None:
+                    na = nx_m[0]
+                else:
+                    na = self._unit_gather(
+                        unit, [C.to_view(nx, self.layouts[i])
+                               for nx, i in zip(nx_m, unit.members)]
+                        ).astype(anc.dtype)
+                return (tuple(nx_m), tuple(nm_m), tuple(nu_m),
+                        ef.err_worker, ef.err_server, na, tuple(nex_m))
 
-        if bp is None:
-            ew_op = [state.err_w[i] for i in dp_idx]
-            es_op = [state.err_s[i] for i in dp_idx]
-            anc_op = [state.anchor[i] for i in dp_idx]
-        else:  # EF/anchor state is already a per-bucket list
-            ew_op, es_op = list(state.err_w), list(state.err_s)
-            anc_op = list(state.anchor)
-        op = tuple([[x_half[i] for i in dp_idx],
-                    [m_half[i] for i in dp_idx],
-                    [u_half[i] for i in dp_idx],
-                    ew_op, es_op, anc_op]
-                   + [[state.slots[name][i].astype(jnp.float32)
-                       for i in dp_idx] for name in sync_names])
-        res = jax.lax.cond(do_sync, sync_branch, local_branch, op)
-        sx, sm, su, sw, ss, sa = res[:6]
-        s_extra = res[6:]
+            def keep_b(op):
+                return op
+
+            return jax.lax.cond(do_sync, sync_b, keep_b, op)
 
         new_x, new_m = list(x_half), list(m_half)
         new_u = list(u_half)
-        if bp is None:
-            new_ew, new_es = list(state.err_w), list(state.err_s)
-            new_anchor = list(state.anchor)
-        else:
-            new_ew, new_es, new_anchor = list(sw), list(ss), list(sa)
+        new_ew, new_es = list(state.err_w), list(state.err_s)
+        new_anchor = list(state.anchor)
         new_sync_slots = {name: list(state.slots[name])
                           for name in sync_names}
-        for k, i in enumerate(dp_idx):
-            new_x[i], new_m[i], new_u[i] = sx[k], sm[k], su[k]
-            if bp is None:
-                new_ew[i], new_es[i] = sw[k], ss[k]
-                new_anchor[i] = sa[k]
-            for j, name in enumerate(sync_names):
-                new_sync_slots[name][i] = s_extra[j][k]
+        for unit in self.units:
+            nx_m, nm_m, nu_m, nw, ns, na, nex_m = unit_sync_cond(unit)
+            for k, i in enumerate(unit.members):
+                new_x[i], new_m[i], new_u[i] = nx_m[k], nm_m[k], nu_m[k]
+                for j, name in enumerate(sync_names):
+                    new_sync_slots[name][i] = nex_m[k][j]
+            new_ew[unit.state_idx] = nw
+            new_es[unit.state_idx] = ns
+            new_anchor[unit.state_idx] = na
 
-        # --- T_v branch: full-precision variance refresh ----------------
+        # --- T_v: full-precision variance refresh, also per unit -------
         if base.has_variance:
-            def var_branch(vop):
-                gbars = self._fullprec_dp(comm, [gv[i] for i in dp_idx])
-                return [base.update_variance(v.astype(jnp.float32), gbar)
-                        for v, gbar in zip(vop, gbars)]
+            def unit_var_cond(unit):
+                def var_b(vs_m):
+                    gbars = self._fullprec_unit(
+                        comm, unit, [gv[i] for i in unit.members])
+                    return tuple(
+                        base.update_variance(v.astype(jnp.float32), gb)
+                        for v, gb in zip(vs_m, gbars))
 
-            def keep_branch(vop):
-                return [v.astype(jnp.float32) for v in vop]
+                def keep_b(vs_m):
+                    return tuple(v.astype(jnp.float32) for v in vs_m)
 
-            v_dp = jax.lax.cond(do_var, var_branch, keep_branch,
-                                [state.slots["v"][i] for i in dp_idx])
+                return jax.lax.cond(
+                    do_var, var_b, keep_b,
+                    tuple(state.slots["v"][i] for i in unit.members))
+
             new_v = list(state.slots["v"])
-            for k, i in enumerate(dp_idx):
-                new_v[i] = v_dp[k].astype(state.slots["v"][i].dtype)
+            for unit in self.units:
+                nv_m = unit_var_cond(unit)
+                for k, i in enumerate(unit.members):
+                    new_v[i] = nv_m[k].astype(state.slots["v"][i].dtype)
             # non-DP leaves: plain local base step (v every step)
             for i, dp in enumerate(dps):
                 if dp:
@@ -618,11 +672,6 @@ class ComposedOptimizer:
               else g.astype(jnp.float32)
               for g, lo, dp, vs in zip(gs, los, dps, self.vspecs)]
         dp_idx = [i for i, dp in enumerate(dps) if dp]
-        dp_pos = {i: k for k, i in enumerate(dp_idx)}
-        bp = self.bucket_plan
-
-        def full(gs_dp):
-            return self._fullprec_dp(comm, gs_dp)
 
         if cfg.style == "gradient":
             if self._use_var_policy:
@@ -631,64 +680,50 @@ class ComposedOptimizer:
             else:
                 do_var, var_ps = jnp.asarray(False), state.var_pstate
 
-            def full_branch(op):
-                gs_dp, ew, es = op
-                return full(gs_dp), ew, es
+            # One cond per exchange unit (see _step_accumulate): the
+            # warmup round's full-precision exchange and the 1-bit round
+            # both issue unit-by-unit, each depending only on that unit's
+            # member gradients.
+            def unit_grad_cond(unit):
+                si = unit.state_idx
+                op = (tuple(gv[i] for i in unit.members),
+                      state.err_w[si], state.err_s[si])
 
-            def onebit_branch(op):
-                gs_dp, ew, es = op
-                if bp is None:
-                    outs, news_w, news_s = [], [], []
-                    for g, w, s, i in zip(gs_dp, ew, es, dp_idx):
-                        o, ef = AR.onebit_allreduce_view(
-                            comm, g, AR.EFState(w, s), self.layouts[i],
-                            self.ar_cfg, vspec=self.vspecs[i],
-                            worker_index=worker_index)
-                        outs.append(o.astype(jnp.float32))
-                        news_w.append(ef.err_worker)
-                        news_s.append(ef.err_server)
-                    return outs, news_w, news_s
-                # bucketed: one overlapped exchange per bucket
-                zs = [BK.gather_views(b, [gs_dp[dp_pos[i]]
-                                          for i in b.members])
-                      for b in bp.buckets]
-                outs_b, nefs = AR.onebit_allreduce_buckets(
-                    comm, zs, [AR.EFState(w, s) for w, s in zip(ew, es)],
-                    [b.layout for b in bp.buckets], self.ar_cfg,
-                    vspecs=[b.vspec for b in bp.buckets],
-                    worker_index=worker_index)
-                outs = [None] * len(gs_dp)
-                for b, o in zip(bp.buckets, outs_b):
-                    views = BK.scatter_views(
-                        b, o, [self.layouts[i] for i in b.members])
-                    for i, v in zip(b.members, views):
-                        outs[dp_pos[i]] = v.astype(jnp.float32)
-                return (outs, [ef.err_worker for ef in nefs],
-                        [ef.err_server for ef in nefs])
+                def full_b(op):
+                    gs_m, ew, es = op
+                    outs = self._fullprec_unit(comm, unit, list(gs_m))
+                    return (tuple(o.astype(jnp.float32) for o in outs),
+                            ew, es)
 
-            if bp is None:
-                ew_op = [state.err_w[i] for i in dp_idx]
-                es_op = [state.err_s[i] for i in dp_idx]
-            else:
-                ew_op, es_op = list(state.err_w), list(state.err_s)
-            op = ([gv[i] for i in dp_idx], ew_op, es_op)
-            agg_dp, new_ew_dp, new_es_dp = jax.lax.cond(
-                do_var, full_branch, onebit_branch, op)
-            if bp is None:
-                new_ew, new_es = list(state.err_w), list(state.err_s)
-                for k, i in enumerate(dp_idx):
-                    new_ew[i], new_es[i] = new_ew_dp[k], new_es_dp[k]
-            else:
-                new_ew, new_es = list(new_ew_dp), list(new_es_dp)
+                def onebit_b(op):
+                    gs_m, ew, es = op
+                    z = self._unit_gather(unit, list(gs_m))
+                    o, ef = AR.onebit_allreduce_view(
+                        comm, z, AR.EFState(ew, es), unit.layout,
+                        self.ar_cfg, vspec=unit.vspec,
+                        worker_index=worker_index)
+                    outs = self._unit_scatter(unit, o)
+                    return (tuple(v.astype(jnp.float32) for v in outs),
+                            ef.err_worker, ef.err_server)
+
+                return jax.lax.cond(do_var, full_b, onebit_b, op)
+
+            gbar = list(gv)
+            new_ew, new_es = list(state.err_w), list(state.err_s)
+            for unit in self.units:
+                outs_m, nw, ns = unit_grad_cond(unit)
+                for k, i in enumerate(unit.members):
+                    gbar[i] = outs_m[k]
+                new_ew[unit.state_idx] = nw
+                new_es[unit.state_idx] = ns
         else:  # mean: uncompressed baseline, no EF state at all
             do_var = jnp.asarray(base.has_variance)
             var_ps = state.var_pstate
-            agg_dp = full([gv[i] for i in dp_idx])
+            agg_dp = self._fullprec_dp(comm, [gv[i] for i in dp_idx])
             new_ew, new_es = list(state.err_w), list(state.err_s)
-
-        gbar = list(gv)
-        for k, i in enumerate(dp_idx):
-            gbar[i] = agg_dp[k]
+            gbar = list(gv)
+            for k, i in enumerate(dp_idx):
+                gbar[i] = agg_dp[k]
 
         wd = cfg.weight_decay
         new_x = []

@@ -320,141 +320,6 @@ def _hier_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
     return _hier_gather_out(inner, out_slice, layout, cfg, vspec), new_ef
 
 
-def onebit_allreduce_buckets(comm: Comm, zs, efs, layouts, cfg: OneBitConfig,
-                             vspecs=None, worker_index=None):
-    """Algorithm 2 over a *list* of buffers with a two-phase overlapped
-    schedule (the bucketed exchange of :mod:`repro.core.bucketing`).
-
-    Semantically this is exactly ``[onebit_allreduce_view(z_k) for k]`` —
-    asserted bitwise in tests/test_bucketing.py — but the work is emitted
-    in software-pipelined order: bucket ``k``'s collective is issued while
-    bucket ``k+1`` encodes, in both the worker phase (encode ‖ all_to_all)
-    and the server phase (re-encode ‖ all_gather). Under jit the collective
-    for bucket ``k`` never depends on bucket ``k+1``'s encode, so XLA's
-    latency-hiding scheduler can run the (async-start) collective and the
-    next bucket's compute concurrently; the interleaved emission order
-    makes that overlap explicit rather than hoping the scheduler finds it
-    across a leaf-sized op soup. Exact under jit: the dataflow graph is
-    identical to the sequential per-bucket loop.
-
-    Returns ``(outs, new_efs)`` — lists aligned with ``zs``.
-    """
-    K = len(zs)
-    vspecs = list(vspecs) if vspecs is not None else [None] * K
-    if K == 0:
-        return [], []
-    codec = cfg.codec
-    if cfg.hierarchy is not None:
-        return _hier_allreduce_buckets(comm, zs, efs, layouts, cfg, vspecs)
-
-    widx = comm.index() if worker_index is None else worker_index
-
-    # --- phase 1: worker encode k+1 ‖ scatter collective k ------------------
-    enc = [None] * K
-    enc[0] = _flat_worker_encode(zs[0], efs[0], layouts[0], cfg, vspecs[0])
-    recvs = [None] * K
-    for k in range(K):
-        recvs[k] = _map_a2a(comm, enc[k][0], vspecs[k])
-        if k + 1 < K:
-            enc[k + 1] = _flat_worker_encode(zs[k + 1], efs[k + 1],
-                                             layouts[k + 1], cfg,
-                                             vspecs[k + 1])
-
-    # --- phase 2: server encode k+1 ‖ gather collective k -------------------
-    srv = [None] * K
-    srv[0] = _flat_server_encode(recvs[0], efs[0], layouts[0], cfg,
-                                 vspecs[0], enc[0][2], enc[0][3], widx)
-    gathered = [None] * K
-    for k in range(K):
-        gathered[k] = _map_gather(comm, srv[k][0], vspecs[k])
-        if k + 1 < K:
-            srv[k + 1] = _flat_server_encode(
-                recvs[k + 1], efs[k + 1], layouts[k + 1], cfg,
-                vspecs[k + 1], enc[k + 1][2], enc[k + 1][3], widx)
-
-    outs, new_efs = [], []
-    for k in range(K):
-        cst = lambda x: C.constrain(x, vspecs[k])
-        out = cst(codec.decode(gathered[k], layouts[k], cfg.compute_dtype,
-                               use_pallas=enc[k][3]))
-        outs.append(out.astype(cfg.compute_dtype))
-        if codec.needs_ef:
-            new_efs.append(EFState(
-                err_worker=cst(enc[k][1]).astype(efs[k].err_worker.dtype),
-                err_server=srv[k][1].astype(efs[k].err_server.dtype)))
-        else:
-            new_efs.append(efs[k])
-    return outs, new_efs
-
-
-def _hier_allreduce_buckets(comm: Comm, zs, efs, layouts, cfg, vspecs):
-    """Two-level bucketed exchange: the per-bucket schedule of
-    :func:`_hier_allreduce_view` with the compute-‖-collective interleave
-    applied at every collective stage — bucket ``k+1``'s intra-pod
-    reduce-scatter is issued before bucket ``k`` encodes (stage 1 ‖ 2),
-    the inter-pod scatter for ``k`` flies while ``k+1`` encodes (stage 2),
-    likewise for the server re-encode vs the inter-pod gather (stage 3),
-    and each bucket's decode lands between its neighbours' intra-pod
-    all_gathers (stage 4)."""
-    K = len(zs)
-    codec = cfg.codec
-    h = cfg.hierarchy
-    outer, inner = comm.split(h.outer_axes, h.inner_axes)
-    for lo in layouts:
-        assert lo.n_inner == h.inner, (lo, h)
-
-    # --- stages 1+2: intra-pod reduce-scatter k+1 ‖ worker encode k ‖
-    #     inter-pod scatter k ------------------------------------------------
-    owns = [None] * K
-    enc = [None] * K
-    recvs = [None] * K
-    owns[0] = _hier_reduce_scatter(inner, zs[0], layouts[0], cfg, vspecs[0])
-    for k in range(K):
-        if k + 1 < K:
-            # issue bucket k+1's intra-pod collective before bucket k's
-            # encode, so the encode (and the inter-pod scatter below)
-            # overlap it
-            owns[k + 1] = _hier_reduce_scatter(inner, zs[k + 1],
-                                               layouts[k + 1], cfg,
-                                               vspecs[k + 1])
-        enc[k] = _hier_worker_encode(owns[k][0], efs[k], layouts[k], cfg,
-                                     vspecs[k], owns[k][1])
-        recvs[k] = _map_a2a(outer, enc[k][0], vspecs[k])
-
-    k_idx = outer.index()
-
-    # --- stage 3: server encode k+1 ‖ inter-pod gather k --------------------
-    srv = [None] * K
-    srv[0] = _hier_server_encode(
-        recvs[0], efs[0], layouts[0], cfg, vspecs[0], enc[0][2], enc[0][3],
-        owns[0][1] * layouts[0].n_outer + k_idx)
-    gathered = [None] * K
-    for k in range(K):
-        gathered[k] = _map_gather(outer, srv[k][0], vspecs[k])
-        if k + 1 < K:
-            srv[k + 1] = _hier_server_encode(
-                recvs[k + 1], efs[k + 1], layouts[k + 1], cfg,
-                vspecs[k + 1], enc[k + 1][2], enc[k + 1][3],
-                owns[k + 1][1] * layouts[k + 1].n_outer + k_idx)
-
-    # --- stage 4: decode + intra-pod all_gather per bucket ------------------
-    outs, new_efs = [], []
-    for k in range(K):
-        cst = lambda x: C.constrain(x, vspecs[k])
-        out_slice = cst(codec.decode(gathered[k], layouts[k],
-                                     cfg.compute_dtype,
-                                     use_pallas=enc[k][3]))
-        outs.append(_hier_gather_out(inner, out_slice, layouts[k], cfg,
-                                     vspecs[k]))
-        if codec.needs_ef:
-            new_efs.append(EFState(
-                err_worker=cst(enc[k][1]).astype(efs[k].err_worker.dtype),
-                err_server=srv[k][1].astype(efs[k].err_server.dtype)))
-        else:
-            new_efs.append(efs[k])
-    return outs, new_efs
-
-
 def fullprec_allreduce_view(comm: Comm, z_view: jnp.ndarray,
                             comm_dtype=jnp.bfloat16,
                             vspec=None, hierarchy: Optional[Hierarchy] = None,

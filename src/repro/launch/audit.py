@@ -34,13 +34,15 @@ from repro.train.step import Trainer, TrainerConfig
 
 def build_opt_cfg(optimizer: str = "zero_one_adam", scale_mode="tensor",
                   hierarchy_inner: int = 0, codec: str = "sign1bit",
-                  codec_arg=None, bucket_mb=None) -> OptimizerConfig:
+                  codec_arg=None, bucket_mb=None,
+                  pack_order: str = "flat") -> OptimizerConfig:
     """The production-shaped optimizer config the audits run against
     (mirrors ``launch.dryrun.default_opt_cfg``, which we can't import —
     dryrun forces a 512-device host platform at import time)."""
     return OptimizerConfig(
         name=optimizer,
         codec=codec, codec_arg=codec_arg, bucket_mb=bucket_mb,
+        pack_order=pack_order,
         lr=S.LinearWarmupExpDecay(peak_lr=4e-4, warmup_steps=12500),
         var_policy=S.AdaptiveFreezePolicy(kappa=16),
         sync_policy=S.LrProportionalSyncPolicy(
@@ -66,6 +68,7 @@ def first_violation(report_dict) -> str:
 def audit_one(arch: str, *, optimizer="zero_one_adam", codec="sign1bit",
               codec_arg=None, scale_mode="tensor", bucket_mb=None,
               hierarchy_inner: int = 0, workers: int = 4,
+              micro_batches: int = 1, pack_order: str = "flat",
               smoke: bool = True):
     """Run the IR audit + frame pre-check on one config; returns a JSON-able
     record."""
@@ -73,20 +76,21 @@ def audit_one(arch: str, *, optimizer="zero_one_adam", codec="sign1bit",
     cfg = spec.smoke if smoke else spec.config
     ocfg = build_opt_cfg(optimizer, scale_mode,
                          hierarchy_inner=hierarchy_inner, codec=codec,
-                         codec_arg=codec_arg, bucket_mb=bucket_mb)
+                         codec_arg=codec_arg, bucket_mb=bucket_mb,
+                         pack_order=pack_order)
     tr = Trainer(cfg, ocfg, n_workers=workers,
-                 trainer_cfg=TrainerConfig(micro_batches=1))
+                 trainer_cfg=TrainerConfig(micro_batches=micro_batches))
     rep = audit_trainer(tr)
     rec = rep.to_dict()
     rec["config"] = {
         "arch": cfg.name, "optimizer": optimizer, "codec": codec,
         "codec_arg": codec_arg, "scale_mode": scale_mode,
         "bucket_mb": bucket_mb, "hierarchy_inner": hierarchy_inner,
-        "workers": workers,
+        "workers": workers, "micro_batches": micro_batches,
+        "pack_order": pack_order,
     }
     frames = []
-    from repro.core.bucketing import exchange_units
-    for lo, _, label in exchange_units(tr.opt.plan, tr.opt.bucket_plan):
+    for lo, _, label in tr.opt.exchange_units():
         for issue in KD.frame_precheck(lo):
             frames.append(f"{label}: {issue}")
     rec["frame_issues"] = frames
@@ -95,8 +99,9 @@ def audit_one(arch: str, *, optimizer="zero_one_adam", codec="sign1bit",
 
 
 def _matrix(workers: int):
-    """The CI smoke matrix: flat + hierarchical, per-leaf + bucketed, and
-    every shipped codec, on gpt2-smoke."""
+    """The CI smoke matrix: flat + hierarchical, per-leaf + bucketed, every
+    shipped codec, and the overlapped gradient-accumulation step
+    (micro_batches=2, readiness-ordered packing), on gpt2-smoke."""
     for hierarchy_inner in (0, 2):
         for bucket_mb in (None, 4.0):
             yield dict(codec="sign1bit", hierarchy_inner=hierarchy_inner,
@@ -105,6 +110,13 @@ def _matrix(workers: int):
         yield dict(codec=codec, workers=workers)
     yield dict(optimizer="one_bit_adam", workers=workers)
     yield dict(optimizer="adam", workers=workers)
+    # the scanned/peeled accumulation step with the per-unit overlapped
+    # exchange, flat and hierarchical, plus readiness-ordered packing
+    yield dict(codec="sign1bit", bucket_mb=4.0, micro_batches=2,
+               workers=workers)
+    yield dict(codec="sign1bit", hierarchy_inner=2, bucket_mb=4.0,
+               micro_batches=2, pack_order="reverse_backward",
+               workers=workers)
 
 
 def main(argv=None) -> int:
@@ -124,6 +136,14 @@ def main(argv=None) -> int:
                     help="two-level exchange with INNER intra-pod workers "
                          "(0 = flat)")
     ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--micro-batches", type=int, default=1,
+                    help="gradient-accumulation microbatches of the traced "
+                         "step (>1 audits the scanned/peeled accumulation "
+                         "path)")
+    ap.add_argument("--pack-order", default="flat",
+                    choices=["flat", "reverse_backward"],
+                    help="exchange-unit packing/issue order "
+                         "(reverse_backward ≈ backward readiness order)")
     ap.add_argument("--full", action="store_true",
                     help="audit the full-size config (default: smoke)")
     ap.add_argument("--matrix", action="store_true",
@@ -142,13 +162,18 @@ def main(argv=None) -> int:
                          scale_mode=args.scale_mode,
                          bucket_mb=args.bucket_mb,
                          hierarchy_inner=args.hierarchy,
+                         micro_batches=args.micro_batches,
+                         pack_order=args.pack_order,
                          workers=args.workers)])
     failed = 0
     for kw in combos:
         rec = audit_one(args.arch, smoke=not args.full, **kw)
         c = rec["config"]
         label = (f"{c['arch']} opt={c['optimizer']} codec={c['codec']} "
-                 f"hier={c['hierarchy_inner']} bucket={c['bucket_mb']}")
+                 f"hier={c['hierarchy_inner']} bucket={c['bucket_mb']} "
+                 f"mb={c['micro_batches']}"
+                 + (f" pack={c['pack_order']}"
+                    if c['pack_order'] != "flat" else ""))
         if rec["ok"]:
             print(f"audit OK   {label} "
                   f"({rec['summary']['collectives_traced']} collectives, "

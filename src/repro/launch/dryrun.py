@@ -68,7 +68,18 @@ def _computation_blocks(hlo_text: str):
 
 def _loop_multipliers(hlo_text: str, blocks):
     """body-computation -> trip count (XLA cost analysis counts while-loop
-    bodies once; scans over layers/microbatches must be scaled)."""
+    bodies once; scans over layers/microbatches must be scaled).
+
+    The trip count is read from the condition computation's *actual* loop
+    bound: the integer constant feeding a ``compare`` with
+    ``direction=LT`` (trip = bound, the standard counting-up ``lax.scan``
+    lowering) or ``LE`` (trip = bound + 1). An unrelated large integer
+    constant in the condition block — a threshold, a packed literal —
+    must NOT be mistaken for the bound; the old max-over-all-constants
+    heuristic did exactly that (e.g. a ``constant(32768)`` sync-schedule
+    literal scaling a 4-iteration microbatch scan 32768x). When no
+    compare/constant pair parses, fall back to that heuristic rather
+    than silently under-counting."""
     mult = {}
     cond_body = []
     for line in hlo_text.splitlines():
@@ -76,12 +87,33 @@ def _loop_multipliers(hlo_text: str, blocks):
                       r"body=%?([\w\.\-]+)", line)
         if m:
             cond_body.append((m.group(1), m.group(2)))
+    const_re = re.compile(r"%?([\w\.\-]+)\s*=\s*[su]\d+\[\]\s*"
+                          r"constant\((\d+)\)")
+    cmp_re = re.compile(r"compare\(([^)]*)\).*?direction=(LT|LE)")
     for cond, body in cond_body:
-        trip = 1
-        for line in blocks.get(cond, []):
-            for c in re.findall(r"constant\((\d+)\)", line):
-                trip = max(trip, int(c))
-        mult[body] = trip
+        lines = blocks.get(cond, [])
+        consts = {}
+        for line in lines:
+            for name, val in const_re.findall(line):
+                consts[name] = int(val)
+        trip = None
+        for line in lines:
+            m = cmp_re.search(line)
+            if not m:
+                continue
+            operands = re.findall(r"%?([\w\.\-]+)", m.group(1))
+            bound = next((consts[n] for n in operands if n in consts),
+                         None)
+            if bound is None:
+                continue
+            trip = bound + 1 if m.group(2) == "LE" else bound
+            break
+        if trip is None:   # unrecognized condition shape: legacy heuristic
+            trip = 1
+            for line in lines:
+                for c in re.findall(r"constant\((\d+)\)", line):
+                    trip = max(trip, int(c))
+        mult[body] = max(1, trip)
     return mult
 
 

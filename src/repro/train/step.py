@@ -40,6 +40,70 @@ class TrainerConfig:
     micro_batches: int = 1
     worker_axes: Tuple[str, ...] = ("data",)
     donate: bool = True
+    # Peel the final microbatch out of the accumulation scan so its
+    # per-leaf gradient completions are visible dataflow: each exchange
+    # unit's collectives (issued under their own per-unit cond in
+    # repro.core.compressed) then depend only on that unit's member
+    # leaves, and XLA's latency-hiding scheduler can overlap early units'
+    # exchanges with the rest of the last backward. Bitwise-identical to
+    # the full scan (same accumulation association order); False keeps
+    # the sequential all-scanned path (used to regenerate goldens and by
+    # the overlapped-vs-sequential parity tests).
+    peel_last_microbatch: bool = True
+
+    def __post_init__(self):
+        if self.micro_batches < 1:
+            raise ValueError(
+                f"micro_batches must be >= 1, got "
+                f"{self.micro_batches!r}")
+
+
+def accumulate_grads(loss_fn, params, batch, micro_batches, *, peel=True):
+    """Mean loss/gradients over ``micro_batches`` splits of the per-worker
+    batch (leading axis). ``loss_fn(params, microbatch) -> (loss, aux)``.
+
+    With ``peel=True`` the last microbatch runs unrolled after a scan over
+    the first ``micro_batches - 1`` — the same sum in the same association
+    order (bitwise-identical to the full scan), but the final backward's
+    per-leaf gradients are individual equations instead of one opaque scan
+    output, which is what lets the per-unit exchange issue early.
+    """
+    mb = micro_batches
+    if mb <= 1:
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    for path, x in jax.tree_util.tree_flatten_with_path(batch)[0]:
+        if x.shape[0] % mb:
+            raise ValueError(
+                f"per-worker batch leaf {jax.tree_util.keystr(path)} has "
+                f"{x.shape[0]} rows, which is not divisible by "
+                f"micro_batches={mb}; choose a global batch size divisible "
+                f"by n_workers * micro_batches")
+
+    def resh(x):
+        return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+    mbs = jax.tree.map(resh, batch)
+
+    def acc(carry, b_):
+        gsum, lsum = carry
+        (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, b_)
+        gsum = jax.tree.map(jnp.add, gsum, g)
+        return (gsum, lsum + l), None
+
+    g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    init = (g0, jnp.zeros(()))
+    if peel:
+        head = jax.tree.map(lambda x: x[:-1], mbs)
+        last = jax.tree.map(lambda x: x[-1], mbs)
+        carry, _ = jax.lax.scan(acc, init, head)
+        (gsum, lsum), _ = acc(carry, last)
+    else:
+        (gsum, lsum), _ = jax.lax.scan(acc, init, mbs)
+    grads = jax.tree.map(lambda g: g / mb, gsum)
+    return lsum / mb, grads
 
 
 class Trainer:
@@ -233,25 +297,8 @@ class Trainer:
             loss, met = T.lm_loss(p_, self.model_cfg, b_, comm=ep_comm)
             return loss, met
 
-        if mb > 1:
-            def resh(x):
-                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
-            mbs = jax.tree.map(resh, batch)
-
-            def acc(carry, b_):
-                gsum, lsum = carry
-                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b_)
-                gsum = jax.tree.map(jnp.add, gsum, g)
-                return (gsum, lsum + l), None
-
-            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
-            (gsum, lsum), _ = jax.lax.scan(acc, (g0, jnp.zeros(())), mbs)
-            grads = jax.tree.map(lambda g: g / mb, gsum)
-            loss = lsum / mb
-        else:
-            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                p, batch)
-            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        loss, grads = accumulate_grads(
+            loss_fn, p, batch, mb, peel=self.tc.peel_last_microbatch)
 
         grads = self._ep_scale_grads(grads, comm)
         widx = (comm.index() if not isinstance(comm, NullComm)

@@ -1,5 +1,6 @@
-"""Bucketed-exchange tests: bucket assembly properties, the overlapped
-scheduler's exactness, and bucketed-vs-per-leaf trajectory equivalence.
+"""Bucketed-exchange tests: bucket assembly properties, pack-order
+(readiness) permutation invariants, and bucketed-vs-per-leaf trajectory
+equivalence.
 
 The contract under test (repro.core.bucketing):
 
@@ -8,8 +9,10 @@ The contract under test (repro.core.bucketing):
   member views can never reach the bucket buffer (so never the wire);
 * true-element accounting is conserved leaf-sum vs bucket-sum, and fusing
   never inflates the wire volume;
-* ``onebit_allreduce_buckets`` (the two-phase overlapped schedule) is
-  bitwise-identical to the sequential per-view exchange;
+* ``pack_order="reverse_backward"`` is a pure permutation of the flat
+  issue order: per-leaf trajectories are bitwise unchanged (exchanges are
+  independent), bucketed ones are bitwise under the exact ``identity``
+  codec, and the declared sync schedule follows the reversed order;
 * with one leaf per bucket the full optimizer trajectory is BITWISE the
   per-leaf path's, across every codec × flat/hierarchy × pallas on/off
   (0/1-LAMB's trust norms are reduction-order sensitive at 1 ulp — see
@@ -216,55 +219,84 @@ def test_wire_bytes_conserved_leaf_vs_bucket():
 
 
 # --------------------------------------------------------------------- #
-# overlapped scheduler == sequential per-view exchange, bitwise
+# pack_order: readiness-ordered (reverse_backward) unit issue
 # --------------------------------------------------------------------- #
 
+def test_pack_order_validated():
+    plan = _plan([(64,), (32,)])
+    with pytest.raises(ValueError, match="pack_order"):
+        BK.make_bucket_plan(plan, 64.0, pack_order="bogus")
+    with pytest.raises(ValueError, match="pack_order"):
+        BK.exchange_units(plan, pack_order="forward")
+
+
+def test_reverse_backward_unit_order():
+    """reverse_backward reverses the per-leaf issue order and the bucket
+    assembly order, and the declared sync schedule follows it (unit
+    ordinals still count up in issue order — that is what the IR auditor
+    matches region-by-region)."""
+    plan = _plan([(64,), (32,), (96,)])
+    flat = BK.exchange_units(plan, pack_order="flat")
+    rev = BK.exchange_units(plan, pack_order="reverse_backward")
+    assert [l for _, _, l in rev] == [l for _, _, l in flat][::-1]
+
+    # bucketed: packing iterates leaves in reverse, so a single fused
+    # bucket's member order is the reversed flat order
+    bp = BK.make_bucket_plan(plan, 64.0, pack_order="reverse_backward")
+    assert len(bp.buckets) == 1
+    assert bp.buckets[0].members == (2, 1, 0)
+
+    cfg = AR.OneBitConfig(codec="sign1bit")
+
+    def first_labels(sched):
+        out = []
+        for e in sched:
+            if not out or out[-1] != e.unit_label:
+                out.append(e.unit_label)
+        return out
+
+    sf = BK.expected_sync_schedule(plan, cfg)
+    sr = BK.expected_sync_schedule(plan, cfg,
+                                   pack_order="reverse_backward")
+    assert first_labels(sr) == first_labels(sf)[::-1]
+    assert [e.unit for e in sr] == sorted(e.unit for e in sr)
+    ff = BK.expected_fullprec_schedule(plan, cfg)
+    fr = BK.expected_fullprec_schedule(plan, cfg,
+                                       pack_order="reverse_backward")
+    assert first_labels(fr) == first_labels(ff)[::-1]
+
+
 @pytest.mark.parametrize("hier", [False, True])
-@pytest.mark.parametrize("codec", ["sign1bit", "topk", "qint8"])
-def test_overlapped_schedule_is_exact(hier, codec):
-    h = Hierarchy(inner=2) if hier else None
-    layouts = [C.make_layout((s,), None, N,
-                             n_inner=(2 if hier else 1))
-               for s in (67, 300, 129)]
-    cfg = AR.OneBitConfig(codec=codec, hierarchy=h)
-    key = jax.random.PRNGKey(5)
-    zs = [jax.random.normal(jax.random.fold_in(key, i),
-                            (N,) + lo.view_shape)
-          for i, lo in enumerate(layouts)]
-    efs = [jax.vmap(lambda _, lo=lo: AR.init_ef_state(lo))(jnp.arange(N))
-           for lo in layouts]
-
-    if hier:
-        comm = Comm(("pod", "data"))
-        lead = lambda x: x.reshape((2, 2) + x.shape[1:])
-        unlead = lambda x: x.reshape((N,) + x.shape[2:])
-        wrap = lambda f: jax.jit(lambda *a: jax.tree.map(unlead, jax.vmap(
-            jax.vmap(f, axis_name="data"), axis_name="pod")(
-                *jax.tree.map(lead, a))))
-    else:
-        comm = sim_comm("w")
-        wrap = lambda f: jax.jit(
-            lambda *a: jax.vmap(f, axis_name="w")(*a))
-
-    def seq(*flat):
-        z, ef = flat[:3], flat[3:]
-        outs, nefs = [], []
-        for zz, e, lo in zip(z, ef, layouts):
-            o, ne = AR.onebit_allreduce_view(comm, zz, e, lo, cfg)
-            outs.append(o)
-            nefs.append(ne)
-        return tuple(outs), tuple(nefs)
-
-    def pipe(*flat):
-        z, ef = flat[:3], flat[3:]
-        outs, nefs = AR.onebit_allreduce_buckets(comm, list(z), list(ef),
-                                                 layouts, cfg)
-        return tuple(outs), tuple(nefs)
-
-    rs = wrap(seq)(*zs, *efs)
-    rp = wrap(pipe)(*zs, *efs)
-    for a, b in zip(jax.tree.leaves(rs), jax.tree.leaves(rp)):
+def test_reverse_backward_per_leaf_bitwise(hier):
+    """Per-leaf exchanges are independent, so reversing the issue order
+    must not change a single bit of the trajectory."""
+    cfg = OptimizerConfig(name="zero_one_adam",
+                          hierarchy=Hierarchy(inner=2) if hier else None,
+                          **POLICIES)
+    xa, _ = _run(build_optimizer(cfg, PARAMS, n_workers=N), hier=hier)
+    xb, _ = _run(build_optimizer(
+        dataclasses.replace(cfg, pack_order="reverse_backward"),
+        PARAMS, n_workers=N), hier=hier)
+    for a, b in zip(jax.tree.leaves(xa), jax.tree.leaves(xb)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_reverse_backward_bucketed_identity_exact():
+    """Reverse packing recomposes the multi-leaf bucket (different member
+    order), but the identity codec's transport is elementwise-exact, so
+    the trajectory is bitwise the flat packing's."""
+    cfg = OptimizerConfig(name="zero_one_adam", codec="identity",
+                          bucket_mb=64.0, **POLICIES)
+    a = build_optimizer(cfg, PARAMS, n_workers=N)
+    b = build_optimizer(
+        dataclasses.replace(cfg, pack_order="reverse_backward"),
+        PARAMS, n_workers=N)
+    assert ([bk.members for bk in b.bucket_plan.buckets]
+            != [bk.members for bk in a.bucket_plan.buckets])
+    xa, _ = _run(a)
+    xb, _ = _run(b)
+    for l, r in zip(jax.tree.leaves(xa), jax.tree.leaves(xb)):
+        np.testing.assert_array_equal(np.asarray(l), np.asarray(r))
 
 
 # --------------------------------------------------------------------- #

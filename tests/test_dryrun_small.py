@@ -65,6 +65,71 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+SYNTH_HLO = textwrap.dedent("""\
+    HloModule synth
+
+    %body.1 (arg.1: (s32[], f32[4])) -> (s32[], f32[4]) {
+      %arg.1 = (s32[], f32[4]) parameter(0)
+      ROOT %tup.1 = (s32[], f32[4]) tuple(%arg.1)
+    }
+
+    %cond.1 (arg.2: (s32[], f32[4])) -> pred[] {
+      %arg.2 = (s32[], f32[4]) parameter(0)
+      %gte.0 = s32[] get-tuple-element(%arg.2), index=0
+      %big.0 = s32[] constant(32768)
+      %noise.0 = pred[] compare(%gte.0, %big.0), direction=NE
+      %bound.0 = s32[] constant(4)
+      ROOT %cmp.0 = pred[] compare(%gte.0, %bound.0), direction=LT
+    }
+
+    %body.2 (arg.3: (s32[], f32[4])) -> (s32[], f32[4]) {
+      %arg.3 = (s32[], f32[4]) parameter(0)
+      ROOT %tup.2 = (s32[], f32[4]) tuple(%arg.3)
+    }
+
+    %cond.2 (arg.4: (s32[], f32[4])) -> pred[] {
+      %arg.4 = (s32[], f32[4]) parameter(0)
+      %gte.1 = s32[] get-tuple-element(%arg.4), index=0
+      %bound.1 = s32[] constant(5)
+      ROOT %cmp.1 = pred[] compare(%gte.1, %bound.1), direction=LE
+    }
+
+    %body.3 (arg.5: (s32[], f32[4])) -> (s32[], f32[4]) {
+      %arg.5 = (s32[], f32[4]) parameter(0)
+      ROOT %tup.3 = (s32[], f32[4]) tuple(%arg.5)
+    }
+
+    %cond.3 (arg.6: (s32[], f32[4])) -> pred[] {
+      %arg.6 = (s32[], f32[4]) parameter(0)
+      %odd.0 = s32[] constant(7)
+      ROOT %root.3 = pred[] custom-call(%arg.6), custom_call_target="opaque"
+    }
+
+    ENTRY %main.1 (p.0: (s32[], f32[4])) -> (s32[], f32[4]) {
+      %p.0 = (s32[], f32[4]) parameter(0)
+      %w.1 = (s32[], f32[4]) while(%p.0), condition=%cond.1, body=%body.1
+      %w.2 = (s32[], f32[4]) while(%w.1), condition=%cond.2, body=%body.2
+      ROOT %w.3 = (s32[], f32[4]) while(%w.2), condition=%cond.3, body=%body.3
+    }
+""")
+
+
+def test_loop_multiplier_reads_compare_bound():
+    """The trip count comes from the loop-bound compare, not the largest
+    integer constant in the condition block: a microbatch scan whose cond
+    also materializes an unrelated schedule literal (constant(32768))
+    must scale its body 4x, not 32768x. LE bounds add one; conditions
+    with no parseable compare fall back to the legacy heuristic."""
+    from repro.launch.dryrun import _computation_blocks, _loop_multipliers
+    blocks = _computation_blocks(SYNTH_HLO)
+    assert {"body.1", "cond.1", "body.2", "cond.2", "body.3", "cond.3",
+            "main.1"} <= set(blocks)
+    mult = _loop_multipliers(SYNTH_HLO, blocks)
+    assert mult["body.1"] == 4       # direction=LT -> the bound itself
+    assert mult["body.2"] == 6       # direction=LE -> bound + 1
+    assert mult["body.3"] == 7       # no compare -> legacy max heuristic
+
+
 @pytest.mark.slow
 def test_reduced_mesh_dryrun():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,

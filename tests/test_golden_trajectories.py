@@ -103,14 +103,17 @@ def run_trajectory(name):
     return xs, state, np.asarray(trace, np.float64)
 
 
-def _flat_arrays(name):
-    xs, state, trace = run_trajectory(name)
+def _pack(xs, state, trace):
     out = {"trace": trace}
     for i, l in enumerate(jax.tree.leaves(xs)):
         out[f"param_{i}"] = np.asarray(l)
     for i, l in enumerate(jax.tree.leaves((state.err_w, state.err_s))):
         out[f"ef_{i}"] = np.asarray(l)
     return out
+
+
+def _flat_arrays(name):
+    return _pack(*run_trajectory(name))
 
 
 def golden_path(name):
@@ -143,13 +146,103 @@ def test_golden_trajectory(name):
                      f"--regen and justify it in the commit message."))
 
 
+# --------------------------------------------------------------------- #
+# Microbatched (gradient-accumulation) golden. The file on disk is
+# generated with ``peel=False`` — the sequential all-scanned accumulation,
+# i.e. the pre-overlap code path — while the test asserts the default
+# peeled path (``peel=True``). Bitwise equality against the committed bits
+# IS the proof that peeling the last microbatch out of the scan (the
+# overlap enabler in repro.train.step) changed nothing numerically.
+# --------------------------------------------------------------------- #
+
+MB = 2
+MB_NAME = "zero_one_adam_mb2"
+ROWS = 4      # per-worker batch rows: 2 per microbatch
+
+
+def _mb_batches(t):
+    """(N, ROWS) per-worker batch scalars, deterministic per step."""
+    return jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(23), t),
+                             (N, ROWS))
+
+
+def _mb_loss(params, batch):
+    """Elementwise quadratic pull toward a batch-dependent target — no
+    matmuls, so the golden stays BLAS-portable. The target differs per
+    microbatch, so the accumulation (and its association order) is
+    actually exercised."""
+    tgt = 0.01 * jnp.mean(batch) + 0.5
+    loss = sum(jnp.sum((x - tgt) ** 2) for x in jax.tree.leaves(params))
+    return loss, ()
+
+
+def run_mb_trajectory(peel):
+    from repro.train.step import accumulate_grads
+    opt = build_optimizer(CONFIGS["zero_one_adam"], PARAMS, n_workers=N)
+    comm = sim_comm("w")
+    state = jax.vmap(lambda _: opt.init(PARAMS))(jnp.arange(N))
+    xs = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (N,) + x.shape) + 0, PARAMS)
+
+    @jax.jit
+    def one(xs, state, b):
+        def worker(x, s, b_):
+            _, g = accumulate_grads(_mb_loss, x, b_, MB, peel=peel)
+            return opt.step(comm, x, g, s)
+
+        return jax.vmap(worker, axis_name="w")(xs, state, b)
+
+    trace = []
+    for t in range(STEPS):
+        xs, state, _ = one(xs, state, _mb_batches(t))
+        trace.append(float(np.sum(
+            [np.asarray(l, np.float64).sum()
+             for l in jax.tree.leaves(xs)])))
+    return xs, state, np.asarray(trace, np.float64)
+
+
+def test_golden_trajectory_mb2_peeled_bitwise():
+    path = golden_path(MB_NAME)
+    assert os.path.exists(path), (
+        f"missing golden file {path}; generate it with "
+        f"PYTHONPATH=src:tests python tests/test_golden_trajectories.py "
+        f"--regen {MB_NAME}")
+    got = _pack(*run_mb_trajectory(peel=True))
+    with np.load(path) as z:
+        want = {k: z[k] for k in z.files}
+    assert sorted(got) == sorted(want)
+    np.testing.assert_allclose(
+        got["trace"], want["trace"], rtol=0, atol=0,
+        err_msg=(f"{MB_NAME}: peeled accumulation drifted from the "
+                 f"sequential-scan golden — first bad step index "
+                 f"{int(np.argmax(got['trace'] != want['trace']))}"))
+    for k in sorted(want):
+        np.testing.assert_array_equal(
+            got[k], want[k],
+            err_msg=(f"{MB_NAME}: {k} drifted from the committed golden "
+                     f"(generated with peel=False). The peeled path must "
+                     f"stay bitwise-identical to the sequential scan."))
+
+
 if __name__ == "__main__":
     import sys
     if "--regen" not in sys.argv:
-        sys.exit("usage: python tests/test_golden_trajectories.py --regen")
+        sys.exit("usage: python tests/test_golden_trajectories.py --regen "
+                 "[name ...]")
+    only = [a for a in sys.argv[1:] if a != "--regen"]
     os.makedirs(GOLDEN_DIR, exist_ok=True)
     for name in sorted(CONFIGS):
+        if only and name not in only:
+            continue
         arrays = _flat_arrays(name)
         np.savez(golden_path(name), **arrays)
         print(f"wrote {golden_path(name)}: "
               f"{sorted(arrays)[:4]}... trace={arrays['trace'][-1]:.6f}")
+    if not only or MB_NAME in only:
+        # the microbatched golden is DELIBERATELY generated through the
+        # sequential (peel=False) accumulation; the test replays it with
+        # peel=True to pin the peeled path bitwise
+        arrays = _pack(*run_mb_trajectory(peel=False))
+        np.savez(golden_path(MB_NAME), **arrays)
+        print(f"wrote {golden_path(MB_NAME)} (peel=False): "
+              f"trace={arrays['trace'][-1]:.6f}")

@@ -1,17 +1,22 @@
 """End-to-end trainer integration: sim-mode 0/1 Adam on a real tiny LM
 (the paper's Fig. 2 setup at unit scale), microbatching equivalence,
-checkpoint roundtrip, data determinism.
+peeled (overlapped) vs sequential accumulation parity, checkpoint
+roundtrip, data determinism.
 """
+import dataclasses
 import os
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpointing import io as ckpt_io
 from repro.configs import get
-from repro.core import OptimizerConfig, schedules as S
+from repro.core import Hierarchy, OptimizerConfig, schedules as S
 from repro.data import DataConfig, SyntheticLM, worker_shard
 from repro.train import Trainer, TrainerConfig
+from repro.train.step import accumulate_grads
 
 OPT = OptimizerConfig(
     name="zero_one_adam",
@@ -59,6 +64,76 @@ def test_microbatch_grad_equivalence():
     for a, b in zip(jax.tree.leaves(p1n), jax.tree.leaves(p4n)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=5e-4, atol=5e-5)
+
+
+# Dense policies so a handful of steps cover local steps, compressed
+# syncs, and variance refreshes (same cadence as the golden suite).
+DENSE_OPT = OptimizerConfig(
+    name="zero_one_adam",
+    lr=S.ConstantLr(1e-2),
+    var_policy=S.AdaptiveFreezePolicy(kappa=2),
+    sync_policy=S.LrProportionalSyncPolicy(warmup_steps=2, double_every=3,
+                                           max_interval=4))
+
+
+def _sim_run(ocfg, peel, steps=6):
+    cfg = get("gpt2").smoke
+    tr = Trainer(cfg, ocfg, n_workers=4,
+                 trainer_cfg=TrainerConfig(micro_batches=2,
+                                           peel_last_microbatch=peel))
+    params, state = tr.sim_init(jax.random.PRNGKey(0))
+    fn = tr.sim_step_fn()
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=16,
+                                  global_batch=8, seed=11))
+    losses = []
+    for step in range(steps):
+        params, state, met = fn(params, state, data.batch(step))
+        losses.append(float(np.asarray(met["loss"]).reshape(-1)[0]))
+    return params, losses
+
+
+@pytest.mark.parametrize("pallas", [False, True])
+@pytest.mark.parametrize("hier", [False, True])
+def test_peeled_accumulation_bitwise(hier, pallas):
+    """The overlapped step (last microbatch peeled out of the scan, each
+    exchange unit issued under its own cond) must be BITWISE the
+    sequential all-scanned step, across flat/hierarchical topologies and
+    Pallas kernels on/off — the exchange schedule restructure may not
+    move a single bit of the trajectory."""
+    ocfg = dataclasses.replace(
+        DENSE_OPT, use_pallas=pallas,
+        hierarchy=Hierarchy(inner=2) if hier else None)
+    p_peel, l_peel = _sim_run(ocfg, peel=True)
+    p_seq, l_seq = _sim_run(ocfg, peel=False)
+    # the scalar loss *metric* sums every token's cross-entropy in one big
+    # reduction whose split XLA picks differently for the unrolled last
+    # microbatch — 1 f32 ulp of wobble. The trajectory itself (params,
+    # hence gradients and the whole exchange) must stay bitwise.
+    np.testing.assert_allclose(l_peel, l_seq, rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(p_peel), jax.tree.leaves(p_seq)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_micro_batches_validated_at_config():
+    with pytest.raises(ValueError, match="micro_batches must be >= 1"):
+        TrainerConfig(micro_batches=0)
+    with pytest.raises(ValueError, match="micro_batches must be >= 1"):
+        TrainerConfig(micro_batches=-3)
+
+
+def test_non_divisible_microbatch_split_names_both_numbers():
+    """A per-worker batch that does not split evenly must fail at step
+    construction with an error naming the offending leaf, its row count,
+    and the microbatch count — not an opaque reshape error."""
+    def loss(p, b):
+        return jnp.sum(p["w"]) * jnp.sum(b["tokens"]), ()
+
+    params = {"w": jnp.ones((3,))}
+    batch = {"tokens": jnp.zeros((5, 4))}
+    with pytest.raises(ValueError) as ei:
+        accumulate_grads(loss, params, batch, 3)
+    msg = str(ei.value)
+    assert "tokens" in msg and "5 rows" in msg and "micro_batches=3" in msg
 
 
 def _moe_losses(cfg):
