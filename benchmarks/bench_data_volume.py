@@ -32,8 +32,6 @@ def schedule_trace(opt_cfg, total_steps):
     sync, var = [], []
     sp = opt_cfg.sync_policy
     vp = opt_cfg.var_policy
-    s_state = tuple(int(np.asarray(x)) for x in sp.init())
-    v_state = vp.init()
     v_next, v_j, v_stop = 0, 0, False
     nxt = 0
     for t in range(total_steps):

@@ -1,0 +1,212 @@
+"""Serving-loop benchmark: publish bytes, refresh latency, batcher tok/s.
+
+Two record kinds, appended as JSONL with ``--json``:
+
+* ``serve_publish`` — per codec (qint8/qint4/identity): the declared wire
+  bytes of a delta refresh and a full snapshot over the bucketed publish
+  layout, against the full-f32 baseline push (structural — re-derived by
+  ``check_bench.py``), the modeled ``reduction_x`` ratio, and the measured
+  subscriber decode+apply latency (``refresh_ms_*``, wall-clock, not
+  gated). Reconstruction error across the delta cycle is printed so the
+  "bounded, non-accumulating" claim is a number, not a comment.
+* ``serve_throughput`` — a continuous-batching run over the scheduler with
+  a live Publisher→Subscriber refresh every ``--publish-every`` ticks:
+  structural counts (requests, slots, generated tokens, prefills) plus
+  measured tok/s and mean weight-swap latency.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve --json BENCH_serve.json
+    PYTHONPATH=src python -m benchmarks.bench_serve --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.models import transformer as T
+from repro.models.layers import init_params
+from repro.serve import (Publisher, PublishConfig, Request, Scheduler,
+                         Server, Subscriber)
+
+
+def _perturb(params, key, scale=1e-3):
+    """A deterministic fine-tuning-like drift of every leaf."""
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [
+        x + scale * jax.random.normal(k, x.shape, x.dtype)
+        for x, k in zip(leaves, keys)])
+
+
+def publish_records(arch, params, *, codecs, bucket_mb, n_chunks, cycles):
+    records = []
+    for name in codecs:
+        pc = PublishConfig(codec=name, bucket_mb=bucket_mb,
+                           n_chunks=n_chunks,
+                           snapshot_every=cycles + 1)
+        pub = Publisher(params, pc)
+        sub = Subscriber(params, pc)
+        u0 = pub.publish(params, step=0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(jax.tree.leaves(sub.apply(u0)))
+        snap_ms = (time.perf_counter() - t0) * 1e3
+        p, key = params, jax.random.PRNGKey(0)
+        delta_ms, errs = [], []
+        for t in range(1, cycles + 1):
+            key, k = jax.random.split(key)
+            p = _perturb(p, k)
+            u = pub.publish(p, step=t)
+            t0 = time.perf_counter()
+            got = sub.apply(u)
+            jax.block_until_ready(jax.tree.leaves(got))
+            delta_ms.append((time.perf_counter() - t0) * 1e3)
+            errs.append(max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                            zip(jax.tree.leaves(got), jax.tree.leaves(p))))
+        full = pub.wire.full_f32_bytes()
+        delta_bytes = pub.wire.wire_bytes("delta")
+        records.append({
+            "bench": "serve_publish", "arch": f"{arch}-smoke",
+            "codec": pub.wire.codec.name, "bucket_mb": bucket_mb,
+            "n_chunks": n_chunks, "cycles": cycles,
+            "n_buckets": u0.manifest["n_buckets"],
+            "full_f32_bytes": full,
+            "snapshot_bytes": pub.wire.wire_bytes("snapshot"),
+            "delta_bytes": delta_bytes,
+            "reduction_x": full / delta_bytes,
+            "refresh_ms_snapshot": snap_ms,
+            "refresh_ms_delta": (float(np.mean(delta_ms))
+                                 if delta_ms else snap_ms),
+            "max_abs_err": float(max(errs)) if errs else 0.0,
+        })
+    return records
+
+
+def serve_run(arch, params, *, slots, n_requests, prompt_len, gen,
+              max_seq, publish_every, codec, kv_quant):
+    cfg = get(arch).smoke
+    srv = Server(cfg, batch=slots, max_seq=max_seq,
+                 cache_dtype=jnp.float32)
+    pc = PublishConfig(codec=codec, bucket_mb=4.0)
+    pub, sub = Publisher(params, pc), Subscriber(params, pc)
+    sub.push(pub.publish(params, step=0))
+    sch = Scheduler(srv, params, subscriber=sub,
+                    kv_quant=kv_quant, kv_page=max_seq // 4)
+
+    def make_requests(tag):
+        key = jax.random.PRNGKey(42)
+        return [Request(rid=f"{tag}{i}",
+                        prompt=np.asarray(jax.random.randint(
+                            jax.random.fold_in(key, i), (prompt_len,), 0,
+                            cfg.vocab)).tolist(),
+                        max_new_tokens=gen)
+                for i in range(n_requests)]
+
+    sch.run(make_requests("warm"))          # compile warmup
+    for r in make_requests("run"):
+        sch.submit(r)
+    base = dict(sch.stats)
+    p, key, swap_ms = params, jax.random.PRNGKey(9), []
+    t0 = time.perf_counter()
+    ticks = 0
+    while not sch.idle:
+        if publish_every and ticks and ticks % publish_every == 0:
+            key, k = jax.random.split(key)
+            p = _perturb(p, k)
+            sub.push(pub.publish(p, step=ticks))
+            ts = time.perf_counter()
+            sch.tick()                      # swap happens at tick boundary
+            swap_ms.append((time.perf_counter() - ts) * 1e3)
+        else:
+            sch.tick()
+        ticks += 1
+    dt = time.perf_counter() - t0
+    generated = sch.stats["generated"] - base["generated"]
+    return {
+        "bench": "serve_throughput", "arch": f"{arch}-smoke",
+        "codec": codec, "kv_quant": kv_quant or "none",
+        "slots": slots, "n_requests": n_requests,
+        "prompt_len": prompt_len, "max_new_tokens": gen,
+        "generated": generated,
+        "prefills": sch.stats["prefills"] - base["prefills"],
+        "decode_ticks": sch.stats["decode_ticks"] - base["decode_ticks"],
+        "weight_swaps": sch.stats["weight_swaps"] - base["weight_swaps"],
+        "pages_quantized": sch.stats["pages_quantized"]
+        - base["pages_quantized"],
+        "tok_s": generated / dt,
+        "weight_swap_tick_ms": (float(np.mean(swap_ms))
+                                if swap_ms else 0.0),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2")
+    ap.add_argument("--codecs", nargs="*",
+                    default=["qint8", "qint4", "identity"])
+    ap.add_argument("--bucket-mb", type=float, default=4.0)
+    ap.add_argument("--n-chunks", type=int, default=16)
+    ap.add_argument("--cycles", type=int, default=10,
+                    help="delta publish/apply cycles per codec")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--publish-every", type=int, default=8,
+                    help="push a delta publish every N ticks (0 = never)")
+    ap.add_argument("--kv-quant", choices=["none", "qint8"],
+                    default="none")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI")
+    ap.add_argument("--json", default=None,
+                    help="append one JSONL record per point")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.cycles, args.requests, args.gen = 3, 3, 6
+        args.slots = min(args.slots, 2)
+
+    params = init_params(T.model_template(get(args.arch).smoke),
+                         jax.random.PRNGKey(0))
+    records = publish_records(
+        args.arch, params, codecs=args.codecs, bucket_mb=args.bucket_mb,
+        n_chunks=args.n_chunks, cycles=args.cycles)
+    print("# publish wire accounting — delta refresh vs full-f32 push")
+    print("codec,full_f32_bytes,delta_bytes,reduction_x,"
+          "refresh_ms_delta,max_abs_err")
+    for r in records:
+        print(f"{r['codec']},{r['full_f32_bytes']},{r['delta_bytes']},"
+              f"{r['reduction_x']:.2f},{r['refresh_ms_delta']:.1f},"
+              f"{r['max_abs_err']:.2e}")
+    q8 = next((r for r in records if r["codec"] == "qint8"), None)
+    if q8 is not None and q8["delta_bytes"] * 3 > q8["full_f32_bytes"]:
+        raise SystemExit(
+            f"qint8 delta refresh moves {q8['delta_bytes']} bytes — more "
+            f"than 1/3 of the full-f32 push ({q8['full_f32_bytes']})")
+
+    sr = serve_run(args.arch, params, slots=args.slots,
+                   n_requests=args.requests, prompt_len=args.prompt_len,
+                   gen=args.gen, max_seq=args.max_seq,
+                   publish_every=args.publish_every,
+                   codec="qint8",
+                   kv_quant=None if args.kv_quant == "none"
+                   else args.kv_quant)
+    records.append(sr)
+    print(f"# continuous batching: {sr['n_requests']} requests over "
+          f"{sr['slots']} slots -> {sr['generated']} tokens, "
+          f"{sr['tok_s']:.1f} tok/s, {sr['weight_swaps']} live weight "
+          f"swap(s), swap-tick {sr['weight_swap_tick_ms']:.1f} ms")
+
+    if args.json:
+        with open(args.json, "a") as f:
+            for rec in records:
+                f.write(json.dumps(rec) + "\n")
+    return records
+
+
+if __name__ == "__main__":
+    main()

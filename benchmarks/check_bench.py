@@ -1,15 +1,19 @@
 """CI guard for the committed benchmark snapshots.
 
 Re-derives the *cheap, deterministic* half of the committed
-``BENCH_fixed_cost.json`` / ``BENCH_throughput.json`` records — the
-structural comm accounting (DP leaves, exchange units, collectives per
-sync, bits per param) and the modeled latency/step-time/exposed-comm
-breakdown — and diffs them against the snapshots. Structural integer
-fields must match exactly; modeled floats within ``--rtol``. Measured
-wall-clock fields (``syncs_per_s``, ``step_ms``, and the
-measured-derived ``exposed_comm_ms_overlapped`` of the fixed-cost sweep)
-and the slow Fig.3 grid (``throughput_model`` records, which need full
-convergence sims) are not re-run and not compared.
+``BENCH_fixed_cost.json`` / ``BENCH_throughput.json`` /
+``BENCH_serve.json`` records — the structural comm accounting (DP
+leaves, exchange units, collectives per sync, bits per param), the
+publish wire accounting (full-f32 vs delta/snapshot bytes per refresh,
+bucket counts, scheduler slot accounting), and the modeled
+latency/step-time/exposed-comm breakdown — and diffs them against the
+snapshots. Structural integer fields must match exactly; modeled floats
+within ``--rtol``. Measured wall-clock fields (``syncs_per_s``,
+``step_ms``, the measured-derived ``exposed_comm_ms_overlapped`` of the
+fixed-cost sweep, and the serve bench's ``tok_s`` / ``refresh_ms_*`` /
+``weight_swap_tick_ms``) and the slow Fig.3 grid (``throughput_model``
+records, which need full convergence sims) are not re-run and not
+compared.
 
     PYTHONPATH=src python -m benchmarks.check_bench
 
@@ -18,18 +22,38 @@ intentional, regenerate the snapshots:
 
     python -m benchmarks.bench_fixed_cost --json BENCH_fixed_cost.json
     python -m benchmarks.bench_throughput --json BENCH_throughput.json
+    python -m benchmarks.bench_serve --json BENCH_serve.json
 """
 import argparse
 import json
 import sys
 from pathlib import Path
 
-STRUCTURAL = ("dp_leaves", "exchange_units", "collectives_per_sync")
+STRUCTURAL = {
+    "fixed_cost_buckets": ("dp_leaves", "exchange_units",
+                           "collectives_per_sync"),
+    "throughput_buckets": ("dp_leaves", "exchange_units",
+                           "collectives_per_sync"),
+    "serve_publish": ("n_buckets", "full_f32_bytes", "snapshot_bytes",
+                      "delta_bytes"),
+    "serve_throughput": ("generated", "prefills", "decode_ticks"),
+}
 MODELED = {"fixed_cost_buckets": ("bits_per_param_sync", "sync_comm_ms"),
            "throughput_buckets": ("sync_latency_floor_ms",
                                   "sync_comm_ms", "step_ms_sequential",
                                   "step_ms_overlapped",
-                                  "exposed_comm_ms_overlapped")}
+                                  "exposed_comm_ms_overlapped"),
+           "serve_publish": ("reduction_x",),
+           "serve_throughput": ()}
+#: field(s) identifying one record within its kind
+KEY = {"fixed_cost_buckets": ("bucket_mb",),
+       "throughput_buckets": ("bucket_mb",),
+       "serve_publish": ("codec",),
+       "serve_throughput": ("slots", "n_requests", "max_new_tokens")}
+
+
+def _key(kind, rec):
+    return json.dumps([rec[f] for f in KEY[kind]])
 
 
 def _load(path):
@@ -64,7 +88,7 @@ def _fresh_fixed_cost(snapshot):
         opt = build_optimizer(ocfg, shapes, specs=specs,
                               n_workers=rec["workers"])
         acct = comm_accounting(opt)
-        out[json.dumps(mb)] = {
+        out[_key("fixed_cost_buckets", rec)] = {
             "dp_leaves": int(acct["dp_leaves"]),
             "exchange_units": int(acct["exchange_units"]),
             "collectives_per_sync": int(acct["collectives_per_sync"]),
@@ -84,18 +108,77 @@ def _fresh_throughput(snapshot):
     workers = snapshot[0]["workers"]
     fresh = bucket_latency_sweep(arch=arch, workers=workers,
                                  bucket_mbs=tuple(mbs))
-    return {json.dumps(r["bucket_mb"]): r for r in fresh}
+    return {_key("throughput_buckets", r): r for r in fresh}
+
+
+def _fresh_serve_publish(snapshot):
+    """Re-derive the publish wire accounting from the abstract parameter
+    tree alone — byte counts are a pure function of (arch, codec, layout
+    geometry), no parameters materialized."""
+    import jax.numpy as jnp
+    from repro.configs import get
+    from repro.models import transformer as T
+    from repro.models.layers import abstract_params
+    from repro.serve import Publisher, PublishConfig
+
+    out = {}
+    for rec in snapshot:
+        arch = rec["arch"].removesuffix("-smoke")
+        abstract = abstract_params(T.model_template(get(arch).smoke),
+                                   jnp.float32)
+        pc = PublishConfig(codec=rec["codec"], bucket_mb=rec["bucket_mb"],
+                           n_chunks=rec["n_chunks"])
+        wire = Publisher(abstract, pc).wire
+        full = wire.full_f32_bytes()
+        delta = wire.wire_bytes("delta")
+        out[_key("serve_publish", rec)] = {
+            "n_buckets": len(wire.bp.buckets),
+            "full_f32_bytes": full,
+            "snapshot_bytes": wire.wire_bytes("snapshot"),
+            "delta_bytes": delta,
+            "reduction_x": full / delta,
+        }
+    return out
+
+
+def _fresh_serve_throughput(snapshot):
+    """Replay the scheduler's slot accounting (admit -> batched decode ->
+    evict, uniform budgets, no EOS) in pure python — tick/prefill/token
+    counts are deterministic in (slots, n_requests, max_new_tokens)."""
+    out = {}
+    for rec in snapshot:
+        slots, queue = rec["slots"], rec["n_requests"]
+        gen = rec["max_new_tokens"]
+        rem = [0] * slots
+        prefills = decode_ticks = generated = 0
+        while queue or any(rem):
+            for s in range(slots):
+                if rem[s] == 0 and queue:
+                    queue -= 1
+                    prefills += 1
+                    generated += 1          # first token from prefill
+                    rem[s] = gen - 1
+            active = [s for s in range(slots) if rem[s] > 0]
+            if active:
+                decode_ticks += 1
+                for s in active:
+                    generated += 1
+                    rem[s] -= 1
+        out[_key("serve_throughput", rec)] = {
+            "generated": generated, "prefills": prefills,
+            "decode_ticks": decode_ticks}
+    return out
 
 
 def _diff(kind, snapshot, fresh, rtol, problems):
     for rec in snapshot:
-        key = json.dumps(rec["bucket_mb"])
-        label = f"{kind}[bucket_mb={rec['bucket_mb']}]"
+        key = _key(kind, rec)
+        label = f"{kind}[{key}]"
         f = fresh.get(key)
         if f is None:
             problems.append(f"{label}: no fresh record")
             continue
-        for field in STRUCTURAL:
+        for field in STRUCTURAL[kind]:
             if int(rec[field]) != int(f[field]):
                 problems.append(f"{label}.{field}: snapshot {rec[field]} "
                                 f"!= fresh {f[field]}")
@@ -112,6 +195,7 @@ def main(argv=None) -> int:
     ap.add_argument("--fixed", default=str(root / "BENCH_fixed_cost.json"))
     ap.add_argument("--throughput",
                     default=str(root / "BENCH_throughput.json"))
+    ap.add_argument("--serve", default=str(root / "BENCH_serve.json"))
     ap.add_argument("--rtol", type=float, default=0.05,
                     help="relative tolerance for modeled float fields")
     args = ap.parse_args(argv)
@@ -133,9 +217,31 @@ def main(argv=None) -> int:
         _diff("throughput_buckets", tput,
               _fresh_throughput(tput), args.rtol, problems)
 
+    serve = _load(args.serve)
+    pub = [r for r in serve if r["bench"] == "serve_publish"]
+    if not pub:
+        problems.append(f"{args.serve}: no serve_publish records")
+    else:
+        _diff("serve_publish", pub, _fresh_serve_publish(pub),
+              args.rtol, problems)
+        q8 = next((r for r in pub if r["codec"] == "qint8"), None)
+        if q8 is None:
+            problems.append(f"{args.serve}: no qint8 serve_publish record")
+        elif q8["delta_bytes"] * 3 > q8["full_f32_bytes"]:
+            problems.append(
+                f"serve_publish[qint8]: delta refresh {q8['delta_bytes']} "
+                f"bytes exceeds 1/3 of the full-f32 push "
+                f"({q8['full_f32_bytes']})")
+    sthr = [r for r in serve if r["bench"] == "serve_throughput"]
+    if not sthr:
+        problems.append(f"{args.serve}: no serve_throughput records")
+    else:
+        _diff("serve_throughput", sthr, _fresh_serve_throughput(sthr),
+              args.rtol, problems)
+
     for p in problems:
         print(f"BENCH DRIFT: {p}")
-    n = len(fixed) + len(tput)
+    n = len(fixed) + len(tput) + len(pub) + len(sthr)
     print(f"check_bench: {n} snapshot records checked, "
           f"{len(problems)} problem(s)")
     return 1 if problems else 0

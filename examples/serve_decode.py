@@ -1,8 +1,15 @@
-"""Batched serving: prefill a prompt batch, then decode tokens step by step
-with the KV cache (the decode_32k path at CPU scale).
+"""Continuous-batching serving: admit a handful of requests into the slot
+scheduler, decode them to completion, and absorb a live codec-compressed
+weight refresh mid-stream (the training->serving loop of serve/publish.py
++ serve/scheduler.py).
 
     PYTHONPATH=src python examples/serve_decode.py
+
+``REPRO_EXAMPLE_STEPS`` caps the per-request new-token budget so CI can
+smoke this in seconds (the default exercises slot reuse: more requests
+than slots, staggered lengths).
 """
+import os
 import time
 
 import jax
@@ -12,29 +19,50 @@ import numpy as np
 from repro.configs import get
 from repro.models import transformer as T
 from repro.models.layers import init_params
-from repro.serve import Server
+from repro.serve import (Publisher, PublishConfig, Request, Scheduler,
+                         Server, Subscriber)
+
+GEN = int(os.environ.get("REPRO_EXAMPLE_STEPS", "12"))
 
 cfg = get("chatglm3-6b").smoke
-B, PROMPT, GEN, MAXSEQ = 4, 12, 20, 64
+SLOTS, REQUESTS, PROMPT, MAXSEQ = 3, 5, 10, 64
 
 params = init_params(T.model_template(cfg), jax.random.PRNGKey(0))
-srv = Server(cfg, batch=B, max_seq=MAXSEQ, cache_dtype=jnp.float32)
-prefill = srv.prefill_fn()
-decode = srv.decode_fn()
+srv = Server(cfg, batch=SLOTS, max_seq=MAXSEQ, cache_dtype=jnp.float32)
 
-prompt = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 0, cfg.vocab)
-cache = T.init_cache(cfg, B, MAXSEQ, dtype=jnp.float32)
-logits, cache = prefill(params, {"tokens": prompt}, cache)
-tok = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1)[:, None]
+# trainer-side publisher + replica-side subscriber: the scheduler swaps
+# weights at a tick boundary whenever a fresh payload is pending
+pc = PublishConfig(codec="qint8", bucket_mb=4.0)
+pub, sub = Publisher(params, pc), Subscriber(params, pc)
+sub.push(pub.publish(params, step=0))          # initial full snapshot
+sch = Scheduler(srv, params, subscriber=sub)
 
-out = [tok]
+key = jax.random.PRNGKey(1)
+reqs = [Request(rid=i,
+                prompt=np.asarray(jax.random.randint(
+                    jax.random.fold_in(key, i), (PROMPT + i,), 0,
+                    cfg.vocab)).tolist(),
+                max_new_tokens=GEN)
+        for i in range(REQUESTS)]
+for r in reqs:
+    sch.submit(r)
+
 t0 = time.time()
-for i in range(GEN):
-    logits, cache = decode(params, cache, tok, jnp.int32(PROMPT + i))
-    tok = jnp.argmax(logits[:, 0, :cfg.vocab], axis=-1)[:, None]
-    out.append(tok)
+ticks = 0
+while not sch.idle:
+    if ticks == 2:   # a fine-tuning step lands mid-serve: delta publish
+        tuned = jax.tree.map(lambda x: x * (1.0 + 1e-3), params)
+        sub.push(pub.publish(tuned, step=1))
+    sch.tick()
+    ticks += 1
 dt = time.time() - t0
-toks = np.concatenate([np.asarray(t) for t in out], axis=1)
-print(f"prompt shape {prompt.shape} -> generated {GEN} tokens/seq")
-print(f"decode throughput: {B*GEN/dt:.1f} tok/s (CPU, interpret-grade)")
-print("generated ids (batch 0):", toks[0].tolist())
+
+for r in reqs:
+    print(f"req {r.rid} (prompt {len(r.prompt)}): {r.output}")
+s = sch.stats
+print(f"{s['generated']} tokens over {SLOTS} slots in {dt:.2f}s "
+      f"({s['generated'] / dt:.1f} tok/s, CPU, interpret-grade); "
+      f"{s['prefills']} prefills, {s['decode_ticks']} decode ticks, "
+      f"{s['weight_swaps']} live weight swap(s)")
+assert all(r.done and len(r.output) == GEN for r in reqs)
+assert s["weight_swaps"] >= 1

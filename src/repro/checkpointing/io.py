@@ -26,7 +26,11 @@ import numpy as np
 FORMAT_VERSION = 2
 
 
-def _leaf_paths(tree) -> list:
+def leaf_paths(tree) -> list:
+    """Per-leaf tree-path strings in flatten order — the structural
+    fingerprint both the checkpoint manifest (v2) and the weight-publish
+    manifest (serve/publish.py) embed, so a mismatched tree is named by
+    path, not position."""
     paths_and_leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
     return [jax.tree_util.keystr(path) for path, _ in paths_and_leaves]
 
@@ -41,7 +45,7 @@ def save(path: str, tree: Any, step: int = 0, meta: Dict | None = None):
         "meta": meta or {},
         "treedef": str(treedef),
         "n_leaves": len(leaves),
-        "leaf_paths": _leaf_paths(tree),
+        "leaf_paths": leaf_paths(tree),
         "leaf_shapes": [list(a.shape) for a in ordered],
         "leaf_dtypes": [str(a.dtype) for a in ordered],
     }
@@ -74,7 +78,7 @@ def restore(path: str, like: Any) -> Tuple[Any, int, Dict]:
                 f"checkpoint {path!r} has format version {version}; this "
                 f"build reads up to version {FORMAT_VERSION}")
         leaves_like, treedef = jax.tree.flatten(like)
-        like_paths = _leaf_paths(like)
+        like_paths = leaf_paths(like)
         if manifest["n_leaves"] != len(leaves_like):
             raise ValueError(
                 f"checkpoint has {manifest['n_leaves']} leaves, expected "

@@ -79,7 +79,6 @@ def moe_forward(p, x, *, top_k, n_experts, capacity_factor, comm=None,
     B, S, d = x.shape
     T = B * S
     xf = x.reshape(T, d)
-    n_local = n_experts
     n_workers = 1
     if comm is not None:
         n_workers = comm.size()

@@ -60,7 +60,6 @@ def _causal_conv(x, w):
 
 def _conv_step(x_t, conv_state, w):
     """x_t (B, C); conv_state (B, K-1, C). Returns (y, new_state)."""
-    K = w.shape[0]
     cat = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
     y = jnp.einsum("bkc,kc->bc", cat, w)
     return y, cat[:, 1:]

@@ -265,7 +265,6 @@ def _decoder_scan_window_decode(params, cfg: ModelConfig, h, positions,
     sliding layers ring-write their (L, B, W) stack slice; the few global
     layers dynamic-index a compact (G, B, S) stack carried through the scan
     (same pattern as the zamba2 shared-attention cache)."""
-    n = cfg.n_layers
     flags = _layer_flags(cfg)               # 1 = sliding, 0 = global
 
     def body(carry, xs):

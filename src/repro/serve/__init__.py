@@ -1,3 +1,8 @@
 from repro.serve.engine import Server
+from repro.serve.publish import (Publisher, PublishConfig, Subscriber,
+                                 WeightUpdate, load_update, save_update)
+from repro.serve.scheduler import Request, Scheduler
 
-__all__ = ["Server"]
+__all__ = ["Server", "Publisher", "PublishConfig", "Subscriber",
+           "WeightUpdate", "load_update", "save_update",
+           "Request", "Scheduler"]

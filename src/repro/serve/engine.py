@@ -81,11 +81,8 @@ class Server:
         return jax.tree.map(f, self.template, is_leaf=is_pd)
 
     def abstract_params(self, dtype=jnp.bfloat16):
-        n = self.n_workers
-
         def f(pd):
-            shape = list(pd.shape)
-            return jax.ShapeDtypeStruct(tuple(shape), dtype)
+            return jax.ShapeDtypeStruct(tuple(pd.shape), dtype)
 
         return jax.tree.map(f, self.template, is_leaf=is_pd)
 

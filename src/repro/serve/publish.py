@@ -1,0 +1,440 @@
+"""Codec-compressed delta weight publishing: trainer -> serving replicas.
+
+The training side compresses its wire with the five :mod:`repro.core.codecs`
+formats over bucketed flat layouts; this module reuses that exact machinery
+to close the training->serving loop. A :class:`Publisher` snapshots trainer
+parameters onto the bucketed flat layouts of
+:func:`repro.core.bucketing.make_bucket_plan`, delta-encodes them against
+the **last published anchor** — the same anchor discipline ``compressed_dp``
+maintains for Algorithm-1 parameter recovery — and emits codec-compressed
+payloads; a :class:`Subscriber` on the serving replica decodes payload +
+anchor back into the engine's parameter tree, so a continuous-fine-tuning
+trainer can refresh serving weights at a fraction of a full-f32 push.
+
+Anchor / delta semantics (the EF discipline, applied to deployment):
+
+* the publisher keeps ``anchor[k]`` = the exact buffer the subscriber holds
+  for bucket ``k`` — both sides advance it by ``codec.decode(payload)``, the
+  *same* floats, so publisher and subscriber can never drift apart;
+* a **delta** publish encodes ``params - anchor``; the codec's quantization
+  error is *not* lost — it is simply still present in the next delta
+  (``params - anchor`` includes it), so reconstruction error is bounded by
+  one quantization step of the *current* delta's scale and never
+  accumulates across publishes;
+* **snapshot** publishes (the first publish, every
+  ``snapshot_every``-th one, or ``force_snapshot=True``) ship the raw f32
+  buffers and reset the anchor to the exact parameters, bounding drift by
+  construction. Exact codecs (``identity``: ``needs_ef=False``) always ship
+  full buffers — a lossless delta would cost the same bytes as the
+  snapshot, so there is nothing to delta-encode.
+
+Every publish carries a **manifest** (format-versioned like the checkpoint
+manifest v2, same leaf-path fingerprint via
+:func:`repro.checkpointing.io.leaf_paths`): wire-layout geometry (codec,
+``n_chunks``, ``bucket_mb``, ``pack_order``, ``scale_mode``, bucket count),
+the per-leaf tree paths/shapes/dtypes of the parameter tree, the publish
+sequence number and the anchor sequence a delta applies to. A subscriber
+validates every field against its own plan before touching state, so a
+stale delta, a different codec, or a different model fails loudly naming
+the offending field — never a silent wrong-weights load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpointing.io import leaf_paths
+from repro.core import bucketing as B
+from repro.core import compressor as C
+from repro.core.codecs import Codec, IdentityCodec, make_codec
+from repro.core.leafwise import make_plan
+
+PUBLISH_FORMAT_VERSION = 1
+
+#: bucket budget that degenerates to one (fused) bucket per leaf — the
+#: "flat" per-leaf wire layout (budget computes to 1 element)
+_PER_LEAF_MB = 2.0 ** -22
+
+#: manifest fields a Subscriber must agree on before applying anything
+_LAYOUT_FIELDS = ("codec", "codec_arg", "scale_mode", "n_chunks",
+                  "bucket_mb", "pack_order", "n_buckets",
+                  "leaf_shapes", "leaf_dtypes")
+
+
+@dataclasses.dataclass(frozen=True)
+class PublishConfig:
+    """Wire-layout + cadence knobs shared by Publisher and Subscriber.
+
+    ``n_chunks`` plays the role the worker count plays in training layouts:
+    the bucket buffer is viewed as ``(n_chunks, bucket_elems/n_chunks)`` and
+    codec scale granularity is per chunk row — more chunks, tighter scales,
+    a few more scale bytes. ``bucket_mb=None`` keeps one bucket per leaf.
+    """
+
+    codec: Any = "qint8"
+    codec_arg: Optional[float] = None
+    scale_mode: str = "chunk"
+    n_chunks: int = 16
+    bucket_mb: Optional[float] = 4.0
+    pack_order: str = "flat"
+    snapshot_every: int = 16     # every k-th publish is a full snapshot
+
+    def __post_init__(self):
+        make_codec(self.codec, self.codec_arg)   # fail fast on bad names
+        C.validate_scale_mode(self.scale_mode)
+        if self.n_chunks < 1:
+            raise ValueError(f"n_chunks must be >= 1, got {self.n_chunks}")
+        if self.bucket_mb is not None and self.bucket_mb <= 0:
+            raise ValueError(
+                f"bucket_mb must be positive or None, got {self.bucket_mb}")
+        if self.snapshot_every < 1:
+            raise ValueError(
+                f"snapshot_every must be >= 1, got {self.snapshot_every}")
+
+    def make_codec(self) -> Codec:
+        return make_codec(self.codec, self.codec_arg)
+
+
+@dataclasses.dataclass
+class WeightUpdate:
+    """One published refresh: manifest + per-bucket payload trees."""
+
+    manifest: Dict[str, Any]
+    payloads: List[Dict[str, np.ndarray]]
+
+    @property
+    def kind(self) -> str:
+        return self.manifest["kind"]
+
+    @property
+    def seq(self) -> int:
+        return int(self.manifest["seq"])
+
+    def nbytes(self) -> int:
+        return int(sum(a.nbytes for p in self.payloads
+                       for a in p.values()))
+
+
+class _WirePlan:
+    """The shared publisher/subscriber view of one parameter tree: a
+    :class:`~repro.core.leafwise.LeafPlan` with ``n_chunks`` chunk rows and
+    a bucket plan over it. Pure function of (abstract tree, config) — both
+    sides derive it independently and the manifest proves they agree."""
+
+    def __init__(self, abstract_params, cfg: PublishConfig):
+        self.cfg = cfg
+        self.abstract = abstract_params
+        self.plan = make_plan(abstract_params, None, None, cfg.n_chunks)
+        self.bp = B.make_bucket_plan(
+            self.plan, cfg.bucket_mb if cfg.bucket_mb else _PER_LEAF_MB,
+            pack_order=cfg.pack_order)
+        self.codec = cfg.make_codec()
+        self.leaf_dtypes = [np.dtype(l.dtype) for l in self.plan.leaves]
+        self.masks = [C.pad_mask(b.layout) for b in self.bp.buckets]
+
+    # -------------------------------------------------------------- #
+    def bucketize(self, params) -> List[jnp.ndarray]:
+        """Parameter tree -> per-bucket f32 view buffers."""
+        leaves = self.plan.flat(params)
+        bufs = []
+        for b in self.bp.buckets:
+            views = [C.to_view(leaves[i].astype(jnp.float32),
+                               self.plan.layouts[i]) for i in b.members]
+            bufs.append(B.gather_views(b, views))
+        return bufs
+
+    def unbucketize(self, bufs: List[jnp.ndarray]):
+        """Per-bucket buffers -> parameter tree (leaf dtypes restored)."""
+        leaves = [None] * len(self.plan.leaves)
+        for b, buf in zip(self.bp.buckets, bufs):
+            layouts = [self.plan.layouts[i] for i in b.members]
+            for i, v in zip(b.members, B.scatter_views(b, buf, layouts)):
+                leaves[i] = C.from_view(v, self.plan.layouts[i]).astype(
+                    self.leaf_dtypes[i])
+        return jax.tree.unflatten(self.plan.treedef, leaves)
+
+    # -------------------------------------------------------------- #
+    def manifest_base(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        return {
+            "version": PUBLISH_FORMAT_VERSION,
+            "codec": self.codec.name,
+            "codec_arg": cfg.codec_arg,
+            "scale_mode": cfg.scale_mode,
+            "n_chunks": cfg.n_chunks,
+            "bucket_mb": cfg.bucket_mb,
+            "pack_order": cfg.pack_order,
+            "n_buckets": len(self.bp.buckets),
+            "leaf_paths": leaf_paths(self.abstract),
+            "leaf_shapes": [list(l.shape) for l in self.plan.leaves],
+            "leaf_dtypes": [str(np.dtype(l.dtype))
+                            for l in self.plan.leaves],
+        }
+
+    def advance_anchors(self, anchors, payloads, kind: str):
+        """Advance the anchor buffers by one applied update.
+
+        Eager on purpose: Publisher and Subscriber both step their anchors
+        through this exact op-by-op sequence. Inside ``jit`` the compiler
+        may contract ``anchor + q * s`` into an FMA, and whether it does
+        depends on the surrounding graph — so a jitted publisher-side
+        advance and an eager subscriber-side one end up an ulp apart, and
+        the bitwise lockstep the delta scheme relies on is gone."""
+        if kind == "snapshot":
+            return [jnp.asarray(p["values"]) for p in payloads]
+        return [anchor + self.codec.decode(
+                    {k: jnp.asarray(v) for k, v in p.items()}, b.layout)
+                for anchor, p, b in zip(anchors, payloads, self.bp.buckets)]
+
+    def wire_bytes(self, kind: str) -> int:
+        """Declared bytes of one publish: per-chunk codec bytes summed over
+        every bucket's chunk rows (``codec.wire_bytes`` is per chunk, the
+        same accounting the training exchange uses)."""
+        codec = IdentityCodec() if kind == "snapshot" else self.codec
+        total = 0
+        for b in self.bp.buckets:
+            wb = codec.wire_bytes(b.layout, self.cfg.scale_mode)
+            total += wb["scatter"] * b.layout.n
+        return int(total)
+
+    def full_f32_bytes(self) -> int:
+        """Cost of the uncompressed baseline: pushing every true parameter
+        element at f32 (no padding — the raw tree, not the wire view)."""
+        return 4 * int(sum(b.true_elems for b in self.bp.buckets))
+
+
+def _validate_manifest(mine: Dict[str, Any], theirs: Dict[str, Any]):
+    """First mismatched field raises, naming it (and the leaf path when the
+    mismatch is inside the per-leaf fingerprint)."""
+    if theirs.get("version", 0) > PUBLISH_FORMAT_VERSION:
+        raise ValueError(
+            f"publish manifest field 'version': payload has "
+            f"{theirs.get('version')}, this build reads up to "
+            f"{PUBLISH_FORMAT_VERSION}")
+    if mine["leaf_paths"] != theirs.get("leaf_paths"):
+        a, b = mine["leaf_paths"], theirs.get("leaf_paths") or []
+        for i in range(max(len(a), len(b))):
+            pa = a[i] if i < len(a) else "<missing>"
+            pb = b[i] if i < len(b) else "<missing>"
+            if pa != pb:
+                raise ValueError(
+                    f"publish manifest field 'leaf_paths': leaf {i} is "
+                    f"{pb!r} in the payload but {pa!r} on the subscriber "
+                    f"— parameter trees diverge")
+    for f in _LAYOUT_FIELDS:
+        if mine[f] != theirs.get(f):
+            detail = ""
+            if f in ("leaf_shapes", "leaf_dtypes"):
+                for i, (x, y) in enumerate(zip(mine[f], theirs.get(f))):
+                    if x != y:
+                        detail = (f" (leaf {mine['leaf_paths'][i]!r}: "
+                                  f"payload {y} != subscriber {x})")
+                        break
+            raise ValueError(
+                f"publish manifest field {f!r}: payload has "
+                f"{theirs.get(f)!r}, subscriber expects {mine[f]!r}{detail}")
+
+
+class Publisher:
+    """Trainer-side: turn parameter trees into :class:`WeightUpdate`s.
+
+    Stateful — owns the published-anchor buffers. One Publisher feeds any
+    number of subscribers as long as they all apply every update in
+    sequence (the manifest's ``seq``/``anchor_seq`` enforce it).
+    """
+
+    def __init__(self, params_like, cfg: PublishConfig = PublishConfig()):
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x),
+                                           jnp.result_type(x)), params_like)
+        self.wire = _WirePlan(abstract, cfg)
+        self.cfg = cfg
+        self._anchor: Optional[List[jnp.ndarray]] = None
+        self._seq = 0
+        self._encode = jax.jit(self._encode_impl, static_argnames=("kind",))
+
+    # -------------------------------------------------------------- #
+    def _encode_impl(self, params, anchors, *, kind: str):
+        wire = self.wire
+        bufs = wire.bucketize(params)
+        if kind == "snapshot":
+            return [{"values": buf} for buf in bufs]
+        codec = wire.codec
+        payloads = []
+        for buf, anchor, bkt, mask in zip(bufs, anchors, wire.bp.buckets,
+                                          wire.masks):
+            delta = buf - anchor
+            payload, _ = codec.encode_worker(
+                delta, jnp.zeros_like(delta), bkt.layout,
+                wire.cfg.scale_mode, mask)
+            payloads.append(payload)
+        return payloads
+
+    def publish(self, params, step: int = 0,
+                force_snapshot: bool = False) -> WeightUpdate:
+        """Encode the current parameters as the next update in sequence."""
+        exact = not self.wire.codec.needs_ef
+        kind = "snapshot" if (exact or force_snapshot
+                              or self._anchor is None
+                              or self._seq % self.cfg.snapshot_every == 0
+                              ) else "delta"
+        payloads = self._encode(
+            params, self._anchor if kind == "delta" else None, kind=kind)
+        payloads = [
+            {k: np.asarray(v) for k, v in p.items()} for p in payloads]
+        # advance the anchor by the *decoded emitted payload* — through
+        # the same (eager) op sequence the subscriber runs, so the two
+        # sides hold bitwise-identical anchors and the codec's
+        # quantization error survives into the next delta instead of
+        # being lost
+        self._anchor = self.wire.advance_anchors(self._anchor, payloads,
+                                                 kind)
+        manifest = self.wire.manifest_base()
+        manifest.update(kind=kind, seq=self._seq,
+                        anchor_seq=self._seq - 1 if kind == "delta" else None,
+                        step=int(step),
+                        payload_bytes=self.wire.wire_bytes(kind))
+        self._seq += 1
+        update = WeightUpdate(manifest=manifest, payloads=payloads)
+        if update.nbytes() != manifest["payload_bytes"]:
+            raise AssertionError(
+                f"publish wire accounting drift: payload arrays carry "
+                f"{update.nbytes()} bytes, codec.wire_bytes declares "
+                f"{manifest['payload_bytes']}")
+        return update
+
+    @property
+    def seq(self) -> int:
+        return self._seq
+
+
+class Subscriber:
+    """Replica-side: decode :class:`WeightUpdate`s into parameter trees.
+
+    ``push`` is the transport stub (in-process queue); a deployment would
+    feed ``apply``/``push`` from its pub-sub bus. ``shardings`` (e.g. the
+    engine's ``param_shardings()``) places decoded leaves directly into the
+    serving layout — the engine's compiled ``prefill_fn``/``decode_fn``
+    never recompile on a weight refresh, because shapes, dtypes, and
+    shardings are exactly those they were compiled for.
+    """
+
+    def __init__(self, params_like, cfg: PublishConfig = PublishConfig(),
+                 shardings=None):
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x),
+                                           jnp.result_type(x)), params_like)
+        self.wire = _WirePlan(abstract, cfg)
+        self.cfg = cfg
+        self.shardings = shardings
+        self._anchor: Optional[List[jnp.ndarray]] = None
+        self._seq: Optional[int] = None
+        self._pending: List[WeightUpdate] = []
+        self._applied = 0
+
+    # ------------------------------------------------------------------ #
+    def push(self, update: WeightUpdate):
+        self._pending.append(update)
+
+    def has_pending(self) -> bool:
+        return bool(self._pending)
+
+    def apply_pending(self):
+        """Apply every queued update in order; returns the final tree (or
+        None if nothing was queued)."""
+        params = None
+        while self._pending:
+            params = self.apply(self._pending.pop(0))
+        return params
+
+    # ------------------------------------------------------------------ #
+    def _validate(self, manifest: Dict[str, Any]):
+        _validate_manifest(self.wire.manifest_base(), manifest)
+        kind = manifest.get("kind")
+        if kind not in ("snapshot", "delta"):
+            raise ValueError(
+                f"publish manifest field 'kind': {kind!r} is not "
+                f"'snapshot' or 'delta'")
+        if kind == "delta":
+            if self._anchor is None:
+                raise ValueError(
+                    "publish manifest field 'anchor_seq': got a delta "
+                    "update but this subscriber holds no anchor yet "
+                    "(no snapshot has been applied)")
+            if manifest.get("anchor_seq") != self._seq:
+                raise ValueError(
+                    f"publish manifest field 'anchor_seq': delta applies "
+                    f"to anchor seq {manifest.get('anchor_seq')!r} but "
+                    f"this subscriber is at seq {self._seq!r} — updates "
+                    f"must be applied in publish order")
+
+    def apply(self, update: WeightUpdate):
+        """Validate + decode one update; returns the full parameter tree."""
+        self._validate(update.manifest)
+        nbytes = int(sum(a.nbytes for p in update.payloads
+                         for a in p.values()))
+        if nbytes != update.manifest["payload_bytes"]:
+            raise ValueError(
+                f"publish manifest field 'payload_bytes': declares "
+                f"{update.manifest['payload_bytes']} but payload arrays "
+                f"carry {nbytes} — truncated or tampered update")
+        wire = self.wire
+        self._anchor = wire.advance_anchors(self._anchor, update.payloads,
+                                            update.kind)
+        self._seq = update.seq
+        self._applied += 1
+        params = wire.unbucketize(self._anchor)
+        if self.shardings is not None:
+            params = jax.device_put(params, self.shardings)
+        return params
+
+    @property
+    def seq(self) -> Optional[int]:
+        return self._seq
+
+    @property
+    def applied(self) -> int:
+        return self._applied
+
+
+# ---------------------------------------------------------------------------
+# File transport (same atomic-npz idiom as checkpointing.io)
+# ---------------------------------------------------------------------------
+
+def save_update(path: str, update: WeightUpdate):
+    """Serialize one update to an npz (atomic rename, manifest as JSON)."""
+    arrays = {}
+    for k, payload in enumerate(update.payloads):
+        for name, arr in payload.items():
+            arrays[f"b{k}__{name}"] = np.asarray(arr)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __manifest__=json.dumps(update.manifest), **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_update(path: str) -> WeightUpdate:
+    with np.load(path, allow_pickle=False) as z:
+        manifest = json.loads(str(z["__manifest__"]))
+        payloads: List[Dict[str, np.ndarray]] = [
+            {} for _ in range(int(manifest["n_buckets"]))]
+        for key in z.files:
+            if key == "__manifest__":
+                continue
+            bucket, name = key.split("__", 1)
+            payloads[int(bucket[1:])][name] = z[key]
+    return WeightUpdate(manifest=manifest, payloads=payloads)

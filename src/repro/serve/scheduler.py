@@ -1,0 +1,282 @@
+"""Continuous batching over the serve engine: slot scheduler + weight swap.
+
+The engine (`serve/engine.py`) exposes prefill + single-token decode over a
+fixed batch. This module grows that into a serving loop: a FIFO request
+queue feeds a fixed set of batch *slots*; each tick admits queued requests
+into free slots (prefill-on-admit), then decodes one token for every active
+slot in a single batched step, and evicts slots whose requests completed.
+Per-slot decode positions differ, so the batched step is a ``vmap`` over the
+cache's batch axis (axis 1 on every cache leaf) with per-slot scalar
+positions — numerically the same computation as running each request alone,
+which `tests/test_serve.py` pins token-for-token.
+
+Weight refresh: when a :class:`~repro.serve.publish.Subscriber` is attached
+and has a pending update, it is applied at the tick boundary (never mid-
+decode), so all slots always decode under one consistent parameter set.
+Params enter the jitted step functions as arguments, so a swap never
+recompiles.
+
+Prefill compiles per distinct prompt length. ``T.prefill`` returns only the
+last position's logits, so padding prompts to a shared length would lose
+the first sampled token; exact-length prefill keeps the batched path
+bitwise-comparable to the unbatched reference. Serving stacks with heavy
+prompt-length churn would bucket lengths; the configs here have few.
+
+KV-cache quantization (``kv_quant="qint8"``): cache pages of ``kv_page``
+positions are quantized in place (max-abs scale per page per slot, qint8
+codes with the same hash-dither stochastic rounding the wire codec uses)
+exactly once, when the page fills — never requantized, so storage error is
+bounded by one quantization step and does not accumulate as decode
+proceeds. Applies to seq-indexed cache leaves (``shape[2] == max_seq``);
+ring-buffer and SSM state leaves stay full precision.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.codecs import _hash_dither  # same dither as the wire codec
+from repro.core.comm import NullComm
+from repro.models import transformer as T
+from repro.serve.engine import Server
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: prompt token ids + a new-token budget.
+
+    ``output`` accumulates generated ids (greedy argmax over the real
+    vocab); ``done`` flips when ``max_new_tokens`` ids are out or
+    ``eos_id`` is produced.
+    """
+
+    rid: Any
+    prompt: Sequence[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    def __post_init__(self):
+        if len(self.prompt) < 1:
+            raise ValueError(f"request {self.rid!r}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"request {self.rid!r}: max_new_tokens must be >= 1")
+
+
+class Scheduler:
+    """Slot-based continuous batcher over a :class:`Server`.
+
+    ``server.batch`` fixes the slot count and ``server.max_seq`` the cache
+    extent; a request needs ``len(prompt) + max_new_tokens <= max_seq``.
+    Encoder-decoder configs are rejected (decode would need per-slot
+    encoder output plumbing this scheduler does not carry).
+    """
+
+    def __init__(self, server: Server, params, *,
+                 subscriber=None, kv_quant: Optional[str] = None,
+                 kv_page: int = 64):
+        cfg = server.cfg
+        if cfg.enc_layers:
+            raise ValueError("Scheduler does not serve encoder-decoder "
+                             "configs (per-slot enc_out not supported)")
+        if kv_quant not in (None, "qint8"):
+            raise ValueError(f"kv_quant must be None or 'qint8', "
+                             f"got {kv_quant!r}")
+        if kv_quant and (kv_page < 1 or server.max_seq % kv_page != 0):
+            raise ValueError(
+                f"kv_page must divide max_seq ({server.max_seq}), "
+                f"got {kv_page}")
+        self.server = server
+        self.cfg = cfg
+        self.params = params
+        self.subscriber = subscriber
+        self.n_slots = server.batch
+        self.max_seq = server.max_seq
+        self.kv_quant = kv_quant
+        self.kv_page = kv_page
+        self._comm = NullComm() if server.is_moe else None
+        self.cache = T.init_cache(cfg, self.n_slots, self.max_seq,
+                                  server.cache_dtype)
+        self.slots: List[Optional[Request]] = [None] * self.n_slots
+        self._pos = np.zeros(self.n_slots, np.int32)
+        self._last_tok = np.zeros(self.n_slots, np.int32)
+        self._pages_done = np.zeros(self.n_slots, np.int32)
+        self.queue: Deque[Request] = deque()
+        self.stats: Dict[str, int] = {
+            "prefills": 0, "decode_ticks": 0, "generated": 0,
+            "weight_swaps": 0, "pages_quantized": 0}
+        self._build()
+
+    # ------------------------------------------------------------------ #
+    def _build(self):
+        cfg, comm = self.cfg, self._comm
+        max_seq, dtype = self.max_seq, self.server.cache_dtype
+
+        @jax.jit
+        def prefill_one(params, tokens):            # tokens (1, L) int32
+            cache = T.init_cache(cfg, 1, max_seq, dtype)
+            logits, cache = T.prefill(params, cfg, {"tokens": tokens},
+                                      cache, comm=comm)
+            return jnp.argmax(logits[0, -1, :cfg.vocab]), cache
+
+        @jax.jit
+        def write_slot(big, small, slot):
+            # every cache leaf carries batch at axis 1; the batch-1 prefill
+            # cache spans the full max_seq extent, so this overwrites the
+            # slot's lane completely (no residue from the previous tenant)
+            return jax.tree.map(
+                lambda b, s: jax.lax.dynamic_update_slice_in_dim(
+                    b, s.astype(b.dtype), slot, axis=1), big, small)
+
+        @jax.jit
+        def decode_tick(params, cache, tokens, pos):
+            def one(lane, tok, p):
+                c = jax.tree.map(lambda x: jnp.expand_dims(x, 1), lane)
+                logits, c = T.decode(params, cfg, tok[None, None], c, p,
+                                     comm=comm)
+                c = jax.tree.map(lambda x: jnp.squeeze(x, 1), c)
+                return jnp.argmax(logits[0, 0, :cfg.vocab]), c
+
+            return jax.vmap(one, in_axes=(1, 0, 0),
+                            out_axes=(0, 1))(cache, tokens, pos)
+
+        page = self.kv_page
+
+        @jax.jit
+        def quant_page(cache, slot, start):
+            def f(x):
+                if not (x.ndim >= 3 and x.shape[2] == max_seq
+                        and jnp.issubdtype(x.dtype, jnp.floating)):
+                    return x
+                lane = jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=1)
+                pg = jax.lax.dynamic_slice_in_dim(lane, start, page, axis=2)
+                z = pg.astype(jnp.float32)
+                s = jnp.max(jnp.abs(z)) / 127.0
+                q = jnp.clip(jnp.floor(z / jnp.where(s > 0, s, 1.0)
+                                       + _hash_dither(z)), -127.0, 127.0)
+                deq = (q * s).astype(x.dtype)
+                lane = jax.lax.dynamic_update_slice_in_dim(lane, deq, start,
+                                                           axis=2)
+                return jax.lax.dynamic_update_slice_in_dim(x, lane, slot,
+                                                           axis=1)
+
+            return jax.tree.map(f, cache)
+
+        self._prefill_one = prefill_one
+        self._write_slot = write_slot
+        self._decode_tick = decode_tick
+        self._quant_page = quant_page
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> Request:
+        if len(req.prompt) + req.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"request {req.rid!r}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds max_seq "
+                f"({self.max_seq})")
+        self.queue.append(req)
+        return req
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and self.active == 0
+
+    # ------------------------------------------------------------------ #
+    def _maybe_swap_weights(self):
+        sub = self.subscriber
+        if sub is not None and sub.has_pending():
+            self.params = sub.apply_pending()
+            self.stats["weight_swaps"] += 1
+
+    def _finish(self, slot: int, tok: int) -> bool:
+        """Record token ``tok`` for the slot's request; evict if done."""
+        req = self.slots[slot]
+        req.output.append(tok)
+        self.stats["generated"] += 1
+        if (len(req.output) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id)):
+            req.done = True
+            self.slots[slot] = None
+            self._pos[slot] = 0
+            self._last_tok[slot] = 0
+            return True
+        self._last_tok[slot] = tok
+        return False
+
+    def _quantize_filled_pages(self, slot: int):
+        if not self.kv_quant:
+            return
+        filled = int(self._pos[slot]) // self.kv_page
+        while int(self._pages_done[slot]) < filled:
+            start = int(self._pages_done[slot]) * self.kv_page
+            self.cache = self._quant_page(self.cache, jnp.int32(slot),
+                                          jnp.int32(start))
+            self._pages_done[slot] += 1
+            self.stats["pages_quantized"] += 1
+
+    def _admit(self):
+        for slot in range(self.n_slots):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            tok0, small = self._prefill_one(self.params, prompt)
+            self.cache = self._write_slot(self.cache, small,
+                                          jnp.int32(slot))
+            self.stats["prefills"] += 1
+            self.slots[slot] = req
+            self._pos[slot] = prompt.shape[1]
+            self._pages_done[slot] = 0
+            if not self._finish(slot, int(tok0)):
+                self._quantize_filled_pages(slot)
+
+    # ------------------------------------------------------------------ #
+    def tick(self) -> int:
+        """One scheduler step: swap weights, admit, batched decode, evict.
+
+        Returns the number of tokens generated this tick.
+        """
+        self._maybe_swap_weights()
+        self._admit()
+        active = [i for i in range(self.n_slots)
+                  if self.slots[i] is not None]
+        if not active:
+            return 0
+        toks, self.cache = self._decode_tick(
+            self.params, self.cache, jnp.asarray(self._last_tok),
+            jnp.asarray(self._pos))
+        toks = np.asarray(toks)
+        self.stats["decode_ticks"] += 1
+        produced = 0
+        for i in active:
+            self._pos[i] += 1
+            if not self._finish(i, int(toks[i])):
+                self._quantize_filled_pages(i)
+            produced += 1
+        return produced
+
+    def run(self, requests: Optional[Sequence[Request]] = None,
+            max_ticks: int = 100_000) -> List[Request]:
+        """Submit ``requests`` (if given) and tick until the queue drains."""
+        reqs = list(requests) if requests is not None else []
+        for r in reqs:
+            self.submit(r)
+        for _ in range(max_ticks):
+            if self.idle:
+                break
+            self.tick()
+        if not self.idle:
+            raise RuntimeError(f"scheduler did not drain in "
+                               f"{max_ticks} ticks")
+        return reqs

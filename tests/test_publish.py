@@ -1,0 +1,236 @@
+"""Weight publishing: bitwise identity snapshots, bounded non-accumulating
+delta error with anchor resync, loud manifest mismatches, file transport."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.models import transformer as T
+from repro.models.layers import abstract_params, init_params
+from repro.serve import (Publisher, PublishConfig, Subscriber,
+                         load_update, save_update)
+
+
+def small_tree(seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return {"emb": jax.random.normal(ks[0], (64, 16)),
+            "w": jax.random.normal(ks[1], (37, 8)),
+            "b": jax.random.normal(ks[2], (5,))}
+
+
+def perturb(tree, seed, scale=1e-3):
+    leaves, treedef = jax.tree.flatten(tree)
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    return jax.tree.unflatten(treedef, [
+        x + scale * jax.random.normal(k, x.shape, x.dtype)
+        for x, k in zip(leaves, ks)])
+
+
+def assert_bitwise(got, want):
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def max_err(got, want):
+    return max(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(jax.tree.leaves(got),
+                               jax.tree.leaves(want)))
+
+
+# --------------------------------------------------------------------- #
+# identity codec: bitwise round-trip, flat and bucketed layouts
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("bucket_mb", [None, 1.0],
+                         ids=["flat_per_leaf", "bucketed"])
+def test_identity_roundtrip_bitwise(bucket_mb):
+    params = small_tree()
+    pc = PublishConfig(codec="identity", bucket_mb=bucket_mb, n_chunks=4)
+    pub, sub = Publisher(params, pc), Subscriber(params, pc)
+    for seed in range(3):           # identity is exact: every publish is
+        got = sub.apply(pub.publish(params, step=seed))  # a snapshot
+        assert_bitwise(got, params)
+        params = perturb(params, seed)
+
+
+def test_identity_roundtrip_bitwise_real_model():
+    cfg = get("gpt2").smoke
+    params = init_params(T.model_template(cfg), jax.random.PRNGKey(0))
+    pc = PublishConfig(codec="identity", bucket_mb=4.0)
+    pub, sub = Publisher(params, pc), Subscriber(params, pc)
+    got = sub.apply(pub.publish(params, step=0))
+    assert_bitwise(got, params)
+    assert jax.tree.structure(got) == jax.tree.structure(params)
+
+
+# --------------------------------------------------------------------- #
+# delta publishing: bounded, non-accumulating, resynced by snapshots
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("codec,bound", [("qint8", 2e-3), ("qint4", 2e-2)])
+@pytest.mark.parametrize("bucket_mb", [None, 1.0],
+                         ids=["flat_per_leaf", "bucketed"])
+def test_delta_error_bounded_nonaccumulating(codec, bound, bucket_mb):
+    params = small_tree()
+    pc = PublishConfig(codec=codec, bucket_mb=bucket_mb, n_chunks=4,
+                       snapshot_every=5)
+    pub, sub = Publisher(params, pc), Subscriber(params, pc)
+    p, errs, kinds = params, [], []
+    for t in range(12):             # >= 10 publish cycles, 2 resyncs
+        u = pub.publish(p, step=t)
+        got = sub.apply(u)
+        errs.append(max_err(got, p))
+        kinds.append(u.kind)
+        p = perturb(p, t)
+    assert kinds[0] == "snapshot" and "delta" in kinds
+    assert kinds[5] == "snapshot" and kinds[10] == "snapshot"
+    # snapshots resync exactly; deltas stay within one quantization step
+    # of the per-cycle drift scale — and the LAST delta is as tight as the
+    # first (the EF anchor keeps error from compounding across cycles)
+    for e, k in zip(errs, kinds):
+        if k == "snapshot":
+            assert e == 0.0
+        else:
+            assert e < bound
+    deltas = [e for e, k in zip(errs, kinds) if k == "delta"]
+    assert deltas[-1] < 3 * max(deltas[0], 1e-6)
+
+
+def test_publisher_subscriber_anchor_lockstep():
+    """Publisher advances its anchor by the decoded payload — after many
+    deltas the subscriber's reconstruction equals the publisher's anchor
+    bitwise (the discipline that keeps the two sides from drifting)."""
+    params = small_tree()
+    pc = PublishConfig(codec="qint8", bucket_mb=None, n_chunks=4,
+                       snapshot_every=100)
+    pub, sub = Publisher(params, pc), Subscriber(params, pc)
+    p = params
+    for t in range(6):
+        sub.apply(pub.publish(p, step=t))
+        p = perturb(p, t)
+    for a, b in zip(pub._anchor, sub._anchor):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------- #
+# manifest validation: mismatches fail loudly, naming the field
+# --------------------------------------------------------------------- #
+
+def test_mismatched_codec_names_field():
+    params = small_tree()
+    pub = Publisher(params, PublishConfig(codec="qint8"))
+    sub = Subscriber(params, PublishConfig(codec="qint4"))
+    with pytest.raises(ValueError, match="'codec'"):
+        sub.apply(pub.publish(params))
+
+
+def test_mismatched_layout_names_field():
+    params = small_tree()
+    pub = Publisher(params, PublishConfig(n_chunks=4))
+    sub = Subscriber(params, PublishConfig(n_chunks=8))
+    with pytest.raises(ValueError, match="'n_chunks'"):
+        sub.apply(pub.publish(params))
+
+
+def test_mismatched_tree_names_leaf():
+    params = small_tree()
+    other = dict(params)
+    other["extra"] = jnp.zeros((3, 3))
+    pub = Publisher(params, PublishConfig())
+    sub = Subscriber(other, PublishConfig())
+    with pytest.raises(ValueError, match="leaf_paths"):
+        sub.apply(pub.publish(params))
+
+
+def test_mismatched_leaf_shape_names_leaf_path():
+    params = small_tree()
+    other = dict(params)
+    other["w"] = jnp.zeros((37, 9))
+    pub = Publisher(params, PublishConfig(bucket_mb=None))
+    sub = Subscriber(other, PublishConfig(bucket_mb=None))
+    with pytest.raises(ValueError, match=r"leaf_shapes.*'w'"):
+        sub.apply(pub.publish(params))
+
+
+def test_out_of_order_delta_rejected():
+    params = small_tree()
+    pc = PublishConfig(codec="qint8", snapshot_every=100)
+    pub, sub = Publisher(params, pc), Subscriber(params, pc)
+    sub.apply(pub.publish(params, step=0))            # snapshot, seq 0
+    pub.publish(perturb(params, 1), step=1)           # delta, dropped
+    u2 = pub.publish(perturb(params, 2), step=2)      # delta, seq 2
+    with pytest.raises(ValueError, match="'anchor_seq'"):
+        sub.apply(u2)
+
+
+def test_delta_before_snapshot_rejected():
+    params = small_tree()
+    pc = PublishConfig(codec="qint8", snapshot_every=100)
+    pub = Publisher(params, pc)
+    pub.publish(params, step=0)                       # snapshot, not sent
+    u1 = pub.publish(perturb(params, 1), step=1)      # delta
+    sub = Subscriber(params, pc)
+    with pytest.raises(ValueError, match="anchor"):
+        sub.apply(u1)
+
+
+def test_truncated_payload_rejected():
+    params = small_tree()
+    pc = PublishConfig(codec="qint8")
+    pub, sub = Publisher(params, pc), Subscriber(params, pc)
+    u = pub.publish(params)
+    u.payloads[0] = {k: v[:-1] for k, v in u.payloads[0].items()}
+    with pytest.raises(ValueError, match="'payload_bytes'"):
+        sub.apply(u)
+
+
+# --------------------------------------------------------------------- #
+# wire accounting + file transport
+# --------------------------------------------------------------------- #
+
+def test_payload_bytes_match_codec_accounting():
+    params = small_tree()
+    for codec in ("identity", "qint8", "qint4"):
+        pc = PublishConfig(codec=codec, bucket_mb=1.0, n_chunks=4,
+                           snapshot_every=100)
+        pub = Publisher(params, pc)
+        for t in range(2):          # one snapshot, one delta
+            u = pub.publish(perturb(params, t), step=t)
+            assert u.nbytes() == u.manifest["payload_bytes"]
+
+
+def test_qint8_delta_at_most_third_of_full_f32():
+    """Acceptance: a qint8 delta refresh of the gpt2-smoke tree moves
+    <= 1/3 of the bytes of a full-f32 push (wire accounting only — no
+    parameters materialized)."""
+    abstract = abstract_params(T.model_template(get("gpt2").smoke),
+                               jnp.float32)
+    wire = Publisher(abstract, PublishConfig(codec="qint8")).wire
+    assert wire.wire_bytes("delta") * 3 <= wire.full_f32_bytes()
+
+
+def test_save_load_roundtrip(tmp_path):
+    params = small_tree()
+    pc = PublishConfig(codec="qint8", snapshot_every=100)
+    pub, sub = Publisher(params, pc), Subscriber(params, pc)
+    sub.apply(pub.publish(params, step=0))
+    p1 = perturb(params, 1)
+    u = pub.publish(p1, step=1)
+    path = str(tmp_path / "update.npz")
+    save_update(path, u)
+    u2 = load_update(path)
+    assert u2.manifest == u.manifest
+    got = sub.apply(u2)
+    assert max_err(got, p1) < 2e-3
+
+
+def test_publish_config_validation():
+    with pytest.raises(ValueError):
+        PublishConfig(codec="nope")
+    with pytest.raises(ValueError):
+        PublishConfig(n_chunks=0)
+    with pytest.raises(ValueError):
+        PublishConfig(bucket_mb=-1.0)
+    with pytest.raises(ValueError):
+        PublishConfig(snapshot_every=0)

@@ -1,15 +1,18 @@
 """Serving engine: prefill->decode greedy loop equals teacher-forced
-forward; window-cache (ring buffer) decode equals full-cache decode."""
+forward; window-cache (ring buffer) decode equals full-cache decode;
+continuous-batching scheduler equals the unbatched path per request."""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get
 from repro.models import transformer as T
 from repro.models.layers import init_params
-from repro.serve import Server
+from repro.serve import (Publisher, PublishConfig, Request, Scheduler,
+                         Server, Subscriber)
 
 
 def test_engine_prefill_decode_matches_forward():
@@ -51,3 +54,137 @@ def test_window_cache_ring_decode_equals_full_cache():
         lr_, ring = T.decode(params, wcfg, t, ring, jnp.int32(i))
         np.testing.assert_allclose(np.asarray(lr_), np.asarray(lf),
                                    rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------------ #
+# continuous-batching scheduler
+# ------------------------------------------------------------------ #
+
+def _mk(cfg, params, seed, n, base_prompt=5, base_gen=3):
+    """Staggered request mix: varying prompt lengths and budgets."""
+    key = jax.random.PRNGKey(seed)
+    return [Request(rid=i,
+                    prompt=np.asarray(jax.random.randint(
+                        jax.random.fold_in(key, i),
+                        (base_prompt + 2 * i,), 0, cfg.vocab)).tolist(),
+                    max_new_tokens=base_gen + i)
+            for i in range(n)]
+
+
+def _unbatched_reference(cfg, params, prompt, gen, max_seq=64):
+    cache = T.init_cache(cfg, 1, max_seq, dtype=jnp.float32)
+    lg, cache = T.prefill(
+        params, cfg, {"tokens": jnp.asarray(prompt, jnp.int32)[None]},
+        cache)
+    tok = int(jnp.argmax(lg[0, -1, :cfg.vocab]))
+    out, pos = [tok], len(prompt)
+    for _ in range(gen - 1):
+        lg, cache = T.decode(params, cfg, jnp.asarray([[tok]], jnp.int32),
+                             cache, jnp.int32(pos))
+        tok = int(jnp.argmax(lg[0, 0, :cfg.vocab]))
+        out.append(tok)
+        pos += 1
+    return out
+
+
+def test_scheduler_matches_unbatched_decode():
+    """Acceptance: N concurrent requests through the slot scheduler give
+    per-request token ids identical to the unbatched prefill/decode loop
+    (slot reuse exercised: more requests than slots, staggered lengths)."""
+    cfg = get("gpt2").smoke
+    params = init_params(T.model_template(cfg), jax.random.PRNGKey(0))
+    srv = Server(cfg, batch=3, max_seq=64, cache_dtype=jnp.float32)
+    sch = Scheduler(srv, params)
+    reqs = _mk(cfg, params, seed=7, n=5)
+    sch.run(reqs)
+    for r in reqs:
+        assert r.done
+        assert r.output == _unbatched_reference(cfg, params, r.prompt,
+                                                r.max_new_tokens)
+
+
+def test_scheduler_slot_admit_evict_invariants():
+    cfg = get("gpt2").smoke
+    params = init_params(T.model_template(cfg), jax.random.PRNGKey(0))
+    srv = Server(cfg, batch=2, max_seq=64, cache_dtype=jnp.float32)
+    sch = Scheduler(srv, params)
+    reqs = _mk(cfg, params, seed=3, n=5, base_gen=2)
+    for r in reqs:
+        sch.submit(r)
+    seen_active = 0
+    for _ in range(200):
+        if sch.idle:
+            break
+        sch.tick()
+        assert sch.active <= sch.n_slots
+        seen_active = max(seen_active, sch.active)
+        for r in reqs:
+            assert len(r.output) <= r.max_new_tokens
+            if r.done:                       # evicted on completion
+                assert r not in sch.slots
+        in_flight = ([r for r in sch.slots if r is not None]
+                     + list(sch.queue))
+        assert len(in_flight) + sum(r.done for r in reqs) == len(reqs)
+    assert sch.idle
+    assert seen_active == sch.n_slots        # batching actually happened
+    assert all(r.done and len(r.output) == r.max_new_tokens
+               for r in reqs)
+    assert sch.stats["prefills"] == len(reqs)
+
+
+def test_scheduler_weight_swap_transparent_and_counted():
+    """A mid-serve identity-codec publish of the SAME params must not
+    change any output token (the swap happens at a tick boundary and the
+    decoded tree is bitwise the served tree); the swap is counted."""
+    cfg = get("gpt2").smoke
+    params = init_params(T.model_template(cfg), jax.random.PRNGKey(0))
+
+    def run(with_swap):
+        srv = Server(cfg, batch=2, max_seq=64, cache_dtype=jnp.float32)
+        sub = None
+        if with_swap:
+            pc = PublishConfig(codec="identity", bucket_mb=4.0)
+            pub, sub = Publisher(params, pc), Subscriber(params, pc)
+        sch = Scheduler(srv, params, subscriber=sub)
+        reqs = _mk(cfg, params, seed=11, n=3, base_gen=4)
+        for r in reqs:
+            sch.submit(r)
+        ticks = 0
+        while not sch.idle:
+            if with_swap and ticks == 2:
+                sub.push(pub.publish(params, step=1))
+            sch.tick()
+            ticks += 1
+        return [r.output for r in reqs], sch.stats["weight_swaps"]
+
+    base, swaps0 = run(with_swap=False)
+    swapped, swaps1 = run(with_swap=True)
+    assert swaps0 == 0 and swaps1 >= 1
+    assert base == swapped
+
+
+def test_scheduler_kv_quant_pages():
+    cfg = get("gpt2").smoke
+    params = init_params(T.model_template(cfg), jax.random.PRNGKey(0))
+    srv = Server(cfg, batch=2, max_seq=32, cache_dtype=jnp.float32)
+    sch = Scheduler(srv, params, kv_quant="qint8", kv_page=8)
+    reqs = [Request(rid=i, prompt=list(range(2, 12)), max_new_tokens=12)
+            for i in range(2)]
+    sch.run(reqs)
+    assert all(r.done and len(r.output) == 12 for r in reqs)
+    # each slot reaches pos 21 -> floor(21/8) = 2 completed pages
+    assert sch.stats["pages_quantized"] == 4
+
+
+def test_scheduler_rejects_oversized_and_encoder():
+    cfg = get("gpt2").smoke
+    params = init_params(T.model_template(cfg), jax.random.PRNGKey(0))
+    srv = Server(cfg, batch=1, max_seq=16, cache_dtype=jnp.float32)
+    sch = Scheduler(srv, params)
+    with pytest.raises(ValueError, match="max_seq"):
+        sch.submit(Request(rid=0, prompt=list(range(12)),
+                           max_new_tokens=8))
+    enc_cfg = get("whisper-large-v3").smoke
+    enc_srv = Server(enc_cfg, batch=1, max_seq=16)
+    with pytest.raises(ValueError, match="encoder"):
+        Scheduler(enc_srv, params)
