@@ -1,0 +1,157 @@
+"""Elastic-DP benchmark: resharding cost + post-resize convergence parity.
+
+Two sections:
+
+1. ``elastic_reshard`` — one record per resize scenario (identity,
+   kill/shrink, grow, pod kill under hierarchy, bucketed shrink) over a
+   trained gpt2-smoke sim state: the full :func:`repro.elastic.
+   reshard_report` geometry (entities carried/dead, joiners, fold,
+   true/padded elements — all static, re-derived by ``check_bench.py``)
+   plus the measured wall-clock of the state remap itself
+   (``reshard_ms``, host-dependent, not re-checked).
+2. ``elastic_parity`` — a kill -> shrink -> rejoin -> grow FleetSim run
+   vs its uninterrupted baseline: the recorded tail-loss gap must sit
+   inside ``bench_convergence.PARITY_TOL`` (hard-gated by
+   ``check_bench.py``, same pattern as the qint8 publish budget).
+
+    PYTHONPATH=src python -m benchmarks.bench_elastic --json BENCH_elastic.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.bench_convergence import PARITY_TOL
+from repro.configs import get
+from repro.core import Hierarchy, OptimizerConfig, schedules as S
+from repro.data import DataConfig, SyntheticLM
+from repro.elastic import (FleetSim, ResizeEvent, parity_gap,
+                           reshard_report, reshard_trainer)
+from repro.train import Trainer
+
+ARCH = "gpt2-smoke"
+SEQ, BATCH = 16, 8
+
+
+def _opt_cfg(inner=0, bucket_mb=None):
+    return OptimizerConfig(
+        name="zero_one_adam", lr=S.ConstantLr(1e-3),
+        var_policy=S.AdaptiveFreezePolicy(kappa=2),
+        sync_policy=S.LrProportionalSyncPolicy(warmup_steps=2,
+                                               double_every=3,
+                                               max_interval=2),
+        hierarchy=Hierarchy(inner=inner) if inner else None,
+        bucket_mb=bucket_mb)
+
+
+#: scenario -> (n_from, n_to, survivors, inner, bucket_mb)
+SCENARIOS = {
+    "flat_4to4_identity": (4, 4, None, 0, None),
+    "flat_4to2_kill1": (4, 2, (0, 2), 0, None),
+    "flat_2to4_grow": (2, 4, None, 0, None),
+    "hier_4to2_podkill": (4, 2, (0, 1), 2, None),
+    "bucketed_4to2_kill1": (4, 2, (0, 2), 0, 0.25),
+}
+
+
+def _trained(cfg, opt_cfg, n, steps, seed=5):
+    tr = Trainer(cfg, opt_cfg, n_workers=n)
+    params, state = tr.sim_init(jax.random.PRNGKey(seed))
+    fn = tr.sim_step_fn()
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=SEQ,
+                                  global_batch=BATCH, seed=seed))
+    for t in range(steps):
+        params, state, _ = fn(params, state, data.batch(t))
+    return tr, params, state
+
+
+def reshard_section(steps=4, repeats=3):
+    """Measured remap latency + static geometry per resize scenario."""
+    cfg = get("gpt2").smoke
+    records = []
+    print("# Resharding — gpt2-smoke sim, trained state")
+    print("scenario,n_from,n_to,carried,dead,joiners,fold,true_elems,"
+          "reshard_ms")
+    for name, (n, m, survivors, inner, mb) in SCENARIOS.items():
+        opt_cfg = _opt_cfg(inner, mb)
+        tr, params, state = _trained(cfg, opt_cfg, n, steps)
+        dst = Trainer(cfg, opt_cfg, n_workers=m)
+        rep = reshard_report(tr.opt, dst.opt, survivors=survivors)
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            p2, s2 = reshard_trainer(tr, dst, params, state,
+                                     survivors=survivors)
+            jax.block_until_ready((p2, s2.step))
+            best = min(best, (time.perf_counter() - t0) * 1e3)
+        rec = {"bench": "elastic_reshard", "scenario": name, "arch": ARCH,
+               "inner": inner, "bucket_mb": mb,
+               "survivors": list(survivors) if survivors else None,
+               "reshard_ms": best}
+        rec.update({k: (int(v) if isinstance(v, bool) else v)
+                    for k, v in rep.items()})
+        records.append(rec)
+        print(f"{name},{rep['n_from']},{rep['n_to']},"
+              f"{rep['carried_entities']},{rep['dead_entities']},"
+              f"{rep['joiner_workers']},{int(rep['ef_fold'])},"
+              f"{rep['true_elems']},{best:.1f}")
+    return records
+
+
+def parity_section(steps=30):
+    """Kill worker 1 at steps//3 (4 -> 2), rejoin at 2*steps//3 (2 -> 4);
+    tail-loss gap vs the uninterrupted 4-worker baseline."""
+    cfg = get("gpt2").smoke
+    opt_cfg = _opt_cfg()
+    events = [ResizeEvent(step=steps // 3, workers=2, survivors=(0, 2)),
+              ResizeEvent(step=2 * steps // 3, workers=4)]
+    base = FleetSim(cfg, opt_cfg, 4, seed=3).run(
+        steps, global_batch=BATCH, seq=SEQ)
+    el = FleetSim(cfg, opt_cfg, 4, seed=3).run(
+        steps, global_batch=BATCH, seq=SEQ, events=events)
+    gap = parity_gap(el["losses"], base["losses"])
+    tail = min(10, steps)
+    rec = {
+        "bench": "elastic_parity", "scenario": "kill_shrink_rejoin",
+        "arch": ARCH, "steps": steps, "n_resizes": len(el["resizes"]),
+        "parity_gap": gap, "parity_tol": PARITY_TOL,
+        "baseline_tail": float(np.mean(base["losses"][-tail:])),
+        "elastic_tail": float(np.mean(el["losses"][-tail:])),
+        "reshard_ms": [r["reshard_ms"] for r in el["resizes"]],
+    }
+    verdict = "OK" if gap <= PARITY_TOL else "DIVERGED"
+    print(f"# Parity — {steps} steps, kill@{events[0].step} "
+          f"rejoin@{events[1].step}: gap {gap:+.3f} nats "
+          f"(tol {PARITY_TOL}) -> {verdict}")
+    return [rec]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="append one JSONL record per scenario")
+    ap.add_argument("--steps", type=int, default=30,
+                    help="parity-run length (baseline and elastic)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reshard geometry only — skip the parity sims")
+    args = ap.parse_args(argv)
+
+    records = reshard_section()
+    if not args.smoke:
+        records += parity_section(steps=args.steps)
+    if args.json:
+        with open(args.json, "a") as f:
+            for r in records:
+                f.write(json.dumps(r) + "\n")
+    gaps = [r for r in records
+            if r["bench"] == "elastic_parity"
+            and r["parity_gap"] > r["parity_tol"]]
+    return 1 if gaps else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

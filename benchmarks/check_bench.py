@@ -2,7 +2,7 @@
 
 Re-derives the *cheap, deterministic* half of the committed
 ``BENCH_fixed_cost.json`` / ``BENCH_throughput.json`` /
-``BENCH_serve.json`` records — the structural comm accounting (DP
+``BENCH_serve.json`` / ``BENCH_elastic.json`` records — the structural comm accounting (DP
 leaves, exchange units, collectives per sync, bits per param), the
 publish wire accounting (full-f32 vs delta/snapshot bytes per refresh,
 bucket counts, scheduler slot accounting), and the modeled
@@ -23,6 +23,14 @@ intentional, regenerate the snapshots:
     python -m benchmarks.bench_fixed_cost --json BENCH_fixed_cost.json
     python -m benchmarks.bench_throughput --json BENCH_throughput.json
     python -m benchmarks.bench_serve --json BENCH_serve.json
+    python -m benchmarks.bench_elastic --json BENCH_elastic.json
+
+The elastic snapshot gets two extra treatments: the ``elastic_reshard``
+geometry is re-derived exactly (``reshard_report`` is a pure function of
+the two layout plans), and the ``elastic_parity`` record is hard-gated —
+the recorded kill/rejoin tail-loss gap must sit inside its recorded
+tolerance (``bench_convergence.PARITY_TOL``), the same budget-assertion
+pattern as the qint8 publish record.
 """
 import argparse
 import json
@@ -37,6 +45,11 @@ STRUCTURAL = {
     "serve_publish": ("n_buckets", "full_f32_bytes", "snapshot_bytes",
                       "delta_bytes"),
     "serve_throughput": ("generated", "prefills", "decode_ticks"),
+    "elastic_reshard": ("n_from", "n_to", "inner_from", "inner_to",
+                        "entities_from", "entities_to", "carried_entities",
+                        "dead_entities", "joiner_workers", "ef_fold",
+                        "dp_leaves", "exchange_units", "true_elems",
+                        "padded_elems_from", "padded_elems_to"),
 }
 MODELED = {"fixed_cost_buckets": ("bits_per_param_sync", "sync_comm_ms"),
            "throughput_buckets": ("sync_latency_floor_ms",
@@ -44,12 +57,14 @@ MODELED = {"fixed_cost_buckets": ("bits_per_param_sync", "sync_comm_ms"),
                                   "step_ms_overlapped",
                                   "exposed_comm_ms_overlapped"),
            "serve_publish": ("reduction_x",),
-           "serve_throughput": ()}
+           "serve_throughput": (),
+           "elastic_reshard": ()}
 #: field(s) identifying one record within its kind
 KEY = {"fixed_cost_buckets": ("bucket_mb",),
        "throughput_buckets": ("bucket_mb",),
        "serve_publish": ("codec",),
-       "serve_throughput": ("slots", "n_requests", "max_new_tokens")}
+       "serve_throughput": ("slots", "n_requests", "max_new_tokens"),
+       "elastic_reshard": ("scenario",)}
 
 
 def _key(kind, rec):
@@ -170,6 +185,40 @@ def _fresh_serve_throughput(snapshot):
     return out
 
 
+def _fresh_elastic(snapshot):
+    """Re-derive each resize's geometry from the two layout plans alone —
+    ``reshard_report`` never touches arrays, so this is exact and cheap."""
+    from repro.configs import get
+    from repro.core import (Hierarchy, OptimizerConfig, build_optimizer,
+                            schedules as S)
+    from repro.elastic import reshard_report
+    from repro.models.layers import abstract_params, param_specs
+    from repro.models import transformer as T
+
+    cfg = get("gpt2").smoke
+    tmpl = T.model_template(cfg)
+    shapes = abstract_params(tmpl)
+    specs = param_specs(tmpl)
+    out = {}
+    for rec in snapshot:
+        ocfg = OptimizerConfig(
+            name="zero_one_adam", lr=S.ConstantLr(1e-3),
+            var_policy=S.EveryStepVariancePolicy(),
+            sync_policy=S.EveryStepSyncPolicy(),
+            hierarchy=(Hierarchy(inner=rec["inner"]) if rec["inner"]
+                       else None),
+            bucket_mb=rec["bucket_mb"])
+        src = build_optimizer(ocfg, shapes, specs=specs,
+                              n_workers=rec["n_from"])
+        dst = build_optimizer(ocfg, shapes, specs=specs,
+                              n_workers=rec["n_to"])
+        sv = tuple(rec["survivors"]) if rec["survivors"] else None
+        rep = reshard_report(src, dst, survivors=sv)
+        out[_key("elastic_reshard", rec)] = {
+            k: int(v) if isinstance(v, bool) else v for k, v in rep.items()}
+    return out
+
+
 def _diff(kind, snapshot, fresh, rtol, problems):
     for rec in snapshot:
         key = _key(kind, rec)
@@ -196,6 +245,7 @@ def main(argv=None) -> int:
     ap.add_argument("--throughput",
                     default=str(root / "BENCH_throughput.json"))
     ap.add_argument("--serve", default=str(root / "BENCH_serve.json"))
+    ap.add_argument("--elastic", default=str(root / "BENCH_elastic.json"))
     ap.add_argument("--rtol", type=float, default=0.05,
                     help="relative tolerance for modeled float fields")
     args = ap.parse_args(argv)
@@ -239,9 +289,26 @@ def main(argv=None) -> int:
         _diff("serve_throughput", sthr, _fresh_serve_throughput(sthr),
               args.rtol, problems)
 
+    elastic = _load(args.elastic)
+    resh = [r for r in elastic if r["bench"] == "elastic_reshard"]
+    if not resh:
+        problems.append(f"{args.elastic}: no elastic_reshard records")
+    else:
+        _diff("elastic_reshard", resh, _fresh_elastic(resh), args.rtol,
+              problems)
+    par = [r for r in elastic if r["bench"] == "elastic_parity"]
+    if not par:
+        problems.append(f"{args.elastic}: no elastic_parity record")
+    for rec in par:
+        if rec["parity_gap"] > rec["parity_tol"]:
+            problems.append(
+                f"elastic_parity[{rec['scenario']}]: kill/rejoin tail-loss "
+                f"gap {rec['parity_gap']:.3f} nats exceeds the recorded "
+                f"tolerance {rec['parity_tol']}")
+
     for p in problems:
         print(f"BENCH DRIFT: {p}")
-    n = len(fixed) + len(tput) + len(pub) + len(sthr)
+    n = len(fixed) + len(tput) + len(pub) + len(sthr) + len(resh) + len(par)
     print(f"check_bench: {n} snapshot records checked, "
           f"{len(problems)} problem(s)")
     return 1 if problems else 0

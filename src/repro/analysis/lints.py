@@ -45,7 +45,7 @@ _ALLOWED = {
     "raw-collective": ("core/comm.py",),
     "comm-view-reshape": ("core/compressor.py", "core/onebit_allreduce.py",
                           "core/bucketing.py", "core/codecs.py",
-                          "kernels/dispatch.py"),
+                          "kernels/dispatch.py", "elastic/reshard.py"),
     "statekind-registry": ("core/compressed.py",),
     "float64-literal": (),
 }

@@ -62,13 +62,24 @@ def save(path: str, tree: Any, step: int = 0, meta: Dict | None = None):
             os.unlink(tmp)
 
 
+def read_manifest(path: str) -> Dict:
+    """The checkpoint's JSON manifest alone (step, meta, leaf geometry) —
+    no arrays materialized. Lets callers peek at e.g. the recorded fleet
+    width (``meta['n_workers']``) before committing to a layout."""
+    with np.load(path, allow_pickle=False) as z:
+        return json.loads(str(z["__manifest__"]))
+
+
 def restore(path: str, like: Any) -> Tuple[Any, int, Dict]:
     """Restore into the structure of ``like``.
 
     The manifest is validated against ``like`` before anything is
-    materialized: leaf count, per-leaf tree paths (version >= 2), and
-    per-leaf shapes must all match, and the first mismatch raises a
-    ``ValueError`` naming the offending leaf's tree path.
+    materialized: leaf count, per-leaf tree paths (version >= 2), per-leaf
+    shapes, and per-leaf dtypes (version >= 2) must all match, and the
+    first mismatch raises a ``ValueError`` naming the offending leaf's
+    tree path. A shape mismatch that looks like a DP-width change (the
+    manifest records the saved fleet width and the leading worker dims
+    disagree accordingly) names n -> m and points at ``repro.elastic``.
     """
     with np.load(path, allow_pickle=False) as z:
         manifest = json.loads(str(z["__manifest__"]))
@@ -102,6 +113,8 @@ def restore(path: str, like: Any) -> Tuple[Any, int, Dict]:
         # against the manifest (catches truncated/tampered payloads whose
         # manifest still matches); first mismatch names the leaf path.
         shapes = manifest.get("leaf_shapes")
+        dtypes = manifest.get("leaf_dtypes")
+        meta_n = (manifest.get("meta") or {}).get("n_workers")
         out = []
         for i, ref in enumerate(leaves_like):
             name = (ckpt_paths[i] if ckpt_paths is not None
@@ -109,13 +122,33 @@ def restore(path: str, like: Any) -> Tuple[Any, int, Dict]:
             stored = tuple(z[f"leaf_{i}"].shape)
             shape = tuple(shapes[i]) if shapes is not None else stored
             if shape != tuple(ref.shape):
+                ref_shape = tuple(ref.shape)
+                if (meta_n and shape and ref_shape
+                        and shape[0] == meta_n and ref_shape[0] != meta_n):
+                    raise ValueError(
+                        f"leaf {i} ({name!r}): checkpoint shape {shape} != "
+                        f"expected {ref_shape} — the checkpoint was saved "
+                        f"at DP width n={meta_n} but the target tree is "
+                        f"laid out for m={ref_shape[0]} workers. A width "
+                        f"change re-chunks every comm view; restore "
+                        f"through repro.elastic (restore_resharded, or "
+                        f"reshard(state, n->m)) instead of loading the "
+                        f"manifest directly")
                 raise ValueError(
                     f"leaf {i} ({name!r}): checkpoint shape {shape} != "
-                    f"expected {tuple(ref.shape)}")
+                    f"expected {ref_shape}")
             if stored != shape:
                 raise ValueError(
                     f"leaf {i} ({name!r}): stored array shape {stored} != "
                     f"manifest shape {shape} — corrupt checkpoint")
+            if (dtypes is not None
+                    and np.dtype(dtypes[i]) != np.dtype(ref.dtype)):
+                raise ValueError(
+                    f"leaf {i} ({name!r}): checkpoint dtype {dtypes[i]} != "
+                    f"expected {np.dtype(ref.dtype).name} — restoring "
+                    f"would silently cast optimizer state; rebuild the "
+                    f"target tree with the checkpoint's dtypes (e.g. the "
+                    f"state_dtype the run was saved under) or re-save")
             out.append(jax.numpy.asarray(z[f"leaf_{i}"], dtype=ref.dtype))
     return (jax.tree.unflatten(treedef, out), manifest["step"],
             manifest["meta"])

@@ -1,0 +1,55 @@
+"""Width-agnostic checkpoint restore: n-worker manifests into m-worker
+trainers, routed through :func:`repro.elastic.reshard`.
+
+``checkpointing.io.restore`` stays strict — it validates the manifest
+against the caller's tree and refuses any mismatch. This module sits on
+top: it reads the manifest's recorded fleet width, rebuilds the *source*
+trainer at that width, restores into its (abstract-derived) layout, and
+reshards the result into the destination trainer's width.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+from repro.checkpointing import io as ckpt_io
+from repro.elastic.reshard import reshard_trainer
+from repro.train import Trainer
+
+__all__ = ["restore_resharded"]
+
+
+def _abstract_like(tr: Trainer):
+    """ShapeDtypeStruct (params, state) trees of one trainer's sim layout
+    — io.restore only reads .shape/.dtype from the reference leaves, so
+    nothing is materialized for the source-width tree."""
+    params, state = jax.eval_shape(tr.sim_init, jax.random.PRNGKey(0))
+    return {"params": params, "state": state}
+
+
+def restore_resharded(path: str, trainer: Trainer, *,
+                      survivors: Optional[Sequence[int]] = None,
+                      src_workers: Optional[int] = None):
+    """Restore a checkpoint saved at any DP width into ``trainer``.
+
+    The source width comes from the manifest's ``meta["n_workers"]``
+    (written by launch/train.py --save) or the ``src_workers`` override.
+    Returns ``(params, state, step, meta)`` in the trainer's width.
+    """
+    manifest = ckpt_io.read_manifest(path)
+    n = src_workers or (manifest.get("meta") or {}).get("n_workers")
+    if not n:
+        raise ValueError(
+            f"checkpoint {path!r} does not record its fleet width "
+            f"(meta['n_workers']); pass src_workers= explicitly")
+    n = int(n)
+    if n == trainer.n_workers:
+        tree, step, meta = ckpt_io.restore(path, _abstract_like(trainer))
+        return tree["params"], tree["state"], step, meta
+    src_tr = Trainer(trainer.model_cfg, trainer.opt_cfg, n_workers=n,
+                     trainer_cfg=trainer.tc)
+    tree, step, meta = ckpt_io.restore(path, _abstract_like(src_tr))
+    params, state = reshard_trainer(src_tr, trainer, tree["params"],
+                                    tree["state"], survivors=survivors)
+    return params, state, step, meta

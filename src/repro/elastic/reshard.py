@@ -1,0 +1,457 @@
+"""Elastic data-parallelism: reshard 0/1 Adam state across DP widths.
+
+A DP-width change (n -> m workers) re-chunks every comm view: the view's
+leading axis enumerates worker-owned chunks (``core/compressor.py``), so
+the per-worker EF residuals, server chunks, accumulated-update buffers
+and bucket-shaped anchors are all laid out *for a specific n*. This
+module turns that layout dependence into a pure index remap: the true
+(unpadded) elements of every buffer are invariant under the width, so a
+buffer resharded through its natural leaf shape lands pad-exact in the
+new width's layout, and at m = n the transform is bitwise the identity.
+
+Carry-vs-reset policy (what is mathematically safe to carry and why):
+
+==================  ======  ================================================
+state               policy  rationale
+==================  ======  ================================================
+params / anchors    carry   anchors are replicated (x_{t'}); survivors keep
+                            their local drift, joiners clone a survivor and
+                            re-converge bitwise at the next re-anchoring.
+momentum ``m``      carry   replicated between syncs (refreshed from ubar);
+                            joiners clone a survivor.
+variance ``v``      carry   NEVER reset: the paper's variance freeze means v
+                            is *already* stale by design — the resize is just
+                            one more step of staleness within the kappa
+                            tolerance. Resetting would restart warmup.
+``u`` (local acc.)  carry   survivors keep their unsynced local work; joiners
+                            start at zero (they have done no local steps). A
+                            killed worker's unsynced u is lost — equivalent
+                            to its last microbatches never having run.
+``err_s`` (server)  carry   attached to chunk *positions*, not workers: the
+                            pure index remap re-chunks it to the new owners.
+``err_w`` (worker)  carry / the pending correction enters the next sync as
+                    fold    (1/n_e)·sum(err). When the chunk quantum divides
+                            evenly (m_e == n_e and no pod died) the remap is
+                            positional and bitwise; otherwise the residuals
+                            are folded into the carried entities with scale
+                            m_e/n_e (+ the dead entities' mass spread over
+                            the survivors) so the total pending correction
+                            folded into the next sync's gradient is exactly
+                            conserved: (1/m_e)·sum(err') == (1/n_e)·sum(err).
+step / schedules    carry   replicated scalars; policies are step-indexed.
+==================  ======  ================================================
+
+Hierarchy: with a two-level exchange the EF "entity" is the pod (the
+inner level reduces full-precision; compression state belongs to pods),
+so ``n_e = n / inner``. Flat layouts are the ``inner == 1`` degenerate
+case where entity == worker. Survivor sets must be pod-aligned — a
+destination pod drawing from two source pods has no well-defined
+residual and raises.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressor as C
+from repro.core.compressed import ComposedOptimizer, CompressedDPState
+
+__all__ = ["reshard", "reshard_trainer", "resize_opt", "worker_origin",
+           "reshard_report"]
+
+
+# --------------------------------------------------------------------- #
+# origin maps
+# --------------------------------------------------------------------- #
+
+def worker_origin(n: int, m: int,
+                  survivors: Optional[Sequence[int]] = None) -> Tuple[int, ...]:
+    """Destination-worker -> source-worker map for a resize n -> m.
+
+    ``survivors`` lists the source workers that are still alive, in the
+    order they occupy destination slots (default: the first ``min(n, m)``
+    source workers). Destination slots beyond the survivors are joiners,
+    marked ``-1``.
+    """
+    if survivors is None:
+        survivors = tuple(range(min(n, m)))
+    sv = tuple(int(s) for s in survivors)
+    if len(sv) != len(set(sv)):
+        raise ValueError(f"survivors contains duplicates: {sv}")
+    for s in sv:
+        if not 0 <= s < n:
+            raise ValueError(
+                f"survivor {s} is not a worker of the n={n} source fleet")
+    if len(sv) > min(n, m):
+        raise ValueError(
+            f"{len(sv)} survivors do not fit a resize {n}->{m} "
+            f"(at most {min(n, m)} source workers can keep a slot)")
+    return sv + (-1,) * (m - len(sv))
+
+
+def _entity_origin(origin, n, m, ni_src, ni_dst):
+    """Pod-level origin map (EF entities). Raises unless each destination
+    pod draws its survivors from at most one source pod, and no source
+    pod is carried twice (both would break residual-mass conservation)."""
+    n_e, m_e = n // ni_src, m // ni_dst
+    pod_origin = []
+    for e in range(m_e):
+        members = origin[e * ni_dst:(e + 1) * ni_dst]
+        pods = {w // ni_src for w in members if w >= 0}
+        if len(pods) > 1:
+            raise ValueError(
+                f"survivor set is not pod-aligned: destination pod {e} "
+                f"draws workers from source pods {sorted(pods)} — the EF "
+                f"residual belongs to the pod as a whole, so survivors "
+                f"must keep pod-mates together (hierarchy inner="
+                f"{ni_src}->{ni_dst})")
+        pod_origin.append(pods.pop() if pods else -1)
+    carried = [p for p in pod_origin if p >= 0]
+    if len(carried) != len(set(carried)):
+        raise ValueError(
+            f"survivor set carries one source pod into several destination "
+            f"pods ({pod_origin}) — duplicating an EF residual breaks "
+            f"mass conservation; choose a pod-aligned survivor set")
+    dead = sorted(set(range(n_e)) - set(carried))
+    return tuple(pod_origin), tuple(dead), n_e, m_e
+
+
+def _owner_of_rows(n: int, n_inner: int) -> np.ndarray:
+    """Stacked worker serving each view row: row ``r = i*n_outer + o`` is
+    served by worker ``(o, i)``, stacked (outer-major) at ``o*n_inner + i``
+    (see onebit_allreduce: ``widx = j * n_outer + k``)."""
+    no = n // n_inner
+    r = np.arange(n)
+    return (r % no) * n_inner + r // no
+
+
+def _rows_of_workers(n: int, n_inner: int) -> np.ndarray:
+    """Inverse of :func:`_owner_of_rows`: the view row served by each
+    stacked worker ``w = o*n_inner + i``."""
+    no = n // n_inner
+    w = np.arange(n)
+    return (w % n_inner) * no + w // n_inner
+
+
+# --------------------------------------------------------------------- #
+# buffer remaps
+# --------------------------------------------------------------------- #
+
+def _remap_fn(src_lo, dst_lo):
+    """View-buffer remap src layout -> dst layout through the natural
+    leaf (pad-exact both ways). Identity when the layouts agree, so the
+    m = n round trip is bitwise even if pad slots held garbage."""
+    if src_lo == dst_lo:
+        return lambda v: v
+    return lambda v: C.to_view(C.from_view(v, src_lo), dst_lo)
+
+
+def ep_merge(x, ax):
+    """Worker-stacked EP leaf (n, ..., E/n@ax+1, ...) -> global leaf."""
+    x = jnp.moveaxis(x, 0, ax)
+    shp = x.shape
+    return x.reshape(shp[:ax] + (shp[ax] * shp[ax + 1],) + shp[ax + 2:])
+
+
+def ep_split(x, ax, m):
+    """Global EP leaf -> worker-stacked (m, ..., E/m@ax+1, ...)."""
+    shp = x.shape
+    x = x.reshape(shp[:ax] + (m, shp[ax] // m) + shp[ax + 1:])
+    return jnp.moveaxis(x, ax, 0)
+
+
+class _Ctx:
+    """One resize's static plumbing, shared by every buffer."""
+
+    def __init__(self, src, dst, survivors):
+        self.n, self.m = src.n, dst.n
+        self.ni_s = src.hierarchy.inner if src.hierarchy else 1
+        self.ni_d = dst.hierarchy.inner if dst.hierarchy else 1
+        self.origin = worker_origin(self.n, self.m, survivors)
+        (self.pod_origin, self.dead_e,
+         self.n_e, self.m_e) = _entity_origin(
+            self.origin, self.n, self.m, self.ni_s, self.ni_d)
+        self.carried_e = [p for p in self.pod_origin if p >= 0]
+        # fold only when the entity count changes or residual mass died —
+        # the m_e == n_e no-deaths path must stay bitwise
+        self.fold = (self.m_e != self.n_e) or bool(self.dead_e)
+        S = max(len(self.carried_e), 1)
+        self.alpha = self.m_e / self.n_e
+        self.beta = self.m_e / (self.n_e * S)
+        fill = next((o for o in self.origin if o >= 0), 0)
+        self.idx = jnp.asarray([o if o >= 0 else fill for o in self.origin])
+        self.joiners = [k for k, o in enumerate(self.origin) if o < 0]
+        self.jmask = (np.asarray([o >= 0 for o in self.origin])
+                      if self.joiners else None)
+
+    def carry(self, x, remap=None, joiner="clone"):
+        """Per-worker stacked (n, ...) -> (m, ...): origin gather, optional
+        per-row remap, joiners cloned from a survivor or zeroed."""
+        g = x[self.idx]
+        if remap is not None:
+            g = jax.vmap(remap)(g)
+        if joiner == "zero" and self.jmask is not None:
+            mk = jnp.asarray(self.jmask).reshape((self.m,)
+                                                 + (1,) * (g.ndim - 1))
+            g = jnp.where(mk, g, jnp.zeros((), g.dtype))
+        return g
+
+
+def _reshard_err_s(es, lo_s, lo_d):
+    """Server-side EF: one chunk row per worker, attached to the chunk
+    *position*. Assemble the full view in serving order, remap the
+    elements to the new geometry, re-slice to the new owners."""
+    full = es[jnp.asarray(_owner_of_rows(lo_s.n, lo_s.n_inner))]
+    full = _remap_fn(lo_s, lo_d)(full)
+    return full[jnp.asarray(_rows_of_workers(lo_d.n, lo_d.n_inner))]
+
+
+def _reshard_err_w(ew, lo_s, lo_d, ctx: _Ctx):
+    """Worker-side EF: pod-level entity carry with mass-conserving fold.
+
+    Each pod's workers hold inner-slices of the pod's full-view residual
+    (slice i = view rows [i*n_outer, (i+1)*n_outer)); assemble per-pod
+    full views, remap each to the new geometry, fold, re-slice.
+    """
+    n_e, m_e = ctx.n_e, ctx.m_e
+    R = ew.reshape((n_e, lo_s.n_inner) + lo_s.ef_worker_shape)
+    R = R.reshape((n_e,) + lo_s.view_shape)
+    R = jax.vmap(_remap_fn(lo_s, lo_d))(R)      # (n_e,) + dst view_shape
+    dead_sum = None
+    if ctx.dead_e:
+        dead_sum = sum(R[d].astype(jnp.float32) for d in ctx.dead_e)
+    rows = []
+    for e in range(m_e):
+        p = ctx.pod_origin[e]
+        if p < 0:
+            rows.append(jnp.zeros(lo_d.view_shape, ew.dtype))
+            continue
+        r = R[p]
+        if ctx.fold:
+            r32 = r.astype(jnp.float32) * ctx.alpha
+            if dead_sum is not None:
+                r32 = r32 + ctx.beta * dead_sum
+            r = r32.astype(ew.dtype)
+        rows.append(r)
+    out = jnp.stack(rows)
+    out = out.reshape((m_e, lo_d.n_inner) + lo_d.ef_worker_shape)
+    return out.reshape((lo_d.n,) + lo_d.ef_worker_shape)
+
+
+# --------------------------------------------------------------------- #
+# the transform
+# --------------------------------------------------------------------- #
+
+def _require_composed(opt, which):
+    if not isinstance(opt, ComposedOptimizer):
+        raise TypeError(
+            f"reshard needs a composed optimizer (repro.core.compressed."
+            f"ComposedOptimizer) as the {which} plan; legacy optimizer "
+            f"classes do not expose the layout geometry — rebuild via "
+            f"compressed_dp(...) / build_optimizer(...)")
+
+
+def _validate_pair(src, dst):
+    if src.treedef != dst.treedef:
+        raise ValueError("source and destination optimizers are bound to "
+                         "different parameter trees")
+    for i, (a, b) in enumerate(zip(src.layouts, dst.layouts)):
+        if a.shape != b.shape:
+            raise ValueError(
+                f"leaf {i}: natural shape {a.shape} != {b.shape} — "
+                f"reshard changes the worker count, never the model")
+    if list(src.dp_mask) != list(dst.dp_mask):
+        raise ValueError("source and destination dp_mask differ")
+    sbp, dbp = src.bucket_plan, dst.bucket_plan
+    if (sbp is None) != (dbp is None):
+        raise ValueError(
+            "bucketing must match across the resize (bucket_mb on both "
+            "sides or neither) — switching exchange granularity is a "
+            "different state tree, not a width change")
+    if sbp is not None:
+        if len(sbp.buckets) != len(dbp.buckets):
+            raise ValueError(
+                f"bucket plans diverge across the resize "
+                f"({len(sbp.buckets)} vs {len(dbp.buckets)} buckets); "
+                f"bucket membership should be width-independent")
+        for k, (a, b) in enumerate(zip(sbp.buckets, dbp.buckets)):
+            if a.members != b.members or a.sizes != b.sizes:
+                raise ValueError(
+                    f"bucket {k} membership diverges across the resize "
+                    f"({a.members} vs {b.members})")
+
+
+def reshard(state: CompressedDPState, src: ComposedOptimizer,
+            dst: ComposedOptimizer, *, survivors=None, pd_leaves=None
+            ) -> CompressedDPState:
+    """Remap worker-stacked optimizer state from ``src`` (n workers) to
+    ``dst`` (m workers) under the module's carry-vs-reset policy.
+
+    ``state`` is the sim-layout stacked state (leading worker axis on
+    every per-worker leaf, as produced by ``Trainer.sim_init``).
+    ``pd_leaves`` (the trainer's flat leaf metadata) is only needed when
+    the tree has non-DP (expert-parallel) leaves; prefer
+    :func:`reshard_trainer`, which supplies it and reshards the
+    parameters too.
+    """
+    _require_composed(src, "source")
+    _require_composed(dst, "destination")
+    if not isinstance(state, CompressedDPState):
+        raise TypeError(
+            f"reshard operates on CompressedDPState, got "
+            f"{type(state).__name__}")
+    _validate_pair(src, dst)
+    n, m = src.n, dst.n
+    if state.step.ndim != 1 or state.step.shape[0] != n:
+        raise ValueError(
+            f"expected worker-stacked state with leading dim {n} (sim "
+            f"layout); state.step has shape {tuple(state.step.shape)}")
+    ctx = _Ctx(src, dst, survivors)
+
+    def ep(x, i, what):
+        if n == m:
+            return x
+        if pd_leaves is None:
+            raise ValueError(
+                f"leaf {i} is expert-parallel (dp_mask False) and its "
+                f"'{what}' buffer is split on the expert axis; pass "
+                f"pd_leaves= or use reshard_trainer(...)")
+        ax = pd_leaves[i].ep_axis or 0
+        merged = ep_merge(x, ax)
+        if merged.shape[ax] % m:
+            raise ValueError(
+                f"leaf {i}: expert axis of size {merged.shape[ax]} does "
+                f"not divide over m={m} workers")
+        return ep_split(merged, ax, m)
+
+    slot_specs = src.base.slot_specs()
+    new_slots = {}
+    for name, vals in state.slots.items():
+        kind = slot_specs[name][0]
+        outs = []
+        for i, x in enumerate(vals):
+            if x is None:
+                outs.append(None)
+            elif kind == "scalar":
+                outs.append(ctx.carry(x))
+            elif not src.dp_mask[i]:
+                outs.append(ep(x, i, name))
+            else:
+                outs.append(ctx.carry(
+                    x, _remap_fn(src.layouts[i], dst.layouts[i])))
+        new_slots[name] = outs
+
+    new_u = []
+    for i, x in enumerate(state.u):
+        if x is None:
+            new_u.append(None)
+        else:
+            new_u.append(ctx.carry(
+                x, _remap_fn(src.layouts[i], dst.layouts[i]),
+                joiner="zero"))
+
+    sbp, dbp = src.bucket_plan, dst.bucket_plan
+    new_ew, new_es, new_anchor = [], [], []
+    if sbp is not None:
+        for bs, bd, ew, es, anc in zip(sbp.buckets, dbp.buckets,
+                                       state.err_w, state.err_s,
+                                       state.anchor):
+            lo_s, lo_d = bs.layout, bd.layout
+            new_ew.append(None if ew is None
+                          else _reshard_err_w(ew, lo_s, lo_d, ctx))
+            new_es.append(None if es is None
+                          else _reshard_err_s(es, lo_s, lo_d))
+            new_anchor.append(None if anc is None
+                              else ctx.carry(anc, _remap_fn(lo_s, lo_d)))
+    else:
+        for i, (ew, es, anc) in enumerate(zip(state.err_w, state.err_s,
+                                              state.anchor)):
+            lo_s, lo_d = src.layouts[i], dst.layouts[i]
+            new_ew.append(None if ew is None
+                          else _reshard_err_w(ew, lo_s, lo_d, ctx))
+            new_es.append(None if es is None
+                          else _reshard_err_s(es, lo_s, lo_d))
+            # per-leaf anchors are natural-shaped: width-independent
+            new_anchor.append(None if anc is None else ctx.carry(anc))
+
+    return CompressedDPState(
+        step=ctx.carry(state.step),
+        gamma_acc=ctx.carry(state.gamma_acc),
+        sync_pstate=jax.tree.map(ctx.carry, state.sync_pstate),
+        var_pstate=jax.tree.map(ctx.carry, state.var_pstate),
+        slots=new_slots,
+        u=new_u,
+        err_w=new_ew,
+        err_s=new_es,
+        anchor=new_anchor,
+    )
+
+
+def reshard_trainer(src_tr, dst_tr, params, state, *, survivors=None):
+    """Reshard stacked (params, state) from one Trainer's width to
+    another's. DP params carry per worker (joiners clone a survivor and
+    re-converge bitwise at the next re-anchoring); EP params merge their
+    expert axis and re-split over the new fleet."""
+    n, m = src_tr.n_workers, dst_tr.n_workers
+    ctx = _Ctx(src_tr.opt, dst_tr.opt, survivors)
+    pl = src_tr.treedef.flatten_up_to(params)
+    out = []
+    for i, (x, pd) in enumerate(zip(pl, src_tr.pd_leaves)):
+        if pd.dp:
+            out.append(ctx.carry(x))
+        else:
+            ax = pd.ep_axis or 0
+            merged = ep_merge(x, ax)
+            if merged.shape[ax] % m:
+                raise ValueError(
+                    f"param leaf {i}: expert axis of size "
+                    f"{merged.shape[ax]} does not divide over m={m} "
+                    f"workers")
+            out.append(x if n == m else ep_split(merged, ax, m))
+    params_m = jax.tree.unflatten(src_tr.treedef, out)
+    state_m = reshard(state, src_tr.opt, dst_tr.opt, survivors=survivors,
+                      pd_leaves=src_tr.pd_leaves)
+    return params_m, state_m
+
+
+def resize_opt(opt: ComposedOptimizer, m: int, model_axis_sizes=None
+               ) -> ComposedOptimizer:
+    """Rebind a composed optimizer's unbound transform at a new worker
+    count (same parameter tree, specs and dp_mask)."""
+    _require_composed(opt, "source")
+    shapes = jax.tree.unflatten(opt.treedef, list(opt.plan.leaves))
+    specs = jax.tree.unflatten(opt.treedef, list(opt.specs))
+    dpm = jax.tree.unflatten(opt.treedef, list(opt.dp_mask))
+    return opt.cfg(shapes, specs=specs, dp_mask=dpm, n_workers=m,
+                   model_axis_sizes=model_axis_sizes)
+
+
+def reshard_report(src: ComposedOptimizer, dst: ComposedOptimizer, *,
+                   survivors=None) -> dict:
+    """Static geometry of one resize — pure function of the two plans, no
+    arrays touched (dryrun --resize-to and BENCH_elastic both record it,
+    and check_bench re-derives it)."""
+    _require_composed(src, "source")
+    _require_composed(dst, "destination")
+    _validate_pair(src, dst)
+    ctx = _Ctx(src, dst, survivors)
+    src_units = list(src.units)
+    dst_units = list(dst.units)
+    true_elems = sum(C.true_counts(u.layout)[0] for u in src_units)
+    return {
+        "n_from": src.n, "n_to": dst.n,
+        "inner_from": ctx.ni_s, "inner_to": ctx.ni_d,
+        "entities_from": ctx.n_e, "entities_to": ctx.m_e,
+        "carried_entities": len(ctx.carried_e),
+        "dead_entities": len(ctx.dead_e),
+        "joiner_workers": len(ctx.joiners),
+        "ef_fold": bool(ctx.fold),
+        "dp_leaves": sum(1 for dp in src.dp_mask if dp),
+        "exchange_units": len(src_units),
+        "true_elems": int(true_elems),
+        "padded_elems_from": int(sum(u.layout.padded for u in src_units)),
+        "padded_elems_to": int(sum(u.layout.padded for u in dst_units)),
+    }

@@ -1,0 +1,118 @@
+"""FleetSim: fault-injected elastic training over the sim trainer.
+
+Drives the nested-vmap sim trainer through a schedule of
+:class:`ResizeEvent`\\ s — kill a worker and shrink, continue, rejoin and
+grow — rebuilding the Trainer at each new width and routing (params,
+state) through :func:`repro.elastic.reshard_trainer`. The loss curve and
+per-resize geometry/latency records come back for the convergence-parity
+gate (benchmarks/bench_convergence.PARITY_TOL) and BENCH_elastic.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import DataConfig, SyntheticLM
+from repro.elastic.reshard import reshard_report, reshard_trainer
+from repro.train import Trainer, TrainerConfig
+
+__all__ = ["ResizeEvent", "FleetSim", "parity_gap"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ResizeEvent:
+    """Resize the fleet to ``workers`` before running step ``step``.
+
+    ``survivors`` lists the source workers that keep a slot (in
+    destination-slot order); None keeps the first ``min(n, m)``. A kill
+    is expressed by omitting the dead worker from ``survivors``.
+    """
+
+    step: int
+    workers: int
+    survivors: Optional[Tuple[int, ...]] = None
+
+
+class FleetSim:
+    """Elastic sim-mode training loop with in-run DP resizes."""
+
+    def __init__(self, model_cfg, opt_cfg, n_workers: int, *,
+                 trainer_cfg: Optional[TrainerConfig] = None, seed: int = 0):
+        self.model_cfg = model_cfg
+        self.opt_cfg = opt_cfg
+        self.n0 = n_workers
+        self.tc = trainer_cfg or TrainerConfig()
+        self.seed = seed
+
+    def _batch_extras(self, batch, global_batch, seq):
+        cfg = self.model_cfg
+        if cfg.enc_layers:
+            batch["frames"] = jnp.zeros((global_batch, cfg.enc_frames,
+                                         cfg.d_model))
+        if cfg.vision_tokens:
+            batch["vision_embeds"] = jnp.zeros(
+                (global_batch, cfg.vision_tokens, cfg.d_model))
+        if not cfg.causal:
+            batch["loss_mask"] = jnp.ones((global_batch, seq))
+        return batch
+
+    def run(self, steps: int, *, global_batch: int = 8, seq: int = 16,
+            events: Sequence[ResizeEvent] = ()) -> dict:
+        ev_by_step = {}
+        for ev in events:
+            if not 0 <= ev.step < steps:
+                raise ValueError(f"resize at step {ev.step} is outside the "
+                                 f"{steps}-step run")
+            if ev.step in ev_by_step:
+                raise ValueError(f"two resizes scheduled at step {ev.step}")
+            ev_by_step[ev.step] = ev
+        for w in [self.n0] + [ev.workers for ev in events]:
+            if global_batch % w:
+                raise ValueError(
+                    f"global_batch={global_batch} must divide over every "
+                    f"fleet width in the schedule (got width {w})")
+
+        tr = Trainer(self.model_cfg, self.opt_cfg, n_workers=self.n0,
+                     trainer_cfg=self.tc)
+        params, state = tr.sim_init(jax.random.PRNGKey(self.seed))
+        fn = tr.sim_step_fn()
+        data = SyntheticLM(DataConfig(vocab=self.model_cfg.vocab,
+                                      seq_len=seq,
+                                      global_batch=global_batch,
+                                      seed=self.seed))
+        losses, resizes = [], []
+        for t in range(steps):
+            ev = ev_by_step.get(t)
+            if ev is not None:
+                dst = Trainer(self.model_cfg, self.opt_cfg,
+                              n_workers=ev.workers, trainer_cfg=self.tc)
+                rep = reshard_report(tr.opt, dst.opt,
+                                     survivors=ev.survivors)
+                t0 = time.perf_counter()
+                params, state = reshard_trainer(tr, dst, params, state,
+                                                survivors=ev.survivors)
+                jax.block_until_ready(state.step)
+                rep["step"] = t
+                rep["reshard_ms"] = (time.perf_counter() - t0) * 1e3
+                resizes.append(rep)
+                tr, fn = dst, dst.sim_step_fn()
+            batch = self._batch_extras(data.batch(t), global_batch, seq)
+            params, state, met = fn(params, state, batch)
+            losses.append(float(np.asarray(met["loss"]).reshape(-1)[0]))
+        return {"losses": losses, "resizes": resizes, "params": params,
+                "state": state, "trainer": tr}
+
+
+def parity_gap(losses: Sequence[float], baseline: Sequence[float],
+               tail: int = 10) -> float:
+    """One-sided final-loss gap (nats, avg of the last ``tail`` steps) of
+    an interrupted run vs its uninterrupted baseline — the same statistic
+    benchmarks/bench_convergence gates at ``PARITY_TOL``."""
+    k = min(tail, len(losses), len(baseline))
+    return (float(np.mean(np.asarray(losses[-k:])))
+            - float(np.mean(np.asarray(baseline[-k:]))))

@@ -315,7 +315,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
             micro_override=None, window_cache: bool = False,
             mesh_shape=None, verbose: bool = True,
             hierarchy: bool = False, codec: str = "sign1bit",
-            codec_arg=None, bucket_mb=None, audit: bool = False):
+            codec_arg=None, bucket_mb=None, audit: bool = False,
+            resize_to=None):
     spec = get(arch)
     shape = SH.SHAPES[shape_name]
     if shape_name not in spec.shapes:
@@ -332,7 +333,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
                               compute_dtype=jnp.bfloat16,
                               window_cache=window_cache)
     t0 = time.time()
-    n_buckets = n_dp_leaves = audit_rec = None
+    n_buckets = n_dp_leaves = audit_rec = elastic_rec = None
 
     if shape.kind == "train":
         n_workers = 1
@@ -356,6 +357,14 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
                      if getattr(tr.opt, "bucket_plan", None) is not None
                      else None)
         n_dp_leaves = sum(1 for dp in tr.opt.dp_mask if dp)
+        if resize_to:
+            # static pre/post-resize layout geometry: rebind the optimizer
+            # at the target width and record the remap plan — no arrays,
+            # no compile, just the two LeafLayout/bucket geometries
+            from repro.elastic import reshard_report, resize_opt
+            dst_opt = resize_opt(tr.opt, resize_to,
+                                 model_axis_sizes=tr.model_sizes)
+            elastic_rec = reshard_report(tr.opt, dst_opt)
         if audit:
             from repro.analysis import audit_trainer
             audit_rec = audit_trainer(tr, seq=shape.seq).to_dict()
@@ -407,6 +416,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
         "n_buckets": n_buckets,
         "n_dp_leaves": n_dp_leaves,
         "audit": audit_rec,
+        "elastic": elastic_rec,
         "micro": micro_override, "window_cache": window_cache,
         "kind": shape.kind,
         "flops_per_device": float(cost.get("flops", 0.0)),
@@ -479,6 +489,11 @@ def main():
                     help="run the IR communication audit on train shapes; "
                          "any violation fails the run (non-zero exit) and "
                          "prints the first offending collective")
+    ap.add_argument("--resize-to", type=int, default=None, metavar="M",
+                    help="record the elastic pre/post-resize layout "
+                         "geometry for a DP resize to M workers "
+                         "(repro.elastic.reshard_report) in the JSON "
+                         "record — static, no second compile")
     args = ap.parse_args()
 
     combos = []
@@ -502,7 +517,8 @@ def main():
                           window_cache=args.window_cache,
                           mesh_shape=ms, hierarchy=args.hierarchy,
                           codec=args.codec, codec_arg=args.codec_arg,
-                          bucket_mb=args.bucket_mb, audit=args.audit)
+                          bucket_mb=args.bucket_mb, audit=args.audit,
+                          resize_to=args.resize_to)
         except Exception as e:  # noqa: BLE001 — report, keep going
             rec = {"arch": a, "shape": s,
                    "mesh": "2x16x16" if mp else "16x16",

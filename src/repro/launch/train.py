@@ -48,6 +48,52 @@ def build_opt_cfg(args) -> OptimizerConfig:
         bucket_mb=args.bucket_mb)
 
 
+def _parse_resizes(specs):
+    events = []
+    for s in specs:
+        try:
+            step, m = s.split(":")
+            step, m = int(step), int(m)
+        except ValueError:
+            raise SystemExit(f"--resize expects STEP:M, got {s!r}")
+        events.append((step, m))
+    return sorted(events)
+
+
+def _run_elastic(args, cfg, opt_cfg, acct):
+    """Sim-mode run with in-run DP resizes via repro.elastic.FleetSim."""
+    from repro.elastic import FleetSim, ResizeEvent
+    from repro.train import TrainerConfig as TC
+    events = [ResizeEvent(step=s, workers=m)
+              for s, m in _parse_resizes(args.resize)]
+    fleet = FleetSim(cfg, opt_cfg, args.workers,
+                     trainer_cfg=TC(micro_batches=args.micro_batches),
+                     seed=args.seed)
+    t0 = time.time()
+    res = fleet.run(args.steps, global_batch=args.batch, seq=args.seq,
+                    events=events)
+    for t, loss in enumerate(res["losses"]):
+        if t % args.log_every == 0 or t == args.steps - 1:
+            print(f"step {t:5d} loss {loss:.4f} [{time.time()-t0:.1f}s]")
+    print(f"DONE: {args.steps} steps with {len(res['resizes'])} "
+          f"resize(s) ({time.time()-t0:.1f}s)")
+    for r in res["resizes"]:
+        print(f"  resize @ step {r['step']}: {r['n_from']} -> {r['n_to']} "
+              f"workers ({r['carried_entities']} EF entities carried, "
+              f"{r['dead_entities']} folded, fold={r['ef_fold']}) in "
+              f"{r['reshard_ms']:.1f}ms")
+    if args.save:
+        n_final = res["trainer"].n_workers
+        ckpt_io.save(args.save,
+                     {"params": res["params"], "state": res["state"]},
+                     step=args.steps,
+                     meta={"arch": cfg.name, "n_workers": n_final,
+                           "resizes": [
+                               {k: r[k] for k in ("step", "n_from", "n_to")}
+                               for r in res["resizes"]]})
+        print(f"saved checkpoint to {args.save} (width {n_final})")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -95,6 +141,13 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
+    ap.add_argument("--resize", action="append", default=None,
+                    metavar="STEP:M",
+                    help="sim mode only: resize the fleet to M workers "
+                         "before running STEP (repeatable). Routes the run "
+                         "through repro.elastic.FleetSim — EF state and "
+                         "anchors are resharded, not reset; the resize is "
+                         "recorded in the run summary")
     ap.add_argument("--multi-pod", action="store_true")
     args = ap.parse_args()
 
@@ -128,6 +181,12 @@ def main():
               f"{int(acct['n_inner'])} workers/pod; sync bytes/worker "
               f"intra={acct['compressed_bytes_per_sync_inner']/2**20:.2f}MiB "
               f"inter={acct['compressed_bytes_per_sync_outer']/2**20:.2f}MiB")
+
+    if args.resize:
+        if args.mode != "sim":
+            raise SystemExit("--resize needs --mode sim (the elastic "
+                             "resharding path runs over the sim trainer)")
+        return _run_elastic(args, cfg, opt_cfg, acct)
 
     if args.mode == "sim":
         params, state = tr.sim_init(jax.random.PRNGKey(args.seed))
@@ -174,7 +233,8 @@ def main():
           f"({time.time()-t0:.1f}s)")
     if args.save:
         ckpt_io.save(args.save, {"params": params, "state": state},
-                     step=args.steps, meta={"arch": cfg.name})
+                     step=args.steps,
+                     meta={"arch": cfg.name, "n_workers": n})
         print(f"saved checkpoint to {args.save}")
 
 

@@ -1,0 +1,414 @@
+"""Elastic data-parallelism: reshard correctness, fault-sim parity, and
+width-agnostic checkpoint restore.
+
+Property suite (hypothesis where available, deterministic sweep fallback
+as in test_bucketing.py) for the chunk remap at the heart of
+``repro.elastic.reshard``:
+
+  * the remap is a permutation of the true (unpadded) elements — the
+    natural leaf read back from the m-width view is bitwise the source;
+  * per-leaf true-element counts are conserved n -> m -> n and the clean
+    round trip is bitwise the identity;
+  * garbage written into pad positions of the source view never crosses
+    the remap (destination pads land exactly zero).
+
+Plus the PR's acceptance gates: bitwise m = n round trips of the full
+(params, state) trees across flat/hierarchical x per-leaf/bucketed,
+EF-residual mass conservation under shrink/grow, pod-alignment
+validation, n-worker checkpoints restored into m-worker trainers, and
+the (slow) kill -> shrink -> rejoin FleetSim run inside the
+bench_convergence parity tolerance.
+"""
+import os
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpointing import io as ckpt_io
+from repro.configs import get
+from repro.core import Hierarchy, OptimizerConfig, schedules as S
+from repro.core import compressor as C
+from repro.data import DataConfig, SyntheticLM
+from repro.elastic import (FleetSim, ResizeEvent, parity_gap, reshard_report,
+                           reshard_trainer, restore_resharded, worker_origin)
+import importlib
+
+# the package re-exports the `reshard` *function* under the same name as
+# the submodule; go through importlib for the module's private helpers
+R = importlib.import_module("repro.elastic.reshard")
+from repro.train import Trainer
+
+CFG = get("gpt2").smoke
+SEQ, BATCH = 16, 8
+
+OPT_BASE = dict(
+    name="zero_one_adam", lr=S.ConstantLr(1e-3),
+    var_policy=S.AdaptiveFreezePolicy(kappa=2),
+    sync_policy=S.LrProportionalSyncPolicy(warmup_steps=2, double_every=3,
+                                           max_interval=2))
+
+VARIANTS = {
+    "flat": {},
+    "flat_bucketed": dict(bucket_mb=0.25),
+    "hier": dict(hierarchy=Hierarchy(inner=2)),
+    "hier_bucketed": dict(hierarchy=Hierarchy(inner=2), bucket_mb=0.25),
+}
+
+
+# --------------------------------------------------------------------- #
+# chunk-remap properties
+# --------------------------------------------------------------------- #
+
+def _check_remap(shape, spec, n, m, seed, n_inner=1, m_inner=1):
+    lo_n = C.make_layout(shape, spec, n, n_inner=n_inner)
+    lo_m = C.make_layout(shape, spec, m, n_inner=m_inner)
+    size = int(np.prod(shape))
+    rng = np.random.default_rng(seed)
+    x = (rng.permutation(size) + 1.0).astype(np.float32).reshape(shape)
+    v = C.to_view(jnp.asarray(x), lo_n)
+    mask = C.pad_mask(lo_n)
+    clean = v if mask is None else v * mask
+    dirty = v if mask is None else clean + 1e9 * (1 - mask)
+
+    fwd = R._remap_fn(lo_n, lo_m)
+    if lo_n == lo_m:
+        # the identity short-circuit: bitwise, pads and all
+        np.testing.assert_array_equal(np.asarray(fwd(dirty)),
+                                      np.asarray(dirty))
+        return
+    v_m = fwd(dirty)
+    # permutation of true elements: the natural leaf reads back bitwise
+    np.testing.assert_array_equal(np.asarray(C.from_view(v_m, lo_m)), x)
+    # pad garbage never crosses: destination pads land exactly zero
+    mask_m = C.pad_mask(lo_m)
+    if mask_m is not None:
+        assert (np.asarray(v_m * (1 - mask_m)) == 0).all()
+    # true-count conservation across the widths
+    tot_n, per_n = C.true_counts(lo_n)
+    tot_m, per_m = C.true_counts(lo_m)
+    assert tot_n == tot_m == size
+    assert per_n.sum() == per_m.sum() == size
+    # n -> m -> n is bitwise the identity on clean views
+    v_back = R._remap_fn(lo_m, lo_n)(fwd(clean))
+    np.testing.assert_array_equal(np.asarray(v_back), np.asarray(clean))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(size=st.integers(1, 700),
+           n=st.sampled_from([1, 2, 4, 8]),
+           m=st.sampled_from([1, 2, 4, 8]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_remap_properties(size, n, m, seed):
+        _check_remap((size,), None, n, m, seed)
+else:
+    @pytest.mark.parametrize("size,n,m,seed", [
+        (5, 4, 2, 0),
+        (700, 4, 8, 1),
+        (37, 4, 4, 2),     # identity short-circuit
+        (64, 2, 4, 3),
+        (1, 1, 4, 4),
+        (513, 8, 2, 5),
+    ])
+    def test_remap_properties(size, n, m, seed):
+        _check_remap((size,), None, n, m, seed)
+
+
+@pytest.mark.parametrize("shape,spec,n,m,ni,mi", [
+    ((13, 40), P(None, "model"), 4, 2, 1, 1),   # structured, padded rows
+    ((6, 4, 24), P(None, None, "model"), 2, 4, 1, 1),
+    ((37,), None, 4, 4, 2, 2),                  # hier identity
+    ((200,), None, 4, 2, 2, 2),                 # hier shrink
+    ((200,), None, 4, 2, 2, 1),                 # hier -> flat
+])
+def test_remap_structured_and_hierarchical(shape, spec, n, m, ni, mi):
+    _check_remap(shape, spec, n, m, seed=7, n_inner=ni, m_inner=mi)
+
+
+# --------------------------------------------------------------------- #
+# origin maps
+# --------------------------------------------------------------------- #
+
+def test_worker_origin_marks_joiners():
+    assert worker_origin(2, 4) == (0, 1, -1, -1)
+    assert worker_origin(4, 2) == (0, 1)
+    assert worker_origin(4, 2, survivors=(0, 2)) == (0, 2)
+    assert worker_origin(4, 4, survivors=(3, 1)) == (3, 1, -1, -1)
+
+
+def test_worker_origin_validates():
+    with pytest.raises(ValueError, match="duplicates"):
+        worker_origin(4, 4, survivors=(0, 0))
+    with pytest.raises(ValueError, match="not a worker"):
+        worker_origin(4, 4, survivors=(5,))
+    with pytest.raises(ValueError, match="do not fit"):
+        worker_origin(4, 2, survivors=(0, 1, 2))
+
+
+# --------------------------------------------------------------------- #
+# trained-state round trips (the tentpole acceptance)
+# --------------------------------------------------------------------- #
+
+_TRAINED = {}
+
+
+def _trained(variant, n=4, steps=6):
+    """One trained (trainer, params, state) per variant, cached — every
+    test reads it, none mutates it (jax arrays are immutable)."""
+    key = (variant, n, steps)
+    if key not in _TRAINED:
+        opt_cfg = OptimizerConfig(**OPT_BASE, **VARIANTS[variant])
+        tr = Trainer(CFG, opt_cfg, n_workers=n)
+        params, state = tr.sim_init(jax.random.PRNGKey(5))
+        fn = tr.sim_step_fn()
+        data = SyntheticLM(DataConfig(vocab=CFG.vocab, seq_len=SEQ,
+                                      global_batch=BATCH, seed=5))
+        for t in range(steps):
+            params, state, _ = fn(params, state, data.batch(t))
+        _TRAINED[key] = (tr, params, state)
+    return _TRAINED[key]
+
+
+def _assert_trees_bitwise(t0, t1):
+    l0, l1 = jax.tree.leaves(t0), jax.tree.leaves(t1)
+    assert len(l0) == len(l1)
+    for a, b in zip(l0, l1):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("variant", list(VARIANTS))
+def test_reshard_roundtrip_bitwise_at_same_width(variant):
+    """m = n resharding is the identity, bitwise, for params + EF state +
+    anchors — across flat/hierarchical x per-leaf/bucketed."""
+    tr, params, state = _trained(variant)
+    dst = Trainer(CFG, tr.opt_cfg, n_workers=tr.n_workers)
+    p2, s2 = reshard_trainer(tr, dst, params, state)
+    _assert_trees_bitwise(params, p2)
+    _assert_trees_bitwise(state, s2)
+
+
+def test_shrink_conserves_ef_mass_and_err_s_content():
+    """4 -> 2 with a killed worker: the total pending worker-side
+    correction (1/n)*sum(err_w) is conserved, and the server-side
+    residual's true elements move positionally (bitwise through the
+    natural leaf)."""
+    tr, params, state = _trained("flat")
+    dst = Trainer(CFG, tr.opt_cfg, n_workers=2)
+    p2, s2 = reshard_trainer(tr, dst, params, state, survivors=(0, 2))
+
+    saw_nonzero = False
+    for i, (ew, ew2) in enumerate(zip(state.err_w, s2.err_w)):
+        if ew is None:
+            assert ew2 is None
+            continue
+        m_src = float(np.asarray(ew, np.float64).sum()) / tr.n_workers
+        m_dst = float(np.asarray(ew2, np.float64).sum()) / 2
+        np.testing.assert_allclose(m_dst, m_src, rtol=1e-5, atol=1e-7)
+        saw_nonzero |= bool(np.abs(np.asarray(ew)).sum() > 0)
+    assert saw_nonzero, "run too short: EF residuals never became nonzero"
+
+    for i, (es, es2) in enumerate(zip(state.err_s, s2.err_s)):
+        if es is None:
+            assert es2 is None
+            continue
+        lo_s, lo_d = tr.opt.layouts[i], dst.opt.layouts[i]
+        nat_src = C.from_view(es[R._owner_of_rows(lo_s.n, lo_s.n_inner)],
+                              lo_s)
+        nat_dst = C.from_view(es2[R._owner_of_rows(lo_d.n, lo_d.n_inner)],
+                              lo_d)
+        np.testing.assert_array_equal(np.asarray(nat_src),
+                                      np.asarray(nat_dst))
+
+    rep = reshard_report(tr.opt, dst.opt, survivors=(0, 2))
+    assert rep["n_from"] == 4 and rep["n_to"] == 2
+    assert rep["carried_entities"] == 2 and rep["dead_entities"] == 2
+    assert rep["joiner_workers"] == 0 and rep["ef_fold"] is True
+
+
+def test_grow_zeroes_joiner_u_and_clones_params():
+    """2 -> 4 rejoin: joiners start with zero local accumulation, clone a
+    survivor's params/momentum, and residual mass is conserved through
+    the fold (alpha = m_e/n_e)."""
+    tr, params, state = _trained("flat", n=2)
+    dst = Trainer(CFG, tr.opt_cfg, n_workers=4)
+    p4, s4 = reshard_trainer(tr, dst, params, state)
+
+    for x in jax.tree.leaves(p4):
+        np.testing.assert_array_equal(np.asarray(x[2]), np.asarray(x[0]))
+        np.testing.assert_array_equal(np.asarray(x[3]), np.asarray(x[0]))
+    for u in s4.u:
+        if u is None:
+            continue
+        assert (np.asarray(u[2:]) == 0).all(), "joiner u must start at zero"
+    for ew, ew4 in zip(state.err_w, s4.err_w):
+        if ew is None:
+            continue
+        m_src = float(np.asarray(ew, np.float64).sum()) / 2
+        m_dst = float(np.asarray(ew4, np.float64).sum()) / 4
+        np.testing.assert_allclose(m_dst, m_src, rtol=1e-5, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(s4.step),
+                                  np.full((4,), np.asarray(state.step)[0]))
+
+    rep = reshard_report(tr.opt, dst.opt)
+    assert rep["joiner_workers"] == 2 and rep["dead_entities"] == 0
+    assert rep["ef_fold"] is True  # entity count changed: 2 -> 4
+
+
+def test_hierarchical_survivors_must_be_pod_aligned():
+    tr, _, _ = _trained("hier")
+    dst = Trainer(CFG, tr.opt_cfg, n_workers=2)
+    with pytest.raises(ValueError, match="pod-aligned"):
+        reshard_report(tr.opt, dst.opt, survivors=(0, 2))
+    # pod-mates kept together is fine
+    rep = reshard_report(tr.opt, dst.opt, survivors=(2, 3))
+    assert rep["carried_entities"] == 1 and rep["dead_entities"] == 1
+
+
+def test_duplicated_pod_carry_raises():
+    """Hier (inner=2) -> flat: two destination entities drawing from one
+    source pod would duplicate its EF residual."""
+    tr, _, _ = _trained("hier")
+    flat_cfg = OptimizerConfig(**OPT_BASE)
+    dst = Trainer(CFG, flat_cfg, n_workers=2)
+    with pytest.raises(ValueError, match="several destination"):
+        reshard_report(tr.opt, dst.opt, survivors=(0, 1))
+
+
+def test_hierarchical_pod_shrink_roundtrip_bitwise():
+    """Kill a whole pod (4 -> 2, inner=2), rejoin it (2 -> 4): surviving
+    pod's params/EF state come back bitwise; the resized state trains."""
+    tr, params, state = _trained("hier")
+    mid = Trainer(CFG, tr.opt_cfg, n_workers=2)
+    p2, s2 = reshard_trainer(tr, mid, params, state, survivors=(0, 1))
+    back = Trainer(CFG, tr.opt_cfg, n_workers=4)
+    p4, s4 = reshard_trainer(mid, back, p2, s2)
+    for x, x4 in zip(jax.tree.leaves(params), jax.tree.leaves(p4)):
+        np.testing.assert_array_equal(np.asarray(x[:2]),
+                                      np.asarray(x4[:2]))
+    fn = back.sim_step_fn()
+    data = SyntheticLM(DataConfig(vocab=CFG.vocab, seq_len=SEQ,
+                                  global_batch=BATCH, seed=11))
+    _, _, met = fn(p4, s4, data.batch(0))
+    assert np.isfinite(float(np.asarray(met["loss"]).reshape(-1)[0]))
+
+
+# --------------------------------------------------------------------- #
+# width-agnostic checkpoint restore
+# --------------------------------------------------------------------- #
+
+def _save_trained(tmp_path, variant="flat", n=4):
+    tr, params, state = _trained(variant, n=n)
+    path = os.path.join(tmp_path, "ck.npz")
+    ckpt_io.save(path, {"params": params, "state": state}, step=6,
+                 meta={"arch": CFG.name, "n_workers": n})
+    return path, tr, params, state
+
+
+def test_restore_resharded_same_width_is_bitwise(tmp_path):
+    path, tr, params, state = _save_trained(tmp_path)
+    dst = Trainer(CFG, tr.opt_cfg, n_workers=4)
+    p, s, step, meta = restore_resharded(path, dst)
+    assert step == 6 and meta["n_workers"] == 4
+    _assert_trees_bitwise(params, p)
+    _assert_trees_bitwise(state, s)
+
+
+def test_restore_resharded_into_narrower_trainer(tmp_path):
+    path, tr, _, _ = _save_trained(tmp_path)
+    dst = Trainer(CFG, tr.opt_cfg, n_workers=2)
+    p, s, step, _ = restore_resharded(path, dst, survivors=(0, 2))
+    assert step == 6
+    assert tuple(s.step.shape) == (2,)
+    for x in jax.tree.leaves(p):
+        assert x.shape[0] == 2
+    # the resharded tree is live: one more training step runs
+    fn = dst.sim_step_fn()
+    data = SyntheticLM(DataConfig(vocab=CFG.vocab, seq_len=SEQ,
+                                  global_batch=BATCH, seed=7))
+    _, _, met = fn(p, s, data.batch(0))
+    assert np.isfinite(float(np.asarray(met["loss"]).reshape(-1)[0]))
+
+
+def test_direct_width_mismatch_restore_points_at_elastic(tmp_path):
+    path, tr, _, _ = _save_trained(tmp_path)
+    dst = Trainer(CFG, tr.opt_cfg, n_workers=2)
+    params, state = jax.eval_shape(dst.sim_init, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match=r"n=4.*m=2.*repro\.elastic"):
+        ckpt_io.restore(path, {"params": params, "state": state})
+
+
+def test_restore_missing_width_meta_requires_override(tmp_path):
+    tr, params, state = _trained("flat")
+    path = os.path.join(tmp_path, "ck.npz")
+    ckpt_io.save(path, {"params": params, "state": state}, step=6)
+    dst = Trainer(CFG, tr.opt_cfg, n_workers=2)
+    with pytest.raises(ValueError, match="n_workers"):
+        restore_resharded(path, dst)
+    p, s, _, _ = restore_resharded(path, dst, src_workers=4)
+    assert tuple(s.step.shape) == (2,)
+
+
+def test_restore_rejects_dtype_mismatch(tmp_path):
+    path = os.path.join(tmp_path, "ck.npz")
+    ckpt_io.save(path, {"a": jnp.ones((3,), jnp.float32)})
+    like = {"a": jnp.ones((3,), jnp.int32)}
+    with pytest.raises(ValueError, match="dtype float32 != expected int32"):
+        ckpt_io.restore(path, like)
+
+
+# --------------------------------------------------------------------- #
+# fault-injected fleet runs
+# --------------------------------------------------------------------- #
+
+def test_fleet_sim_validates_schedule():
+    fleet = FleetSim(CFG, OptimizerConfig(**OPT_BASE), 4)
+    with pytest.raises(ValueError, match="outside"):
+        fleet.run(4, events=[ResizeEvent(step=9, workers=2)])
+    with pytest.raises(ValueError, match="two resizes"):
+        fleet.run(4, events=[ResizeEvent(step=1, workers=2),
+                             ResizeEvent(step=1, workers=4)])
+    with pytest.raises(ValueError, match="divide"):
+        fleet.run(4, global_batch=8, events=[ResizeEvent(step=1, workers=3)])
+
+
+@pytest.mark.slow
+def test_fleet_kill_shrink_rejoin_within_parity_tol():
+    """Kill worker 1 at step 10 (4 -> 2, survivors keep their slots),
+    rejoin at step 20 (2 -> 4): the interrupted run's tail loss stays
+    within the bench_convergence parity gate of the uninterrupted
+    baseline."""
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]
+                           / "benchmarks"))
+    from bench_convergence import PARITY_TOL
+
+    opt_cfg = OptimizerConfig(**OPT_BASE)
+    steps = 30
+    base = FleetSim(CFG, opt_cfg, 4, seed=3).run(
+        steps, global_batch=BATCH, seq=SEQ)
+    el = FleetSim(CFG, opt_cfg, 4, seed=3).run(
+        steps, global_batch=BATCH, seq=SEQ,
+        events=[ResizeEvent(step=10, workers=2, survivors=(0, 2)),
+                ResizeEvent(step=20, workers=4)])
+    assert len(el["resizes"]) == 2
+    shrink, grow = el["resizes"]
+    assert (shrink["n_from"], shrink["n_to"]) == (4, 2)
+    assert shrink["dead_entities"] == 2 and shrink["ef_fold"] is True
+    assert (grow["n_from"], grow["n_to"]) == (2, 4)
+    assert grow["joiner_workers"] == 2
+    assert el["trainer"].n_workers == 4
+    gap = parity_gap(el["losses"], base["losses"])
+    assert gap <= PARITY_TOL, (
+        f"elastic run diverged: tail-loss gap {gap:.3f} nats > "
+        f"{PARITY_TOL} vs the uninterrupted baseline")

@@ -80,8 +80,6 @@ def test_ef_compress_view_matches_compressor(shape, spec, n, mode):
 ])
 def test_server_compress_view_matches_jnp(shape, spec, n, mode, widx):
     lo = C.make_layout(shape, spec, n)
-    if mode == "row" and len(lo.view_shape) == 2:
-        pytest.skip("row granularity on flatten views stays on the jnp path")
     key = jax.random.PRNGKey(widx + 17)
     avg = jax.random.normal(key, lo.chunk_shape)
     es = jax.random.normal(jax.random.fold_in(key, 1), lo.chunk_shape) * 0.2
@@ -91,6 +89,25 @@ def test_server_compress_view_matches_jnp(shape, spec, n, mode, widx):
         es = es * s_mask[0]
     p_ref, s_ref, e_ref = AR._server_compress((avg + es)[None], lo, mode,
                                               s_mask)
+    if mode == "row" and len(lo.view_shape) == 2:
+        # no fused server kernel exists for row granularity on flatten
+        # (2-D) views — the server side degenerates to per-element scales
+        # there and dispatch.server_compress_view asserts the case away.
+        # The capability lives one level up: Sign1BitCodec.encode_server
+        # must route this case to the jnp path even under use_pallas=True
+        # and reproduce the reference exactly. Pin that routing instead of
+        # skipping.
+        from repro.core.codecs import Sign1BitCodec
+        payload, e_c = Sign1BitCodec().encode_server(
+            avg, es, lo, mode, s_mask, widx, use_pallas=True)
+        np.testing.assert_array_equal(np.asarray(payload["packed"]),
+                                      np.asarray(p_ref))
+        np.testing.assert_allclose(np.asarray(payload["scales"]),
+                                   np.asarray(s_ref), rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(e_c),
+                                   np.asarray(e_ref)[0],
+                                   rtol=1e-5, atol=1e-6)
+        return
     p_k, s_k, e_k = K.server_compress_view(avg[None], es[None], lo, mode,
                                            widx)
     assert s_k.shape == s_ref.shape
