@@ -58,8 +58,31 @@ def avg_step_time(arch, optimizer, n_gpus, bw, alpha, compute_ms,
     return compute_ms / 1e3 + comm_s
 
 
+def _tp_local_shapes(shapes, specs, model_axis_sizes):
+    """TP-LOCAL abstract params: dims a spec shards over a model axis are
+    divided by that axis's size — the fully-manual-regime convention
+    ``build_optimizer`` expects alongside ``model_axis_sizes`` (mirrors
+    ``train.step.Trainer._shrink_model``)."""
+    import jax
+    leaves, tdef = jax.tree.flatten(shapes)
+    specs_f = tdef.flatten_up_to(specs)
+    out = []
+    for leaf, spec in zip(leaves, specs_f):
+        shape = list(leaf.shape)
+        for ax, e in enumerate(tuple(spec) if spec is not None else ()):
+            if e is None:
+                continue
+            f = 1
+            for name in (e if isinstance(e, tuple) else (e,)):
+                f *= model_axis_sizes.get(name, 1)
+            assert shape[ax] % f == 0, (leaf.shape, spec, f)
+            shape[ax] //= f
+        out.append(jax.ShapeDtypeStruct(tuple(shape), leaf.dtype))
+    return jax.tree.unflatten(tdef, out)
+
+
 def bucket_latency_sweep(arch="bert-large", workers=16,
-                         bucket_mbs=(None, 4.0, 32.0)):
+                         bucket_mbs=(None, 4.0, 32.0), tp=0):
     """Exchange-unit counts, the modeled per-sync dispatch-latency floor,
     and the modeled Ethernet step-time breakdown per bucket budget, from
     the real comm layouts.
@@ -70,17 +93,27 @@ def bucket_latency_sweep(arch="bert-large", workers=16,
     backward; ``step_ms_overlapped`` hides it inside the backward window
     (``hw.BACKWARD_FRACTION`` of the paper's measured compute), leaving
     only ``exposed_comm_ms_overlapped`` on the critical path — the number
-    the readiness-ordered per-unit issue targets."""
+    the readiness-ordered per-unit issue targets.
+
+    ``tp > 0`` plans against TP-local shards (``model_axis_sizes=
+    {"model": tp}``): same-spec shards then pack into *sharded* fused
+    buckets (core/bucketing.py), so the sweep shows the exchange-unit
+    collapse surviving tensor parallelism instead of shattering into
+    per-leaf singletons."""
     cfg = get(arch).config
     tmpl = T.model_template(cfg)
     shapes = abstract_params(tmpl)
     specs = param_specs(tmpl)
+    ms = {"model": tp} if tp else None
+    if ms:
+        shapes = _tp_local_shapes(shapes, specs, ms)
     compute_ms = hw.PAPER_COMPUTE_MS.get(arch, {}).get(workers, 0.0)
     overlap_ms = hw.BACKWARD_FRACTION * compute_ms
     records = []
     for mb in bucket_mbs:
         ocfg = OptimizerConfig(name="zero_one_adam", bucket_mb=mb)
-        opt = build_optimizer(ocfg, shapes, specs=specs, n_workers=workers)
+        opt = build_optimizer(ocfg, shapes, specs=specs, n_workers=workers,
+                              model_axis_sizes=ms)
         acct = comm_accounting(opt)
         colls = acct["collectives_per_sync"]
         latency_floor_ms = colls * hw.ETHERNET_LATENCY * 1e3
@@ -89,7 +122,7 @@ def bucket_latency_sweep(arch="bert-large", workers=16,
         exposed_ms = max(0.0, sync_comm_ms - overlap_ms)
         records.append({
             "bench": "throughput_buckets", "arch": arch,
-            "workers": workers, "bucket_mb": mb,
+            "workers": workers, "bucket_mb": mb, "tp": tp,
             "dp_leaves": int(acct["dp_leaves"]),
             "exchange_units": int(acct["exchange_units"]),
             "collectives_per_sync": int(colls),
@@ -170,6 +203,24 @@ def main(argv=None):
     rows.append(("bucket_dispatch_floor", 0.0,
                  f"per_leaf={sweep[0]['collectives_per_sync']};"
                  f"best={min(r['collectives_per_sync'] for r in sweep)}"))
+
+    # same sweep against tensor-parallel-local shards: sharded fused
+    # buckets must keep the unit collapse under TP
+    sweep_tp = bucket_latency_sweep(bucket_mbs=[None] + list(args.bucket_mb),
+                                    tp=2)
+    records.extend(sweep_tp)
+    print("# Sharded-bucket sweep — same model planned over tp=2 "
+          "TP-local shards")
+    print("bucket_mb,tp,dp_leaves,exchange_units,collectives_per_sync,"
+          "sync_latency_floor_ms")
+    for r in sweep_tp:
+        mb = "per-leaf" if r["bucket_mb"] is None else r["bucket_mb"]
+        print(f"{mb},{r['tp']},{r['dp_leaves']},{r['exchange_units']},"
+              f"{r['collectives_per_sync']},"
+              f"{r['sync_latency_floor_ms']:.2f}")
+    rows.append(("bucket_dispatch_floor_tp2", 0.0,
+                 f"per_leaf={sweep_tp[0]['collectives_per_sync']};"
+                 f"best={min(r['collectives_per_sync'] for r in sweep_tp)}"))
     if args.json:
         with open(args.json, "a") as f:
             for rec in records:

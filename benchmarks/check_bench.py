@@ -61,7 +61,7 @@ MODELED = {"fixed_cost_buckets": ("bits_per_param_sync", "sync_comm_ms"),
            "elastic_reshard": ()}
 #: field(s) identifying one record within its kind
 KEY = {"fixed_cost_buckets": ("bucket_mb",),
-       "throughput_buckets": ("bucket_mb",),
+       "throughput_buckets": ("bucket_mb", "tp"),
        "serve_publish": ("codec",),
        "serve_throughput": ("slots", "n_requests", "max_new_tokens"),
        "elastic_reshard": ("scenario",)}
@@ -118,12 +118,16 @@ def _fresh_fixed_cost(snapshot):
 
 def _fresh_throughput(snapshot):
     from benchmarks.bench_throughput import bucket_latency_sweep
-    mbs = [rec["bucket_mb"] for rec in snapshot]
-    arch = snapshot[0]["arch"]
-    workers = snapshot[0]["workers"]
-    fresh = bucket_latency_sweep(arch=arch, workers=workers,
-                                 bucket_mbs=tuple(mbs))
-    return {_key("throughput_buckets", r): r for r in fresh}
+    groups = {}
+    for rec in snapshot:
+        groups.setdefault((rec["arch"], rec["workers"], rec["tp"]),
+                          []).append(rec["bucket_mb"])
+    out = {}
+    for (arch, workers, tp), mbs in groups.items():
+        fresh = bucket_latency_sweep(arch=arch, workers=workers,
+                                     bucket_mbs=tuple(mbs), tp=tp)
+        out.update({_key("throughput_buckets", r): r for r in fresh})
+    return out
 
 
 def _fresh_serve_publish(snapshot):

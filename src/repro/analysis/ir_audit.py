@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bucketing as BK
+from repro.core import compat
 from repro.core.comm import Comm
 
 # collective primitives, normalized ("psum2" is how psum binds on newer
@@ -220,9 +221,29 @@ def trace_collectives(trainer, *, seq: int = 16,
     if b % trainer.tc.micro_batches:
         raise ValueError(f"batch_per_worker={b} must be divisible by "
                          f"micro_batches={trainer.tc.micro_batches}")
-    params_i = jax.tree.unflatten(
+    # The per-worker step is traced the way the mesh path nests it: the
+    # outer region is manual over the WORKER axes only, so the forward
+    # sees model-GLOBAL leaves; the optimizer's own nested shard_map
+    # (``Trainer._per_worker_step``) then enters the manual-'model'
+    # domain with TP-local shapes, and its model-axis psums trace there.
+    params_inner = jax.tree.unflatten(
         trainer.treedef, list(jax.tree.leaves(trainer.inner_abstract)))
-    state_i = jax.eval_shape(trainer.opt.init, params_i)
+    params_i = jax.tree.unflatten(
+        trainer.treedef, list(jax.tree.leaves(trainer.local_abstract)))
+    state_i = jax.eval_shape(trainer.opt.init, params_inner)
+    model_sizes = dict(getattr(trainer, "model_sizes", {}) or {})
+    if model_sizes:
+        # worker-local / model-global state, as the outer region holds it
+        ms = trainer.tree_specs.state_model_specs()
+
+        def grow(x, s):
+            if not hasattr(x, "shape"):
+                return x
+            shape = trainer._grow_model(
+                x.shape, tuple(s) if s is not None else None)
+            return jax.ShapeDtypeStruct(shape, x.dtype)
+
+        state_i = jax.tree.map(grow, state_i, ms)
     batch_i = _abstract_batch(trainer, b, seq)
 
     comm = Comm(axes)
@@ -230,16 +251,15 @@ def trace_collectives(trainer, *, seq: int = 16,
     if wrap_step is not None:
         one = wrap_step(one)
 
-    from jax.experimental.shard_map import shard_map
     P = jax.sharding.PartitionSpec
-    # bind TP model axes too (if any), so manual-mode model psums trace
+    # bind TP model axes too (if any) — auto in the outer region
     mesh_axes, mesh_sizes = list(axes), list(sizes)
-    for a, s in getattr(trainer, "model_sizes", {}).items():
+    for a, s in model_sizes.items():
         mesh_axes.append(a)
         mesh_sizes.append(s)
     mesh = _abstract_mesh(tuple(mesh_axes), tuple(mesh_sizes))
-    f = shard_map(one, mesh=mesh, in_specs=P(), out_specs=P(),
-                  check_rep=False)
+    f = compat.shard_map(one, in_specs=P(), out_specs=P(),
+                         axis_names=set(axes), mesh=mesh, check=False)
     closed, out_shape = jax.make_jaxpr(f, return_shape=True)(
         params_i, state_i, batch_i)
 
@@ -343,8 +363,13 @@ def _allowance(c: TracedCollective, trainer) -> Optional[str]:
     if c.op in ("psum", "pmax", "pmin", "pbroadcast") \
             and c.elems <= _SMALL_ELEMS:
         return "control/metric scalar"
+    # EP token routing lives inside the decoder layer scan; the optimizer
+    # exchange issues from per-unit cond regions outside any loop. The
+    # in_loop discriminator keeps this allowance from swallowing the whole
+    # exchange when the EP suffix covers every worker axis (deepseek /
+    # llama4 smokes: n_experts % n_workers == 0 -> ep_axes == worker axes).
     ep = set(trainer.ep_axes)
-    if ep and set(c.axes) <= ep:
+    if ep and set(c.axes) <= ep and c.in_loop:
         return "expert-parallel dispatch"
     if (trainer.ep_degree > 1 and c.op == "psum"
             and set(c.axes) <= set(trainer._residual_axes())):

@@ -20,14 +20,26 @@ view shape, and true counts as that leaf's own flatten layout, which is
 what makes the one-leaf-per-bucket configuration bitwise-identical to the
 per-leaf path (asserted in tests/test_bucketing.py).
 
-Only leaves that are safe to repack are fused: flatten layouts with
-``rest_factor == 1`` and no tensor-parallel sharding on the comm view
-(repacking moves elements across chunk boundaries, which is only legal
-when the view is unsharded and unstructured), sharing one dtype per
-bucket. Every other DP leaf — GSPMD-structured views, fully-manual TP
-shards — becomes a *singleton* bucket that keeps the leaf's own layout and
-vspec, so the exchange code path is uniformly per-bucket while the
-semantics of those leaves are untouched.
+Only leaves that are safe to repack are fused — in two regimes:
+
+* **Unsharded flatten leaves** (``rest_factor == 1``, trivial vspec) fuse
+  freely: repacking moves elements across chunk boundaries, which is
+  legal because the view is unsharded and unstructured.
+* **Tensor-parallel-local flatten shards** (``rest_factor > 1`` with the
+  canonical manual-TP vspec ``(None, ax)``) fuse with same-vspec,
+  same-``rest_factor``, same-dtype peers into a *sharded* fused bucket: a
+  per-shard flat repack whose bucket layout keeps the members' shared
+  ``rest_factor`` and carries spec ``P(ax)``, so its scales still psum
+  over the model axes with global denominators and the bucket's sharded
+  state leaves derive their specs through ``view_spec_entries``
+  unchanged. Repacking within one model shard never crosses a shard
+  boundary — every worker holds the same local geometry (SPMD), so the
+  pack is a pure per-shard permutation.
+
+One dtype per bucket, always. Remaining DP leaves — GSPMD-structured
+views, mixed/non-canonical TP specs — become *singleton* buckets that
+keep the leaf's own layout and vspec, so the exchange code path is
+uniformly per-bucket while the semantics of those leaves are untouched.
 
 Semantics note (documented in README "Bucketed exchange & overlap"): codec
 scale/threshold granularities are defined over the codec's buffer — with
@@ -73,7 +85,9 @@ class Bucket:
     fused: bool                     # True -> flat repack of true elements
     offsets: Tuple[int, ...]        # per-member start in bucket flat order
     sizes: Tuple[int, ...]          # per-member true element count
-    spec: Any                       # natural-leaf TP spec (singleton only)
+    spec: Any                       # TP spec: the leaf's own for singletons,
+                                    # the canonical P(ax) for sharded fused
+                                    # buckets, None for unsharded fused ones
     vspec: Tuple                    # TP entries of the bucket view shape
 
     @property
@@ -102,14 +116,23 @@ def _true_size(layout: C.LeafLayout) -> int:
 def fusable(layout: C.LeafLayout, vspec) -> bool:
     """Whether a leaf's comm view may be repacked into a fused bucket.
 
-    Repacking reassigns elements to chunk rows, so it is only legal for
-    flatten views with no tensor-parallel structure: ``rest_factor > 1``
-    means the view is a TP-local shard whose scales psum over model axes,
-    and a sharded vspec means GSPMD owns the element placement.
+    Repacking reassigns elements to chunk rows, so it needs a flatten view
+    (GSPMD-structured views keep element placement with the partitioner).
+    Unsharded flatten views (``rest_factor == 1``, trivial vspec) always
+    qualify. TP-local flatten shards (``rest_factor > 1``) qualify when
+    they carry the canonical manual-TP vspec ``(None, ax)`` — the repack
+    then happens *within* one model shard, and same-vspec peers share it
+    (grouping by (dtype, rest_factor, vspec) is ``make_bucket_plan``'s
+    job); any other sharded vspec stays a singleton.
     """
-    if not layout.flatten or layout.rest_factor != 1:
+    if not layout.flatten:
         return False
-    return vspec is None or all(e is None for e in tuple(vspec))
+    if layout.rest_factor == 1:
+        return vspec is None or all(e is None for e in tuple(vspec))
+    if vspec is None:
+        return False
+    ent = tuple(vspec)
+    return len(ent) == 2 and ent[0] is None and ent[1] is not None
 
 
 def make_bucket_plan(plan: LeafPlan, bucket_mb: float,
@@ -136,6 +159,28 @@ def make_bucket_plan(plan: LeafPlan, bucket_mb: float,
     pend: List[int] = []        # member leaf indices of the open fused bucket
     pend_elems = 0
 
+    def _leaf_dtype(i) -> np.dtype:
+        """The element dtype of DP leaf i — resolved strictly: two
+        dtype-less leaves must never silently fuse across genuinely
+        different element types (they'd both compare equal as None)."""
+        dt = getattr(plan.leaves[i], "dtype", None)
+        if dt is None:
+            raise ValueError(
+                f"cannot resolve the element dtype of DP leaf {i} "
+                f"(type {type(plan.leaves[i]).__name__}, layout shape "
+                f"{plan.layouts[i].shape}): fused buckets hold one dtype, "
+                f"so every bucketable leaf must be an array or "
+                f"ShapeDtypeStruct-like aval with a .dtype")
+        return np.dtype(dt)
+
+    def _fuse_key(i):
+        """(dtype, rest_factor, vspec) — leaves fuse only within one key.
+        The vspec component is the canonical ``(None, ax)`` for TP-local
+        shards (rest_factor > 1) and None for unsharded leaves."""
+        lo = plan.layouts[i]
+        vkey = tuple(vspecs[i]) if lo.rest_factor > 1 else None
+        return (_leaf_dtype(i), lo.rest_factor, vkey)
+
     def close_fused():
         nonlocal pend, pend_elems
         if not pend:
@@ -145,12 +190,25 @@ def make_bucket_plan(plan: LeafPlan, bucket_mb: float,
         for s in sizes:
             offsets.append(off)
             off += s
-        lo = C.make_layout((off,), None, plan.n, n_inner=n_inner)
+        rf = plan.layouts[pend[0]].rest_factor
+        if rf > 1:
+            # sharded fused bucket: per-shard flat repack over the members'
+            # shared model axes — layout keeps rest_factor so the scale
+            # denominators stay global, spec/vspec carry the model axes
+            from jax.sharding import PartitionSpec as P
+            ax = tuple(vspecs[pend[0]])[1]
+            spec = P(ax)
+            lo = C.make_layout((off,), spec, plan.n, rest_factor=rf,
+                               force_flatten=True, n_inner=n_inner)
+            vspec = C.view_spec_entries(lo, spec)
+        else:
+            spec = None
+            lo = C.make_layout((off,), None, plan.n, n_inner=n_inner)
+            vspec = (None,) * len(lo.view_shape)
         bi = len(buckets)
         buckets.append(Bucket(members=tuple(pend), layout=lo, fused=True,
                               offsets=tuple(offsets), sizes=sizes,
-                              spec=None,
-                              vspec=(None,) * len(lo.view_shape)))
+                              spec=spec, vspec=vspec))
         for i in pend:
             leaf_bucket[i] = bi
         pend, pend_elems = [], 0
@@ -172,10 +230,9 @@ def make_bucket_plan(plan: LeafPlan, bucket_mb: float,
             leaf_bucket[i] = bi
             continue
         size = _true_size(lo)
-        dtype = getattr(plan.leaves[i], "dtype", None)
-        pend_dtype = (getattr(plan.leaves[pend[0]], "dtype", None)
-                      if pend else None)
-        if pend and (pend_elems + size > budget or dtype != pend_dtype):
+        key = _fuse_key(i)
+        pend_key = _fuse_key(pend[0]) if pend else None
+        if pend and (pend_elems + size > budget or key != pend_key):
             close_fused()
         pend.append(i)
         pend_elems += size

@@ -77,16 +77,18 @@ class Codec:
 
     def encode_worker(self, z, err, layout: C.LeafLayout, mode: str, mask,
                       model_axes=(), inner_index=None, use_pallas=False,
-                      cst=None) -> Tuple[Dict[str, jnp.ndarray], Any]:
+                      cst=None, vspec=None
+                      ) -> Tuple[Dict[str, jnp.ndarray], Any]:
         raise NotImplementedError
 
     def encode_server(self, avg, err, layout: C.LeafLayout, mode: str, mask,
                       worker_index, model_axes=(), use_pallas=False,
-                      cst=None) -> Tuple[Dict[str, jnp.ndarray], Any]:
+                      cst=None, vspec=None
+                      ) -> Tuple[Dict[str, jnp.ndarray], Any]:
         raise NotImplementedError
 
     def decode(self, payload, layout: C.LeafLayout, dtype=jnp.float32,
-               use_pallas=False) -> jnp.ndarray:
+               use_pallas=False, vspec=None) -> jnp.ndarray:
         raise NotImplementedError
 
     def wire_bytes(self, layout: C.LeafLayout, mode: str) -> Dict[str, int]:
@@ -126,13 +128,14 @@ class Sign1BitCodec(Codec):
     has_pallas = True
 
     def encode_worker(self, z, err, layout, mode, mask, model_axes=(),
-                      inner_index=None, use_pallas=False, cst=None):
+                      inner_index=None, use_pallas=False, cst=None,
+                      vspec=None):
         cst = cst or _ident
         if use_pallas:
             from repro.kernels import dispatch as K
             packed, scales, err_w = K.ef_compress_view(
                 z, err.astype(z.dtype), layout, mode, model_axes,
-                inner_index=inner_index)
+                inner_index=inner_index, vspec=vspec)
         else:
             zw = cst(z + err.astype(z.dtype))
             if inner_index is None:
@@ -148,7 +151,8 @@ class Sign1BitCodec(Codec):
         return {"packed": packed, "scales": bscales}, err_w
 
     def encode_server(self, avg, err, layout, mode, mask, worker_index,
-                      model_axes=(), use_pallas=False, cst=None):
+                      model_axes=(), use_pallas=False, cst=None,
+                      vspec=None):
         cst = cst or _ident
         k_ok = use_pallas and not (mode == "row"
                                    and len(layout.view_shape) == 2)
@@ -156,7 +160,7 @@ class Sign1BitCodec(Codec):
             from repro.kernels import dispatch as K
             packed_s, scales_s, err_s = K.server_compress_view(
                 cst(avg[None]), err.astype(avg.dtype)[None], layout, mode,
-                worker_index, model_axes)
+                worker_index, model_axes, vspec=vspec)
         else:
             y = avg + err.astype(avg.dtype)
             packed_s, scales_s, err_s = _server_compress(
@@ -164,7 +168,8 @@ class Sign1BitCodec(Codec):
         return ({"packed": packed_s, "scales": scales_s.astype(jnp.float32)},
                 cst(err_s)[0])
 
-    def decode(self, payload, layout, dtype=jnp.float32, use_pallas=False):
+    def decode(self, payload, layout, dtype=jnp.float32, use_pallas=False,
+               vspec=None):
         packed, scales = payload["packed"], payload["scales"]
         # row granularity on 2-D (flatten) views degenerates to per-element
         # scales on the server side (trailing dim > 1); the fused kernel
@@ -172,7 +177,8 @@ class Sign1BitCodec(Codec):
         # same split the pre-refactor k_server flag made.
         if use_pallas and scales.shape[-1] == 1:
             from repro.kernels import dispatch as K
-            return K.decompress_view(packed, scales, layout, dtype)
+            return K.decompress_view(packed, scales, layout, dtype,
+                                     vspec=vspec)
         vals = C.unpack_signs(packed, layout.pack_count, dtype)
         return vals * scales.astype(dtype)
 
@@ -259,14 +265,17 @@ class IdentityCodec(Codec):
     needs_ef = False
 
     def encode_worker(self, z, err, layout, mode, mask, model_axes=(),
-                      inner_index=None, use_pallas=False, cst=None):
+                      inner_index=None, use_pallas=False, cst=None,
+                      vspec=None):
         return {"values": z}, None
 
     def encode_server(self, avg, err, layout, mode, mask, worker_index,
-                      model_axes=(), use_pallas=False, cst=None):
+                      model_axes=(), use_pallas=False, cst=None,
+                      vspec=None):
         return {"values": avg[None]}, None
 
-    def decode(self, payload, layout, dtype=jnp.float32, use_pallas=False):
+    def decode(self, payload, layout, dtype=jnp.float32, use_pallas=False,
+               vspec=None):
         # deliberately NOT cast: the exact mean accumulates in the buffer's
         # own dtype (the exchange casts the final result to compute_dtype),
         # matching the pre-refactor quantize=False branch bitwise
@@ -296,11 +305,13 @@ class _DenseEFCodec(Codec):
         raise NotImplementedError
 
     def encode_worker(self, z, err, layout, mode, mask, model_axes=(),
-                      inner_index=None, use_pallas=False, cst=None):
+                      inner_index=None, use_pallas=False, cst=None,
+                      vspec=None):
         return self._encode(z + err.astype(z.dtype), layout, mask)
 
     def encode_server(self, avg, err, layout, mode, mask, worker_index,
-                      model_axes=(), use_pallas=False, cst=None):
+                      model_axes=(), use_pallas=False, cst=None,
+                      vspec=None):
         y = (avg + err.astype(avg.dtype))[None]
         payload, e = self._encode(y, layout, mask)
         return payload, e[0]
@@ -341,7 +352,8 @@ class TopKCodec(_DenseEFCodec):
         err = zf.at[jnp.arange(lead)[:, None], idx].set(0.0).reshape(z.shape)
         return {"idx": idx.astype(jnp.int32), "val": val}, err
 
-    def decode(self, payload, layout, dtype=jnp.float32, use_pallas=False):
+    def decode(self, payload, layout, dtype=jnp.float32, use_pallas=False,
+               vspec=None):
         idx, val = payload["idx"], payload["val"]
         lead, ce = idx.shape[0], _chunk_elems(layout)
         dense = jnp.zeros((lead, ce), dtype).at[
@@ -411,7 +423,8 @@ class QIntCodec(_DenseEFCodec):
             payload = {"q": pair[..., 0] * 16 + pair[..., 1], "scale": s}
         return payload, err
 
-    def decode(self, payload, layout, dtype=jnp.float32, use_pallas=False):
+    def decode(self, payload, layout, dtype=jnp.float32, use_pallas=False,
+               vspec=None):
         q, s = payload["q"], payload["scale"]
         lead = q.shape[0]
         if self.bits == 4:

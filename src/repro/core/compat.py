@@ -57,3 +57,14 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]):
             tuple(shape), tuple(axes),
             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
     return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def abstract_mesh(axes: Sequence[str], sizes: Sequence[int]):
+    """Device-free mesh for ``shard_map`` traces (``jax.make_jaxpr`` only —
+    an abstract mesh never reaches the compiler). Public on jax >= 0.5,
+    private on 0.4.x."""
+    try:
+        from jax.sharding import AbstractMesh  # jax >= 0.5
+    except ImportError:
+        from jax._src.mesh import AbstractMesh
+    return AbstractMesh(tuple(zip(tuple(axes), tuple(sizes))))

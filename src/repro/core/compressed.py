@@ -475,11 +475,12 @@ class ComposedOptimizer:
             s32 = self._slots32(state.slots, i)
             m32 = s32["m"]
             u = state.u[i]
-            if dp and cfg.use_pallas and K.kernel_safe(vs):
+            if dp and cfg.use_pallas and K.kernel_safe(
+                    vs, lo, self.ar_cfg.model_axes):
                 mh, u_new, delta = K.fused_local_step_view(
                     g, m32, u.astype(jnp.float32), s32.get("v"), lr,
                     base.beta1, getattr(base, "eps", 0.0), lo,
-                    kind=base.kind)
+                    kind=base.kind, vspec=vs)
                 if base.has_trust:
                     delta = s32["trust"] * delta
                 delta_nat = C.from_view(delta, lo)

@@ -92,11 +92,12 @@ class OneBitConfig:
         object.__setattr__(self, "codec", CODECS.make_codec(codec))
 
 
-def _use_kernels(cfg: OneBitConfig, vspec) -> bool:
+def _use_kernels(cfg: OneBitConfig, vspec, layout=None) -> bool:
     if not cfg.use_pallas:
         return False
     from repro.kernels import dispatch as K
-    return K.kernel_codec(cfg.codec) and K.kernel_safe(vspec)
+    return K.kernel_codec(cfg.codec) and K.kernel_safe(vspec, layout,
+                                                       cfg.model_axes)
 
 
 def _flat_worker_encode(z_view, ef: EFState, layout, cfg, vspec):
@@ -109,15 +110,18 @@ def _flat_worker_encode(z_view, ef: EFState, layout, cfg, vspec):
     cst = lambda x: C.constrain(x, vspec)
     mask = (C.pad_mask(layout, dtype=z_view.dtype)
             if codec.needs_ef else None)
-    # Kernel dispatch: only codecs with fused kernels (sign1bit), and
-    # GSPMD-auto-sharded views stay on the constrained jnp path
-    # (dispatch.kernel_safe). The sign1bit server side of row-granularity
+    # Kernel dispatch: only codecs with fused kernels (sign1bit).
+    # Model-sharded views run the kernels per shard under the manual
+    # shard_map partitioning rule (dispatch.shard_context) when one
+    # applies; otherwise dispatch.kernel_safe keeps them on the
+    # constrained jnp path. The sign1bit server side of row-granularity
     # on 2-D (flatten) views also stays on jnp — it degenerates to
     # per-element scales (handled inside the codec).
-    use_k = _use_kernels(cfg, vspec)
+    use_k = _use_kernels(cfg, vspec, layout)
     payload, err_w = codec.encode_worker(
         cst(z_view), ef.err_worker if codec.needs_ef else None, layout,
-        cfg.scale_mode, mask, cfg.model_axes, use_pallas=use_k, cst=cst)
+        cfg.scale_mode, mask, cfg.model_axes, use_pallas=use_k, cst=cst,
+        vspec=vspec)
     return payload, err_w, mask, use_k
 
 
@@ -127,13 +131,14 @@ def _flat_server_encode(recv, ef: EFState, layout, cfg, vspec, mask, use_k,
     the chunk this worker serves. Returns ``(payload_s, err_s)``."""
     codec = cfg.codec
     cst = lambda x: C.constrain(x, vspec)
-    vals = codec.decode(recv, layout, cfg.compute_dtype, use_pallas=use_k)
+    vals = codec.decode(recv, layout, cfg.compute_dtype, use_pallas=use_k,
+                        vspec=vspec)
     avg = cst(vals).mean(axis=0)                              # (A/n, *rest)
     s_mask = None if mask is None else mask[widx][None]
     return codec.encode_server(
         avg, ef.err_server if codec.needs_ef else None, layout,
         cfg.scale_mode, s_mask, widx, cfg.model_axes, use_pallas=use_k,
-        cst=cst)
+        cst=cst, vspec=vspec)
 
 
 def _map_a2a(comm, payload, vspec):
@@ -193,7 +198,7 @@ def onebit_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
     # --- gather: broadcast compressed chunk results -------------------------
     gathered = _map_gather(comm, payload_s, vspec)
     out = cst(codec.decode(gathered, layout, cfg.compute_dtype,
-                           use_pallas=use_k))
+                           use_pallas=use_k, vspec=vspec))
     if codec.needs_ef:
         ef = EFState(err_worker=cst(err_w).astype(ef.err_worker.dtype),
                      err_server=err_s.astype(ef.err_server.dtype))
@@ -231,11 +236,11 @@ def _hier_worker_encode(own, ef: EFState, layout, cfg, vspec, j):
             mask_full.reshape((ni, no) + mask_full.shape[1:]), j, axis=0)
     else:
         m_slice = None
-    use_k = _use_kernels(cfg, vspec)
+    use_k = _use_kernels(cfg, vspec, layout)
     payload, err_w = codec.encode_worker(
         own, ef.err_worker if codec.needs_ef else None, layout,
         cfg.scale_mode, m_slice, cfg.model_axes, inner_index=j,
-        use_pallas=use_k, cst=cst)
+        use_pallas=use_k, cst=cst, vspec=vspec)
     return payload, err_w, mask_full, use_k
 
 
@@ -245,13 +250,14 @@ def _hier_server_encode(recv, ef: EFState, layout, cfg, vspec, mask_full,
     ``widx = j * n_outer + k``. Returns ``(payload_s, err_s)``."""
     codec = cfg.codec
     cst = lambda x: C.constrain(x, vspec)
-    vals = codec.decode(recv, layout, cfg.compute_dtype, use_pallas=use_k)
+    vals = codec.decode(recv, layout, cfg.compute_dtype, use_pallas=use_k,
+                        vspec=vspec)
     avg = cst(vals).mean(axis=0)                           # (A/n, *rest)
     s_mask = None if mask_full is None else mask_full[widx][None]
     return codec.encode_server(
         avg, ef.err_server if codec.needs_ef else None, layout,
         cfg.scale_mode, s_mask, widx, cfg.model_axes, use_pallas=use_k,
-        cst=cst)
+        cst=cst, vspec=vspec)
 
 
 def _hier_gather_out(inner, out_slice, layout, cfg, vspec):
@@ -310,7 +316,7 @@ def _hier_allreduce_view(comm: Comm, z_view: jnp.ndarray, ef: EFState,
     # --- 2d: inter-pod gather of the compressed chunk results ---------------
     gathered = _map_gather(outer, payload_s, vspec)
     out_slice = cst(codec.decode(gathered, layout, cfg.compute_dtype,
-                                 use_pallas=use_k))
+                                 use_pallas=use_k, vspec=vspec))
     if codec.needs_ef:
         new_ef = EFState(err_worker=cst(err_w).astype(ef.err_worker.dtype),
                          err_server=err_s.astype(ef.err_server.dtype))

@@ -18,7 +18,11 @@ keeping the fused/unfused bit-parity contract: both paths compute
 ``trust * ((γ·m')/sqrt(v+ε))``.
 
 Operands are 2-D tiles of the comm view; scalars (γ, β₁) arrive as (1, 1)
-operands so one compiled kernel serves every step.
+operands so one compiled kernel serves every step. The chain is purely
+elementwise, so model-sharded views need no cross-shard traffic at all:
+``dispatch.fused_local_step_view`` runs this kernel per shard under its
+``shard_map`` partitioning rule with the shard-local frame, and the
+results compose to the global update by construction.
 """
 from __future__ import annotations
 

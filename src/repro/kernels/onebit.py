@@ -29,6 +29,16 @@ per-row L1 sums, the (R,)-sized combine runs as plain XLA, and
 ``ef_compress`` covers the per-row granularity. ``kernels/dispatch.py``
 picks the pass structure per leaf.
 
+Sharding: these kernels are deliberately shard-oblivious — they see one
+device's (rows, cols) frame and nothing else. Model-sharded views reach
+them through ``dispatch._shard_wrap`` (a manual ``shard_map`` over the
+view's mesh axes, the partitioning rule): the frame they receive is then
+the shard-LOCAL 2-D fold, and the cross-shard parts of a scale —
+the model-axis psum and the global denominator (``layout.rest_factor``) —
+happen in the plain-XLA combine between the two passes, never inside a
+kernel. That keeps every kernel a pure local map, so one implementation
+serves unsharded, manual-TP, and GSPMD-sharded views bit-identically.
+
 TPU is the TARGET; correctness is validated on CPU with interpret=True
 against ref.py (tests/test_kernels.py + tests/test_pallas_parity.py).
 """

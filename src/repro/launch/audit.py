@@ -69,9 +69,12 @@ def audit_one(arch: str, *, optimizer="zero_one_adam", codec="sign1bit",
               codec_arg=None, scale_mode="tensor", bucket_mb=None,
               hierarchy_inner: int = 0, workers: int = 4,
               micro_batches: int = 1, pack_order: str = "flat",
-              smoke: bool = True):
+              tp: int = 0, smoke: bool = True):
     """Run the IR audit + frame pre-check on one config; returns a JSON-able
-    record."""
+    record. ``tp > 1`` audits the meshless tensor-parallel regime
+    (``TrainerConfig.model_shards``): TP-local layouts, sharded fused
+    buckets, and the model-axis psums of the exchange — all traced under
+    the abstract mesh, no devices needed."""
     spec = get(arch)
     cfg = spec.smoke if smoke else spec.config
     ocfg = build_opt_cfg(optimizer, scale_mode,
@@ -79,7 +82,8 @@ def audit_one(arch: str, *, optimizer="zero_one_adam", codec="sign1bit",
                          codec_arg=codec_arg, bucket_mb=bucket_mb,
                          pack_order=pack_order)
     tr = Trainer(cfg, ocfg, n_workers=workers,
-                 trainer_cfg=TrainerConfig(micro_batches=micro_batches))
+                 trainer_cfg=TrainerConfig(micro_batches=micro_batches,
+                                           model_shards=tp))
     rep = audit_trainer(tr)
     rec = rep.to_dict()
     rec["config"] = {
@@ -87,7 +91,7 @@ def audit_one(arch: str, *, optimizer="zero_one_adam", codec="sign1bit",
         "codec_arg": codec_arg, "scale_mode": scale_mode,
         "bucket_mb": bucket_mb, "hierarchy_inner": hierarchy_inner,
         "workers": workers, "micro_batches": micro_batches,
-        "pack_order": pack_order,
+        "pack_order": pack_order, "tp": tp,
     }
     frames = []
     for lo, _, label in tr.opt.exchange_units():
@@ -117,6 +121,12 @@ def _matrix(workers: int):
     yield dict(codec="sign1bit", hierarchy_inner=2, bucket_mb=4.0,
                micro_batches=2, pack_order="reverse_backward",
                workers=workers)
+    # sharded fused buckets: the meshless-TP regime packs same-vspec
+    # TP-local shards into multi-member buckets whose scales psum over
+    # 'model' — flat and hierarchical
+    yield dict(codec="sign1bit", bucket_mb=4.0, tp=2, workers=workers)
+    yield dict(codec="sign1bit", hierarchy_inner=2, bucket_mb=4.0, tp=2,
+               workers=workers)
 
 
 def main(argv=None) -> int:
@@ -144,6 +154,10 @@ def main(argv=None) -> int:
                     choices=["flat", "reverse_backward"],
                     help="exchange-unit packing/issue order "
                          "(reverse_backward ≈ backward readiness order)")
+    ap.add_argument("--tp", type=int, default=0, metavar="SHARDS",
+                    help="audit the meshless tensor-parallel regime with "
+                         "SHARDS model shards (TrainerConfig.model_shards; "
+                         "0 = off)")
     ap.add_argument("--full", action="store_true",
                     help="audit the full-size config (default: smoke)")
     ap.add_argument("--matrix", action="store_true",
@@ -164,7 +178,7 @@ def main(argv=None) -> int:
                          hierarchy_inner=args.hierarchy,
                          micro_batches=args.micro_batches,
                          pack_order=args.pack_order,
-                         workers=args.workers)])
+                         tp=args.tp, workers=args.workers)])
     failed = 0
     for kw in combos:
         rec = audit_one(args.arch, smoke=not args.full, **kw)
@@ -173,7 +187,8 @@ def main(argv=None) -> int:
                  f"hier={c['hierarchy_inner']} bucket={c['bucket_mb']} "
                  f"mb={c['micro_batches']}"
                  + (f" pack={c['pack_order']}"
-                    if c['pack_order'] != "flat" else ""))
+                    if c['pack_order'] != "flat" else "")
+                 + (f" tp={c['tp']}" if c.get("tp") else ""))
         if rec["ok"]:
             print(f"audit OK   {label} "
                   f"({rec['summary']['collectives_traced']} collectives, "

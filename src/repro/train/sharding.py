@@ -90,10 +90,12 @@ class TreeSpecs:
     # ---- optimizer state (generic over state_kinds) ----------------------
     def _leaf_model_entries(self, kind):
         if kind.bucketed:
-            # bucket-shaped state: ``leaf`` indexes the bucket plan; fused
-            # buckets are never model-sharded (their spec is None), while
-            # singleton buckets carry their leaf's spec through the same
-            # view/chunk entry derivation as per-leaf state
+            # bucket-shaped state: ``leaf`` indexes the bucket plan. A
+            # bucket's spec is authoritative for its state sharding:
+            # unsharded fused buckets carry None, sharded fused buckets
+            # carry the canonical P(ax) of their TP-local members, and
+            # singleton buckets keep their leaf's own spec — all three
+            # derive view/chunk entries exactly like per-leaf state
             b = self.opt.bucket_plan.buckets[kind.leaf]
             spec = tuple(b.spec) if b.spec else None
             if kind.tag == "bucket_view":

@@ -50,12 +50,25 @@ class TrainerConfig:
     # the sequential all-scanned path (used to regenerate goldens and by
     # the overlapped-vs-sequential parity tests).
     peel_last_microbatch: bool = True
+    # Meshless tensor parallelism: model_shards > 1 binds a manual 'model'
+    # axis of that size with no mesh attached, so the optimizer plans
+    # TP-LOCAL force-flatten layouts (rest_factor = model_shards, sharded
+    # fused buckets) exactly as the fully-manual mesh path would. Only the
+    # abstract paths run in this regime — ``analysis.ir_audit`` traces the
+    # per-worker step under an abstract mesh that binds 'model' — the
+    # executable sim/single step functions refuse it (a vmap sim has no
+    # 'model' axis for the exchange's psums to resolve against).
+    model_shards: int = 0
 
     def __post_init__(self):
         if self.micro_batches < 1:
             raise ValueError(
                 f"micro_batches must be >= 1, got "
                 f"{self.micro_batches!r}")
+        if self.model_shards < 0 or self.model_shards == 1:
+            raise ValueError(
+                f"model_shards must be 0 (off) or >= 2, got "
+                f"{self.model_shards!r}")
 
 
 def accumulate_grads(loss_fn, params, batch, micro_batches, *, peel=True):
@@ -171,6 +184,15 @@ class Trainer:
                 and hasattr(jax, "shard_map")):
             self.model_axes = ("model",)
             self.model_sizes = {"model": mesh.shape["model"]}
+        elif mesh is None and trainer_cfg.model_shards > 1:
+            # meshless sim-TP (TrainerConfig.model_shards): same manual
+            # 'model' planning domain as the fully-manual mesh path —
+            # TP-local layouts, sharded fused buckets, model-axis psums —
+            # resolved against the abstract mesh the auditor binds. Works
+            # on any jax version because the abstract trace never reaches
+            # the XLA partitioner.
+            self.model_axes = ("model",)
+            self.model_sizes = {"model": trainer_cfg.model_shards}
         else:
             self.model_axes, self.model_sizes = (), {}
         # per-worker local shapes: EP leaves divide their expert axis
@@ -213,6 +235,20 @@ class Trainer:
     def _residual_axes(self):
         names = getattr(self, "_worker_axis_names", self.tc.worker_axes)
         return tuple(a for a in names if a not in self.ep_axes)
+
+    def _abstract_tp_mesh(self):
+        """Worker axes + model axes as an abstract mesh — the meshless-TP
+        stand-in for ``self.mesh`` in the nested optimizer shard_map."""
+        if self.hierarchy is not None:
+            axes = list(self.hierarchy.axes)
+            sizes = [self.n_workers // self.hierarchy.inner,
+                     self.hierarchy.inner]
+        else:
+            axes, sizes = ["workers"], [self.n_workers]
+        for a, s in self.model_sizes.items():
+            axes.append(a)
+            sizes.append(s)
+        return compat.abstract_mesh(axes, sizes)
 
     def _local_abstract(self):
         n = self.ep_degree
@@ -311,10 +347,15 @@ class Trainer:
             pm = jax.tree.unflatten(self.treedef,
                                     self.tree_specs.params_model())
             sm = self.tree_specs.state_model_specs()
+            # meshless sim-TP substitutes the abstract mesh ir_audit traces
+            # under — shapes and collectives are identical to the physical
+            # nesting, and the trace never reaches the compiler
             opt_apply = compat.shard_map(
                 opt_apply, in_specs=(pm, pm, sm, P()),
                 out_specs=(pm, sm, P()),
-                axis_names=set(self.model_axes), mesh=self.mesh)
+                axis_names=set(self.model_axes),
+                mesh=(self.mesh if self.mesh is not None
+                      else self._abstract_tp_mesh()))
 
         new_p, new_opt, met = opt_apply(p, grads, opt_state, widx)
         met["loss"] = comm.pmean(loss)
@@ -575,10 +616,24 @@ class Trainer:
 
         return jax.tree.map(glob, state_local, kinds, model_specs)
 
+    def _no_meshless_tp(self, mode: str) -> None:
+        """The executable sim/single paths cannot honor meshless TP: their
+        vmap/NullComm traces bind no 'model' axis, so the exchange's
+        model-axis psums (and the TP-local state shapes) have nothing to
+        resolve against. Only the abstract paths (ir_audit) run there."""
+        if self.model_sizes and self.mesh is None:
+            raise ValueError(
+                f"TrainerConfig.model_shards="
+                f"{self.model_sizes.get('model')} is abstract-trace-only "
+                f"(analysis.ir_audit); the executable {mode} path has no "
+                f"'model' axis to bind — use a mesh with a 'model' axis "
+                f"instead")
+
     # ------------------------------------------------------------------ #
     # single-worker mode (CPU smoke)
     # ------------------------------------------------------------------ #
     def single_init(self, key):
+        self._no_meshless_tp("single")
         params = init_params(self.template, key,
                              dtype=self.model_cfg.param_dtype)
         pl = self.treedef.flatten_up_to(params)
@@ -588,6 +643,7 @@ class Trainer:
         return params, state
 
     def single_step_fn(self):
+        self._no_meshless_tp("single")
         comm = NullComm()
 
         @jax.jit
@@ -600,6 +656,7 @@ class Trainer:
     # sim mode (n workers on one device via vmap)
     # ------------------------------------------------------------------ #
     def sim_init(self, key):
+        self._no_meshless_tp("sim")
         n = self.n_workers
         params = init_params(self.template, key,
                              dtype=self.model_cfg.param_dtype)
@@ -643,6 +700,7 @@ class Trainer:
         return one
 
     def sim_step_fn(self):
+        self._no_meshless_tp("sim")
         n = self.n_workers
         h = self.hierarchy
         if h is None:

@@ -43,7 +43,10 @@ SCRIPT = textwrap.dedent("""
             hierarchy=h, use_pallas=pallas, bucket_mb=bucket_mb,
             comm_dtype=jnp.float32)   # exact wire: parity at 1e-6
 
-    cfg = get("gpt2").smoke
+    import sys
+    arch = sys.argv[3] if len(sys.argv) > 3 else "gpt2"
+    mb_arg = float(sys.argv[4]) if len(sys.argv) > 4 else 0.25
+    cfg = get(arch).smoke
     data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=16,
                                   global_batch=8, seed=3))
     mesh = make_debug_mesh(pod=2, data=2, model=2)
@@ -58,7 +61,6 @@ SCRIPT = textwrap.dedent("""
                                             - y.astype(np.float64)).max()))
         return out
 
-    import sys
     parts = sys.argv[1].split("-")
     topology, kernels = parts[0], parts[1]
     bucketed = "bucketed" in parts[2:]
@@ -68,7 +70,7 @@ SCRIPT = textwrap.dedent("""
                kernels == "pallas")]
     for tag, h, pallas in COMBOS:
         oc = opt_cfg(h, pallas, opt_name,
-                     bucket_mb=0.25 if bucketed else None)
+                     bucket_mb=mb_arg if bucketed else None)
         tr_sim = Trainer(cfg, oc, n_workers=4)
         p, s = tr_sim.sim_init(jax.random.PRNGKey(0))
         tr_mesh = Trainer(cfg, oc, mesh=mesh,
@@ -112,8 +114,9 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
-def _run_combo(combo, opt_name):
-    r = subprocess.run([sys.executable, "-c", SCRIPT, combo, opt_name],
+def _run_combo(combo, opt_name, arch="gpt2", bucket_mb=0.25):
+    r = subprocess.run([sys.executable, "-c", SCRIPT, combo, opt_name,
+                        arch, str(bucket_mb)],
                        capture_output=True, text=True, timeout=1200,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
                             "HOME": "/root"})
@@ -147,3 +150,14 @@ def test_mesh_matches_sim_bucketed_hier_pallas():
     mesh regime — this is the combination that exercises every new layer
     of the bucketing path at once."""
     _run_combo("hier-pallas-bucketed", "zero_one_adam")
+
+
+@pytest.mark.slow
+def test_mesh_matches_sim_deepseek_pallas_bucketed():
+    """deepseek-smoke (MoE + MLA, a first-class fused workload): the
+    Pallas-dispatched bucketed exchange (--use-pallas --bucket-mb 4) must
+    lower identically under the model-sharded debug mesh and the sim
+    regime — the TP leaves' views and the fused buckets take the exact
+    same kernel-vs-jnp dispatch decisions in both."""
+    _run_combo("flat-pallas-bucketed", "zero_one_adam",
+               arch="deepseek-v2-236b", bucket_mb=4.0)
